@@ -1,0 +1,114 @@
+"""Shared benchmark infrastructure: trained-model cache + row collection.
+
+Each benchmark module exposes ``run(budget) -> list[Row]``; run.py collects
+all rows into the ``name,us_per_call,derived`` CSV. Models are trained once
+and cached in results/cache/ so repeated benchmark runs are fast.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CACHE = os.path.join(ROOT, "results", "cache")
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, repeats: int = 3) -> float:
+    """Median wall-clock seconds (post-compile)."""
+    fn(*args)  # compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+# ------------------------------------------------- trained-model caching
+def get_gmm_model(steps: int = 1500):
+    """Train (or load) the 2D-GMM MLP eps-model. Returns (schedule, eps_fn,
+    data)."""
+    import sys
+    sys.path.insert(0, os.path.join(ROOT, "examples"))
+    from quickstart import init_mlp, mlp_eps
+    from repro.core import make_schedule, training_loss
+    from repro.data import GaussianMixture2D
+    from repro.training import (AdamWConfig, init_train_state,
+                                make_diffusion_train_step, warmup_cosine,
+                                checkpoint)
+    T = 1000
+    schedule = make_schedule("linear", T=T)
+    data = GaussianMixture2D(seed=0)
+    params = init_mlp(jax.random.PRNGKey(0))
+    path = os.path.join(CACHE, f"gmm_mlp_{steps}.npz")
+    if os.path.exists(path):
+        restored, _ = checkpoint.restore(path, {"params": params})
+        params = restored["params"]
+    else:
+        def loss_fn(p, batch, rng):
+            return training_loss(schedule,
+                                 lambda x, t: mlp_eps(p, x, t, T),
+                                 batch, rng), {}
+        opt = AdamWConfig(lr=2e-3, schedule=warmup_cosine(100, steps))
+        step_fn = jax.jit(make_diffusion_train_step(loss_fn, opt))
+        state = init_train_state(params, jax.random.PRNGKey(1), opt)
+        gen = data.batches(512)
+        for _ in range(steps):
+            state, _ = step_fn(state, next(gen))
+        params = state.params
+        os.makedirs(CACHE, exist_ok=True)
+        checkpoint.save(path, {"params": params})
+    eps_fn = lambda x, t: mlp_eps(params, x, t, T)
+    return schedule, eps_fn, data
+
+
+def get_unet_model(steps: int = 800, size: int = 16):
+    """Train (or load) the toy U-Net. Returns (schedule, eps_fn, data)."""
+    from repro import configs
+    from repro.core import make_schedule, training_loss
+    from repro.data import SyntheticImages
+    from repro.models import unet
+    from repro.training import (AdamWConfig, init_train_state,
+                                make_diffusion_train_step, warmup_cosine,
+                                checkpoint)
+    T = 1000
+    schedule = make_schedule("linear", T=T)
+    ucfg = configs.TOY_UNET
+    data = SyntheticImages(size=size, seed=0)
+    params = unet.init_params(jax.random.PRNGKey(0), ucfg)
+    path = os.path.join(CACHE, f"unet_{steps}_{size}.npz")
+    if os.path.exists(path):
+        restored, _ = checkpoint.restore(path, {"params": params})
+        params = restored["params"]
+    else:
+        def loss_fn(p, batch, rng):
+            return training_loss(schedule,
+                                 lambda x, t: unet.forward(p, ucfg, x, t),
+                                 batch, rng), {}
+        opt = AdamWConfig(lr=4e-4, schedule=warmup_cosine(50, steps))
+        step_fn = jax.jit(make_diffusion_train_step(loss_fn, opt))
+        state = init_train_state(params, jax.random.PRNGKey(1), opt)
+        gen = data.batches(32)
+        for _ in range(steps):
+            state, _ = step_fn(state, next(gen))
+        params = state.params
+        os.makedirs(CACHE, exist_ok=True)
+        checkpoint.save(path, {"params": params})
+    eps_fn = lambda x, t: unet.forward(params, ucfg, x, t)
+    return schedule, eps_fn, data

@@ -1,0 +1,40 @@
+"""Paper Fig. 4: sampling wall-clock is LINEAR in the trajectory length S.
+
+The S-step sampler is one lax.scan, so cost(S) ~ S * cost(eps-net) + O(1).
+We time the U-Net sampler at several S and fit a line; derived reports the
+R^2 of the linear fit and the per-step cost. (The paper's 2080 Ti hours
+become CPU seconds here — the linearity claim is hardware-independent.)
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core import SamplerConfig, sample
+
+from ._common import Row, get_unet_model, timed
+
+
+def run(budget: str = "full") -> List[Row]:
+    schedule, eps_fn, _ = get_unet_model()
+    xT = jax.random.normal(jax.random.PRNGKey(7), (16, 16, 16, 3))
+    S_list = [5, 10, 20, 40, 80] if budget == "full" else [5, 20, 40]
+    times = []
+    rows: List[Row] = []
+    for S in S_list:
+        cfg = SamplerConfig(S=S, eta=0.0)
+        fn = jax.jit(lambda x: sample(schedule, eps_fn, x, cfg))
+        dt = timed(fn, xT)
+        times.append(dt)
+        rows.append(Row(f"fig4/sample_S{S}", dt * 1e6 / xT.shape[0],
+                        f"wall_s={dt:.3f}"))
+    a, b = np.polyfit(S_list, times, 1)
+    pred = np.polyval([a, b], S_list)
+    ss_res = float(np.sum((np.array(times) - pred) ** 2))
+    ss_tot = float(np.sum((np.array(times) - np.mean(times)) ** 2))
+    r2 = 1 - ss_res / max(ss_tot, 1e-12)
+    rows.append(Row("fig4/linear_fit", a * 1e6,
+                    f"r2={r2:.4f};per_step_s={a:.4f};overhead_s={b:.4f}"))
+    return rows

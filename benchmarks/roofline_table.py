@@ -1,0 +1,44 @@
+"""§Roofline table: render results/dryrun.jsonl as benchmark rows.
+
+Each (arch x shape x mesh) row reports the three roofline terms, the
+dominant bottleneck, and the useful-compute ratio MODEL_FLOPS/HLO_FLOPS.
+Run the dry-run sweep first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from ._common import ROOT, Row
+
+JSONL = os.path.join(ROOT, "results", "dryrun.jsonl")
+
+
+def run(budget: str = "full") -> List[Row]:
+    rows: List[Row] = []
+    if not os.path.exists(JSONL):
+        return [Row("roofline/missing", 0.0,
+                    "run repro.launch.dryrun --all first")]
+    n_ok = n_fail = 0
+    for line in open(JSONL):
+        r = json.loads(line)
+        if "error" in r:
+            n_fail += 1
+            rows.append(Row(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                            0.0, f"ERROR={r['error'][:60]}"))
+            continue
+        n_ok += 1
+        t = r["roofline"]
+        rows.append(Row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6,
+            f"bottleneck={t['bottleneck']};compute_s={t['compute_s']:.3e};"
+            f"memory_s={t['memory_s']:.3e};"
+            f"collective_s={t['collective_s']:.3e};"
+            f"useful={t['useful_ratio'] if t['useful_ratio'] else 0:.3f};"
+            f"windowed={r['windowed']}"))
+    rows.append(Row("roofline/summary", 0.0, f"ok={n_ok};fail={n_fail}"))
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+
+  PYTHONPATH=src python -m benchmarks.run            # full
+  PYTHONPATH=src python -m benchmarks.run --budget quick
+
+Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.table1_quality",
+    "benchmarks.table2_reconstruction",
+    "benchmarks.fig4_timing",
+    "benchmarks.fig5_consistency",
+    "benchmarks.fig6_interpolation",
+    "benchmarks.beyond_paper",
+    "benchmarks.roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", choices=["quick", "full"], default="full")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on module names")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            rows = mod.run(args.budget)
+            for row in rows:
+                print(row.csv(), flush=True)
+            print(f"# {modname} done in {time.time()-t0:.1f}s",
+                  file=sys.stderr, flush=True)
+        except Exception:
+            failed.append(modname)
+            print(f"# {modname} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

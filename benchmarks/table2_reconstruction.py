@@ -1,0 +1,56 @@
+"""Paper Table 2: encode -> decode reconstruction error vs S.
+
+DDIM's ODE view (Eq. 14) lets x0 be encoded to x_T and reconstructed; the
+paper reports per-dimension MSE falling monotonically with S on CIFAR10.
+We verify the same on both trained toy models, and confirm DDPM CANNOT do
+this (stochastic decode of the same latent has high error).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import SamplerConfig, decode, encode, sample
+
+from ._common import Row, get_gmm_model, get_unet_model
+
+
+def run(budget: str = "full") -> List[Row]:
+    rows: List[Row] = []
+    S_list = [10, 20, 50, 100, 200, 500, 1000] if budget == "full" else \
+        [10, 100, 500]
+
+    schedule, eps_fn, data = get_gmm_model()
+    test = data.sample(jax.random.PRNGKey(123), 512)
+    for S in S_list:
+        t0 = time.perf_counter()
+        z = encode(schedule, eps_fn, test, S=S)
+        rec = decode(schedule, eps_fn, z, S=S)
+        jax.block_until_ready(rec)
+        dt = time.perf_counter() - t0
+        err = float(jnp.mean((rec - test) ** 2))
+        rows.append(Row(f"table2/gmm/S{S}", dt * 1e6 / test.shape[0],
+                        f"mse={err:.6f}"))
+
+    # DDPM control: decoding the DDIM latent stochastically loses x0
+    z = encode(schedule, eps_fn, test, S=200)
+    rec = sample(schedule, eps_fn, z, SamplerConfig(S=200, eta=1.0),
+                 rng=jax.random.PRNGKey(5))
+    err = float(jnp.mean((rec - test) ** 2))
+    rows.append(Row("table2/gmm/ddpm_control_S200", 0.0, f"mse={err:.4f}"))
+
+    schedule, eps_fn, data = get_unet_model()
+    test = data.sample(jax.random.PRNGKey(123), 32)
+    for S in ([10, 50, 200] if budget == "full" else [10, 100]):
+        t0 = time.perf_counter()
+        z = encode(schedule, eps_fn, test, S=S)
+        rec = decode(schedule, eps_fn, z, S=S)
+        jax.block_until_ready(rec)
+        dt = time.perf_counter() - t0
+        err = float(jnp.mean((rec - test) ** 2))
+        rows.append(Row(f"table2/images/S{S}", dt * 1e6 / test.shape[0],
+                        f"mse={err:.6f}"))
+    return rows

@@ -1,0 +1,97 @@
+"""Appendix-A demo: non-Markovian MULTINOMIAL forward process for discrete
+data — the paper defines it (Eq. 17-21) and leaves experiments as future
+work; this example runs the full loop on a toy categorical distribution.
+
+A small MLP f_theta(x_t, t) predicts x0 probabilities; training minimizes
+the exact categorical posterior KL (tractable — Eq. 21). Sampling uses the
+generalized reverse chain with eta scaling sigma* between fully stochastic
+(eta=0) and the deterministic keep-or-jump limit (eta=1), on accelerated
+sub-sequences tau.
+
+  PYTHONPATH=src python examples/discrete_ddim.py
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import discrete, make_schedule
+from repro.models.common import KeyGen, dense_init, sinusoidal_time_embedding
+from repro.training import (AdamWConfig, init_train_state,
+                            make_diffusion_train_step, warmup_cosine)
+
+K = 16  # categories
+
+
+def target_probs():
+    """A bimodal categorical target."""
+    p = np.exp(-0.5 * ((np.arange(K) - 3.0) / 1.2) ** 2)
+    p += 1.5 * np.exp(-0.5 * ((np.arange(K) - 11.0) / 1.0) ** 2)
+    return jnp.asarray(p / p.sum())
+
+
+def init_model(rng, width=128, time_dim=32):
+    kg = KeyGen(rng)
+    return {"w1": dense_init(kg(), (K + time_dim, width), jnp.float32),
+            "w2": dense_init(kg(), (width, width), jnp.float32),
+            "w3": dense_init(kg(), (width, K), jnp.float32, scale=1e-2)}
+
+
+def x0_fn(params, x_t, t, T):
+    temb = sinusoidal_time_embedding(t.astype(jnp.float32) * (1000.0 / T), 32)
+    h = jnp.concatenate([x_t, temb], axis=-1)
+    h = jax.nn.silu(h @ params["w1"])
+    h = jax.nn.silu(h @ params["w2"])
+    return jax.nn.softmax(h @ params["w3"], axis=-1)
+
+
+def main(args):
+    T = args.T
+    schedule = make_schedule("linear", T=T)
+    probs = target_probs()
+
+    def sample_data(rng, n):
+        idx = jax.random.categorical(rng, jnp.log(probs)[None].repeat(n, 0))
+        return jax.nn.one_hot(idx, K)
+
+    def loss_fn(p, batch, rng):
+        k1, k2 = jax.random.split(rng)
+        t = jax.random.randint(k1, (batch.shape[0],), 1, T + 1)
+        loss = discrete.kl_loss(schedule, lambda x, tt: x0_fn(p, x, tt, T),
+                                batch, t, k2)
+        return loss, {}
+
+    opt = AdamWConfig(lr=2e-3, schedule=warmup_cosine(100, args.steps))
+    step_fn = jax.jit(make_diffusion_train_step(loss_fn, opt))
+    state = init_train_state(init_model(jax.random.PRNGKey(0)),
+                             jax.random.PRNGKey(1), opt)
+    for step in range(1, args.steps + 1):
+        batch = sample_data(jax.random.PRNGKey(1000 + step), 256)
+        state, m = step_fn(state, batch)
+        if step % 200 == 0 or step == 1:
+            print(f"step {step:4d} KL={float(m['loss']):.4f}", flush=True)
+
+    xT = jax.nn.one_hot(
+        jax.random.randint(jax.random.PRNGKey(5), (args.n,), 0, K), K)
+    print(f"\n{'S':>5s} {'eta':>5s} {'TV-distance':>12s}")
+    for S in args.S_list:
+        for eta in (0.0, 0.5, 1.0):
+            out = discrete.reverse_sample(
+                schedule, lambda x, t: x0_fn(state.params, x, t, T), xT,
+                jax.random.PRNGKey(7), S=S, eta=eta)
+            emp = np.bincount(np.asarray(out.argmax(-1)), minlength=K)
+            emp = emp / emp.sum()
+            tv = 0.5 * float(np.abs(emp - np.asarray(probs)).sum())
+            print(f"{S:5d} {eta:5.1f} {tv:12.4f}", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--T", type=int, default=100)
+    ap.add_argument("--n", type=int, default=8192)
+    ap.add_argument("--S-list", type=int, nargs="+", default=[10, 25, 100])
+    main(ap.parse_args())

@@ -1,0 +1,81 @@
+"""Interpolation in latent space (paper §5.3, Fig. 6).
+
+DDIM's deterministic generative process makes x_T a semantic latent code:
+slerp between two latents produces a smooth path in sample space. DDPM's
+stochastic process destroys this (same latents -> diverse outputs).
+
+We train the 2D-GMM eps-model (fast), slerp between latents that decode to
+two different modes, and report (a) path smoothness (mean consecutive-sample
+distance / max) and (b) DDIM determinism vs DDPM dispersion at fixed x_T.
+
+  PYTHONPATH=src python examples/interpolation.py
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (SamplerConfig, ddim_sample, make_schedule, sample,
+                        slerp, training_loss)
+from repro.data import GaussianMixture2D
+from repro.training import (AdamWConfig, init_train_state,
+                            make_diffusion_train_step, warmup_cosine)
+from quickstart import init_mlp, mlp_eps  # same toy model
+
+
+def main(args):
+    T = 1000
+    schedule = make_schedule("linear", T=T)
+    data = GaussianMixture2D(seed=0)
+
+    def loss_fn(p, batch, rng):
+        return training_loss(schedule, lambda x, t: mlp_eps(p, x, t, T),
+                             batch, rng), {}
+
+    opt = AdamWConfig(lr=2e-3, schedule=warmup_cosine(100, args.steps))
+    step_fn = jax.jit(make_diffusion_train_step(loss_fn, opt))
+    state = init_train_state(init_mlp(jax.random.PRNGKey(0)),
+                             jax.random.PRNGKey(1), opt)
+    gen = data.batches(512)
+    for step in range(args.steps):
+        state, _ = step_fn(state, next(gen))
+    eps_fn = lambda x, t: mlp_eps(state.params, x, t, T)
+
+    # two latents decoding to different modes
+    k = jax.random.PRNGKey(5)
+    x0a = jnp.asarray([[4.0, 0.0]])
+    x1a = jnp.asarray([[-4.0, 0.0]])
+    from repro.core import encode
+    zA = encode(schedule, eps_fn, x0a, S=args.S)
+    zB = encode(schedule, eps_fn, x1a, S=args.S)
+
+    alphas = jnp.linspace(0, 1, args.n_interp)
+    zs = slerp(zA[0], zB[0], alphas)
+    decoded = ddim_sample(schedule, eps_fn, zs, S=args.S)
+    d = np.asarray(decoded)
+    steps = np.linalg.norm(np.diff(d, axis=0), axis=-1)
+    print("slerp path (DDIM):")
+    for a, pt in zip(np.asarray(alphas), d):
+        print(f"  alpha={a:.2f} -> ({pt[0]:+.2f}, {pt[1]:+.2f})")
+    print(f"endpoints hit: A->{d[0]} B->{d[-1]}")
+    print(f"smoothness: mean step {steps.mean():.3f}, max {steps.max():.3f} "
+          f"(ratio {steps.max()/max(steps.mean(),1e-9):.1f})")
+
+    # determinism (§5.2): DDIM same x_T -> identical; DDPM -> dispersed
+    xT = jax.random.normal(k, (1, 2)).repeat(64, axis=0)
+    dd = ddim_sample(schedule, eps_fn, xT, S=50)
+    dp = sample(schedule, eps_fn, xT, SamplerConfig(S=50, eta=1.0),
+                rng=jax.random.PRNGKey(6))
+    print(f"\nsame x_T, 64 runs: DDIM spread={float(jnp.std(dd, 0).max()):.4f}"
+          f" DDPM spread={float(jnp.std(dp, 0).max()):.4f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--S", type=int, default=50)
+    ap.add_argument("--n-interp", type=int, default=11)
+    main(ap.parse_args())

@@ -1,0 +1,47 @@
+"""Assigned-architecture configs (+ the paper's own U-Net configs).
+
+``get(name)`` returns the FULL config; ``get_smoke(name)`` the reduced
+same-family variant used by CPU smoke tests. ``--arch <id>`` in the launch
+scripts resolves through ``ARCHS``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.common import ArchConfig
+
+from . import (deepseek_7b, deepseek_v2_236b, kimi_k2_1t_a32b,
+               llama3_2_3b, llava_next_mistral_7b, mistral_large_123b,
+               rwkv6_7b, seamless_m4t_large_v2, smollm_135m, zamba2_2_7b)
+
+_MODULES = [mistral_large_123b, llama3_2_3b, zamba2_2_7b, kimi_k2_1t_a32b,
+            rwkv6_7b, seamless_m4t_large_v2, deepseek_v2_236b, smollm_135m,
+            deepseek_7b, llava_next_mistral_7b]
+
+ARCHS: Dict[str, ArchConfig] = {m.FULL.name: m.FULL for m in _MODULES}
+SMOKES: Dict[str, ArchConfig] = {m.FULL.name: m.SMOKE for m in _MODULES}
+
+ARCH_IDS = list(ARCHS)
+
+
+def get(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return ARCHS[name]
+
+
+def get_smoke(name: str) -> ArchConfig:
+    return SMOKES[name]
+
+
+# ---- the paper's own image-diffusion configs (DDIM App. D.1) ----
+from repro.models.unet import UNetConfig
+
+# CIFAR10-shaped faithful config (Ho et al. widths)
+CIFAR10_UNET = UNetConfig(in_channels=3, base_width=128,
+                          width_mults=(1, 2, 2, 2), n_res_blocks=2,
+                          attn_levels=(1,), time_dim=512)
+
+# CPU-trainable small config used by examples/ and benchmarks/
+TOY_UNET = UNetConfig(in_channels=3, base_width=32, width_mults=(1, 2),
+                      n_res_blocks=1, attn_levels=(1,), time_dim=128)

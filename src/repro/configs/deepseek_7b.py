@@ -1,0 +1,20 @@
+"""deepseek-7b [dense] — llama-arch (arXiv:2401.02954).
+
+30L, d_model=4096, 32 heads (kv=32 -> MHA, head_dim 128), d_ff=11008,
+vocab=102400.
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="deepseek-7b", family="dense",
+    n_layers=30, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab=102400,
+    source="arXiv:2401.02954",
+)
+
+SMOKE = ArchConfig(
+    name="deepseek-7b-smoke", family="dense",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4, head_dim=64,
+    d_ff=512, vocab=512,
+    source=FULL.source,
+)

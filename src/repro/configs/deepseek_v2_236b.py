@@ -1,0 +1,31 @@
+"""deepseek-v2-236b [moe] — MLA + 2 shared + 160 routed top-6
+(arXiv:2405.04434).
+
+60L, d_model=5120, 128 heads with Multi-head Latent Attention
+(kv_lora=512, q_lora=1536, qk_nope=128, qk_rope=64, v=128), expert
+d_ff=1536, vocab=102400. Layer 0 dense FFN intermediate 12288 (paper).
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="deepseek-v2-236b", family="moe",
+    n_layers=60, d_model=5120, n_heads=128, n_kv_heads=128,
+    d_ff=12288,               # dense layer-0 FFN (paper intermediate size)
+    vocab=102400,
+    n_experts=160, top_k=6, n_shared_experts=2, d_ff_expert=1536,
+    capacity_factor=1.25,
+    use_mla=True, kv_lora=512, q_lora=1536,
+    qk_rope_dim=64, qk_nope_dim=128, v_head_dim=128,
+    source="arXiv:2405.04434",
+)
+
+SMOKE = ArchConfig(
+    name="deepseek-v2-236b-smoke", family="moe",
+    n_layers=3, d_model=128, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab=512,
+    n_experts=4, top_k=2, n_shared_experts=2, d_ff_expert=64,
+    capacity_factor=2.0,
+    use_mla=True, kv_lora=48, q_lora=64,
+    qk_rope_dim=16, qk_nope_dim=32, v_head_dim=32,
+    source=FULL.source,
+)

@@ -1,0 +1,26 @@
+"""kimi-k2-1t-a32b [moe] — Kimi K2, trillion-param MoE (arXiv:2501.kimi2).
+
+61L, d_model=7168, 64 heads (GQA kv=8, head_dim 112), 384 routed experts
+top-8 (+1 shared), expert d_ff=2048, vocab=163840. Layer 0 uses a dense FFN
+(first_k_dense=1, intermediate 18432 per the model card).
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="kimi-k2-1t-a32b", family="moe",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=112,
+    d_ff=18432,               # dense layer-0 FFN (model card intermediate)
+    vocab=163840,
+    n_experts=384, top_k=8, n_shared_experts=1, d_ff_expert=2048,
+    capacity_factor=1.25,
+    source="arXiv:2501.kimi2",
+)
+
+SMOKE = ArchConfig(
+    name="kimi-k2-1t-a32b-smoke", family="moe",
+    n_layers=3, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=256, vocab=512,
+    n_experts=4, top_k=2, n_shared_experts=1, d_ff_expert=64,
+    capacity_factor=2.0,
+    source=FULL.source,
+)

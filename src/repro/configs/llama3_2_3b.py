@@ -1,0 +1,20 @@
+"""llama3.2-3b [dense] — small llama3 (hf:meta-llama/Llama-3.2-1B family).
+
+28L, d_model=3072, 24 heads (GQA kv=8, head_dim 128), d_ff=8192,
+vocab=128256.
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="llama3.2-3b", family="dense",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=128256, rope_theta=5e5, tie_embeddings=True,
+    source="hf:meta-llama/Llama-3.2-1B",
+)
+
+SMOKE = ArchConfig(
+    name="llama3.2-3b-smoke", family="dense",
+    n_layers=2, d_model=192, n_heads=6, n_kv_heads=2, head_dim=32,
+    d_ff=512, vocab=512, rope_theta=5e5, tie_embeddings=True,
+    source=FULL.source,
+)

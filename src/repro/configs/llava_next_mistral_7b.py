@@ -1,0 +1,24 @@
+"""llava-next-mistral-7b [vlm] — hf:llava-hf/llava-v1.6-mistral-7b-hf.
+
+Mistral-7B language backbone: 32L, d_model=4096, 32 heads (GQA kv=8,
+head_dim 128), d_ff=14336, vocab=32000. Vision tower + anyres tiling +
+projector are a stub: input_specs() supplies projected patch embeddings
+(B, 2880, 4096) = base 576 tokens + 4 anyres tiles x 576.
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=32000, rope_theta=1e6,
+    n_ctx_embeds=2880,        # anyres: 576 base + 4 tiles x 576
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+)
+
+SMOKE = ArchConfig(
+    name="llava-next-mistral-7b-smoke", family="vlm",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+    d_ff=512, vocab=512, rope_theta=1e6,
+    n_ctx_embeds=16,
+    source=FULL.source,
+)

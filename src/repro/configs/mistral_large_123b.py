@@ -1,0 +1,21 @@
+"""mistral-large-123b [dense] — hf:mistralai/Mistral-Large-Instruct-2407.
+
+88L, d_model=12288, 96 heads (GQA kv=8, head_dim 128), d_ff=28672,
+vocab=32768. ~123B parameters.
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="mistral-large-123b", family="dense",
+    n_layers=88, d_model=12288, n_heads=96, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab=32768, rope_theta=1e6,
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+)
+
+# reduced same-family variant for CPU smoke tests (2L, d<=512)
+SMOKE = ArchConfig(
+    name="mistral-large-123b-smoke", family="dense",
+    n_layers=2, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+    d_ff=512, vocab=512, rope_theta=1e6,
+    source=FULL.source,
+)

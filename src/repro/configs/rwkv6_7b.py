@@ -1,0 +1,20 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay (arXiv:2404.05892).
+
+32L, d_model=4096 (attention-free; 64 wkv heads of size 64), d_ff=14336,
+vocab=65536. Decode state is O(1) in sequence length.
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64, head_dim=64,
+    d_ff=14336, vocab=65536,
+    source="arXiv:2404.05892",
+)
+
+SMOKE = ArchConfig(
+    name="rwkv6-7b-smoke", family="ssm",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+    d_ff=256, vocab=512,
+    source=FULL.source,
+)

@@ -1,0 +1,24 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec multimodal (arXiv:2308.11596).
+
+Transformer backbone only (assignment carve-out): 24 encoder + 24 decoder
+layers, d_model=1024, 16 heads (kv=16 -> MHA, head_dim 64), d_ff=8192,
+vocab=256206. The mel+conformer frontend is a stub: input_specs() supplies
+precomputed frame embeddings (B, frames, 1024).
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=8192, vocab=256206,
+    enc_layers=24, dec_layers=24, n_ctx_embeds=1024,
+    source="arXiv:2308.11596",
+)
+
+SMOKE = ArchConfig(
+    name="seamless-m4t-large-v2-smoke", family="audio",
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+    d_ff=256, vocab=512,
+    enc_layers=2, dec_layers=2, n_ctx_embeds=24,
+    source=FULL.source,
+)

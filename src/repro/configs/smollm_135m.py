@@ -1,0 +1,20 @@
+"""smollm-135m [dense] — hf:HuggingFaceTB/SmolLM-135M (llama-arch small).
+
+30L, d_model=576, 9 heads (GQA kv=3, head_dim 64), d_ff=1536, vocab=49152,
+tied embeddings.
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="smollm-135m", family="dense",
+    n_layers=30, d_model=576, n_heads=9, n_kv_heads=3, head_dim=64,
+    d_ff=1536, vocab=49152, tie_embeddings=True,
+    source="hf:HuggingFaceTB/SmolLM-135M",
+)
+
+SMOKE = ArchConfig(
+    name="smollm-135m-smoke", family="dense",
+    n_layers=2, d_model=192, n_heads=3, n_kv_heads=3, head_dim=64,
+    d_ff=512, vocab=512, tie_embeddings=True,
+    source=FULL.source,
+)

@@ -1,0 +1,22 @@
+"""zamba2-2.7b [hybrid] — arXiv:2411.15242 (Mamba2 + shared attn blocks).
+
+54 Mamba2 layers, d_model=2560, shared attention block (32 heads, GQA kv=32,
+head_dim 80) applied every 6 layers, d_ff=10240, vocab=32000, ssm_state=64.
+"""
+from repro.models.common import ArchConfig
+
+FULL = ArchConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, attn_every=6,
+    source="arXiv:2411.15242",
+)
+
+SMOKE = ArchConfig(
+    name="zamba2-2.7b-smoke", family="hybrid",
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+    d_ff=256, vocab=512,
+    ssm_state=16, ssm_head_dim=32, ssm_expand=2, attn_every=2,
+    source=FULL.source,
+)

@@ -1,0 +1,23 @@
+"""Core DDIM library — the paper's contribution as composable JAX modules."""
+from .schedules import NoiseSchedule, make_schedule, make_tau
+from .diffusion import (q_sample, predict_x0, eps_from_x0, posterior_sigma,
+                        sigma_hat, gamma_weights, simple_loss, training_loss)
+from .sampler import (SamplerConfig, trajectory_coefficients, sample,
+                      ddim_sample, ddpm_sample)
+from .ode import encode, decode, probability_flow_sample, multistep_sample
+from .interpolate import slerp, slerp_grid
+from .extensions import (v_from_eps_x0, eps_from_v, x0_from_v,
+                         eps_fn_from_v_fn, v_training_target, cfg_eps_fn)
+from . import discrete
+
+__all__ = [
+    "NoiseSchedule", "make_schedule", "make_tau",
+    "q_sample", "predict_x0", "eps_from_x0", "posterior_sigma", "sigma_hat",
+    "gamma_weights", "simple_loss", "training_loss",
+    "SamplerConfig", "trajectory_coefficients", "sample", "ddim_sample",
+    "ddpm_sample",
+    "encode", "decode", "probability_flow_sample", "multistep_sample",
+    "slerp", "slerp_grid", "discrete",
+    "v_from_eps_x0", "eps_from_v", "x0_from_v", "eps_fn_from_v_fn",
+    "v_training_target", "cfg_eps_fn",
+]

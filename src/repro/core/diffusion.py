@@ -1,0 +1,99 @@
+"""Forward process, x0-prediction and training losses (paper §2–§3).
+
+Everything here is a pure function of (schedule, arrays); the ε-network is
+passed in as ``eps_fn(x_t, t) -> eps`` where ``t`` is an int32 array of
+timesteps (one per batch element, values in [1, T]).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import NoiseSchedule
+
+EpsFn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _bcast(coef: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast per-batch scalar coefficients over trailing dims of x."""
+    return coef.reshape(coef.shape + (1,) * (x.ndim - coef.ndim))
+
+
+def q_sample(schedule: NoiseSchedule, x0: jnp.ndarray, t: jnp.ndarray,
+             noise: jnp.ndarray) -> jnp.ndarray:
+    """Sample x_t ~ q(x_t | x0) = N(sqrt(a_t) x0, (1-a_t) I)  (paper Eq. 4)."""
+    a = schedule.alpha_bar[t]
+    return _bcast(jnp.sqrt(a), x0) * x0 + _bcast(jnp.sqrt(1.0 - a), x0) * noise
+
+
+def predict_x0(schedule: NoiseSchedule, x_t: jnp.ndarray, t: jnp.ndarray,
+               eps: jnp.ndarray, clip: Optional[float] = None) -> jnp.ndarray:
+    """Denoised observation f_theta (paper Eq. 9)."""
+    a = schedule.alpha_bar[t]
+    x0 = (x_t - _bcast(jnp.sqrt(1.0 - a), x_t) * eps) / _bcast(jnp.sqrt(a), x_t)
+    if clip is not None:
+        x0 = jnp.clip(x0, -clip, clip)
+    return x0
+
+
+def eps_from_x0(schedule: NoiseSchedule, x_t: jnp.ndarray, t: jnp.ndarray,
+                x0: jnp.ndarray) -> jnp.ndarray:
+    """Invert Eq. 9: the ε consistent with (x_t, x0)."""
+    a = schedule.alpha_bar[t]
+    return (x_t - _bcast(jnp.sqrt(a), x_t) * x0) / _bcast(
+        jnp.sqrt(1.0 - a), x_t)
+
+
+def posterior_sigma(schedule: NoiseSchedule, t: jnp.ndarray, s: jnp.ndarray,
+                    eta: float | jnp.ndarray = 0.0) -> jnp.ndarray:
+    """sigma_t(eta) of paper Eq. 16, generalized to a (t -> s) jump.
+
+    eta=1 recovers the DDPM posterior std; eta=0 is DDIM (deterministic).
+    """
+    a_t = schedule.alpha_bar[t]
+    a_s = schedule.alpha_bar[s]
+    return eta * jnp.sqrt((1.0 - a_s) / (1.0 - a_t)) * jnp.sqrt(
+        1.0 - a_t / a_s)
+
+
+def sigma_hat(schedule: NoiseSchedule, t: jnp.ndarray,
+              s: jnp.ndarray) -> jnp.ndarray:
+    """The over-dispersed DDPM variance sqrt(1 - a_t/a_s) (paper §5, App D.3)."""
+    return jnp.sqrt(1.0 - schedule.alpha_bar[t] / schedule.alpha_bar[s])
+
+
+def gamma_weights(schedule: NoiseSchedule, sigma: jnp.ndarray,
+                  d: int) -> jnp.ndarray:
+    """Theorem-1 weights gamma_t = 1 / (2 d sigma_t^2 alpha_t), shape (T,).
+
+    These make J_sigma == L_gamma + C; with parameter sharing across t the
+    optimum coincides with L_1, which is why the paper trains only L_1.
+    ``sigma`` must be positive (Theorem 1 requires sigma > 0).
+    """
+    a = schedule.alpha_bar[1:]
+    return 1.0 / (2.0 * d * (sigma ** 2) * a)
+
+
+def simple_loss(schedule: NoiseSchedule, eps_fn: EpsFn, x0: jnp.ndarray,
+                t: jnp.ndarray, noise: jnp.ndarray,
+                weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """L_gamma (paper Eq. 5). weights=None gives gamma=1, i.e. L_simple/L_1."""
+    x_t = q_sample(schedule, x0, t, noise)
+    eps_hat = eps_fn(x_t, t)
+    per_ex = jnp.mean(jnp.square(eps_hat - noise),
+                      axis=tuple(range(1, x0.ndim)))
+    if weights is not None:
+        per_ex = per_ex * weights[t - 1]
+    return jnp.mean(per_ex)
+
+
+def training_loss(schedule: NoiseSchedule, eps_fn: EpsFn, x0: jnp.ndarray,
+                  rng: jax.Array,
+                  weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Draw (t, ε) and evaluate the denoising loss — one training step's loss."""
+    k_t, k_e = jax.random.split(rng)
+    t = jax.random.randint(k_t, (x0.shape[0],), 1, schedule.T + 1)
+    noise = jax.random.normal(k_e, x0.shape, dtype=x0.dtype)
+    return simple_loss(schedule, eps_fn, x0, t, noise, weights)

@@ -1,0 +1,118 @@
+"""Non-Markovian multinomial forward process for discrete data (paper App. A).
+
+The paper defines it and leaves experiments to future work; we implement the
+full process + a trainable reverse model interface so the toy experiment in
+examples/discrete_ddim.py can exercise it.
+
+For one-hot x0 with K classes:
+  q(x_t | x0)            = Cat(a_t x0 + (1 - a_t) 1/K)                 (Eq. 17)
+  q(x_{t-1} | x_t, x0)   = Cat(s_t x_t + (a_{t-1} - s_t a_t) x0
+                               + ((1-a_{t-1}) - (1-a_t) s_t) 1/K)      (Eq. 19)
+  p_theta(x_{t-1} | x_t) = same with x0 -> f_theta(x_t)                (Eq. 20)
+
+s_t (the paper's sigma_t) controls stochasticity: choosing s_t so that the
+uniform-mass term vanishes gives the "implicit" (DDIM-like) limit where the
+chain either keeps x_t or jumps to the predicted x0.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .schedules import NoiseSchedule
+
+# f_theta(x_t, t) -> (batch, ..., K) probabilities of x0
+X0Fn = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+def _b(coef: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    return coef.reshape(coef.shape + (1,) * (x.ndim - coef.ndim))
+
+
+def q_probs(schedule: NoiseSchedule, x0: jnp.ndarray,
+            t: jnp.ndarray) -> jnp.ndarray:
+    """Marginal Cat probabilities of x_t given one-hot x0 (Eq. 17)."""
+    K = x0.shape[-1]
+    a = schedule.alpha_bar[t]
+    return _b(a, x0) * x0 + _b(1.0 - a, x0) / K
+
+
+def q_sample(schedule: NoiseSchedule, x0: jnp.ndarray, t: jnp.ndarray,
+             rng: jax.Array) -> jnp.ndarray:
+    """Draw one-hot x_t ~ q(x_t | x0)."""
+    p = q_probs(schedule, x0, t)
+    idx = jax.random.categorical(rng, jnp.log(p + 1e-20), axis=-1)
+    return jax.nn.one_hot(idx, x0.shape[-1], dtype=x0.dtype)
+
+
+def sigma_implicit(schedule: NoiseSchedule, t: jnp.ndarray,
+                   s: jnp.ndarray) -> jnp.ndarray:
+    """The s_t that zeroes the uniform-mass term: (1-a_s)/(1-a_t).
+
+    This is the discrete analogue of eta=0 — maximally deterministic while
+    keeping all mixture weights in Eq. 18 non-negative.
+    """
+    return (1.0 - schedule.alpha_bar[s]) / (1.0 - schedule.alpha_bar[t])
+
+
+def posterior_probs(schedule: NoiseSchedule, x_t: jnp.ndarray,
+                    x0: jnp.ndarray, t: jnp.ndarray, s: jnp.ndarray,
+                    sigma: jnp.ndarray) -> jnp.ndarray:
+    """q(x_s | x_t, x0) mixture probabilities (Eq. 19), generalized t->s."""
+    K = x_t.shape[-1]
+    a_t = schedule.alpha_bar[t]
+    a_s = schedule.alpha_bar[s]
+    w_t = sigma
+    w_0 = a_s - sigma * a_t
+    w_u = (1.0 - a_s) - (1.0 - a_t) * sigma
+    return (_b(w_t, x_t) * x_t + _b(w_0, x_t) * x0 +
+            _b(w_u, x_t) / K)
+
+
+def reverse_sample(schedule: NoiseSchedule, x0_fn: X0Fn, x_T: jnp.ndarray,
+                   rng: jax.Array, S: int, eta: float = 0.0,
+                   tau_kind: str = "linear") -> jnp.ndarray:
+    """Sample the reverse multinomial chain on a sub-sequence tau.
+
+    eta interpolates sigma between 0 (fully stochastic jump to uniform terms)
+    and the implicit value (deterministic keep-or-jump): sigma = eta * sigma*.
+    """
+    from .schedules import make_tau
+    import numpy as np
+    tau = make_tau(schedule.T, S, tau_kind)
+    t_cur = jnp.asarray(tau[::-1].copy(), dtype=jnp.int32)
+    t_prev = jnp.asarray(np.concatenate([[0], tau[:-1]])[::-1].copy(),
+                         dtype=jnp.int32)
+    batch = x_T.shape[0]
+
+    def body(carry, per):
+        x, key = carry
+        tc, tp = per
+        key, k1 = jax.random.split(key)
+        probs_x0 = x0_fn(x, jnp.full((batch,), tc, dtype=jnp.int32))
+        sig = eta * sigma_implicit(schedule, tc, tp)
+        p = posterior_probs(schedule, x, probs_x0, tc, tp, sig)
+        idx = jax.random.categorical(k1, jnp.log(p + 1e-20), axis=-1)
+        x_new = jax.nn.one_hot(idx, x.shape[-1], dtype=x.dtype)
+        return (x_new, key), None
+
+    (x0, _), _ = jax.lax.scan(body, (x_T, rng), (t_cur, t_prev))
+    return x0
+
+
+def kl_loss(schedule: NoiseSchedule, x0_fn: X0Fn, x0: jnp.ndarray,
+            t: jnp.ndarray, rng: jax.Array, eta: float = 0.9) -> jnp.ndarray:
+    """Variational KL between the true and model posteriors (Eq. 21).
+
+    Bounded above by a weighted classification loss (App. A last eq.) — we
+    optimize the exact categorical KL, which is tractable.
+    """
+    x_t = q_sample(schedule, x0, t, rng)
+    s = jnp.maximum(t - 1, 0)
+    sig = eta * sigma_implicit(schedule, t, s)
+    q_p = posterior_probs(schedule, x_t, x0, t, s, sig)
+    p_p = posterior_probs(schedule, x_t, x0_fn(x_t, t), t, s, sig)
+    kl = jnp.sum(q_p * (jnp.log(q_p + 1e-20) - jnp.log(p_p + 1e-20)), axis=-1)
+    return jnp.mean(kl)

@@ -1,0 +1,62 @@
+"""Beyond-paper sampler extensions (post-2021 standard practice), built on
+the same schedule/marginal machinery:
+
+* v-prediction (Salimans & Ho 2022): the network predicts
+  v = sqrt(a) eps - sqrt(1-a) x0. Better-conditioned at high noise; we
+  provide exact adapters so a v-model plugs into the paper's Eq. 12 sampler
+  unchanged (everything reduces to an eps_fn).
+* classifier-free guidance (Ho & Salimans 2021): eps_cfg = eps_u +
+  w (eps_c - eps_u), again exposed as an eps_fn so all samplers (DDIM,
+  DDPM, AB-multistep, PF-Euler) inherit guidance for free — this
+  composability is a direct payoff of the paper's "everything is an
+  eps-model over fixed marginals" framing.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .diffusion import EpsFn, _bcast
+from .schedules import NoiseSchedule
+
+
+def v_from_eps_x0(schedule: NoiseSchedule, t, eps, x0):
+    a = schedule.alpha_bar[t]
+    return (_bcast(jnp.sqrt(a), eps) * eps
+            - _bcast(jnp.sqrt(1.0 - a), eps) * x0)
+
+
+def eps_from_v(schedule: NoiseSchedule, x_t, t, v):
+    """Invert v-parameterization: eps = sqrt(a) v + sqrt(1-a) x_t."""
+    a = schedule.alpha_bar[t]
+    return (_bcast(jnp.sqrt(a), v) * v
+            + _bcast(jnp.sqrt(1.0 - a), v) * x_t)
+
+
+def x0_from_v(schedule: NoiseSchedule, x_t, t, v):
+    a = schedule.alpha_bar[t]
+    return (_bcast(jnp.sqrt(a), v) * x_t
+            - _bcast(jnp.sqrt(1.0 - a), v) * v)
+
+
+def eps_fn_from_v_fn(schedule: NoiseSchedule, v_fn: Callable) -> EpsFn:
+    """Wrap a v-predictor as an eps_fn for the Eq. 12 sampler family."""
+    def eps_fn(x_t, t):
+        return eps_from_v(schedule, x_t, t, v_fn(x_t, t))
+    return eps_fn
+
+
+def v_training_target(schedule: NoiseSchedule, x0, t, noise):
+    """The regression target for v-models (same q_sample inputs as L_1)."""
+    return v_from_eps_x0(schedule, t, noise, x0)
+
+
+def cfg_eps_fn(eps_cond: EpsFn, eps_uncond: EpsFn,
+               guidance: float) -> EpsFn:
+    """Classifier-free guidance over any pair of eps models."""
+    def eps_fn(x_t, t):
+        eu = eps_uncond(x_t, t)
+        ec = eps_cond(x_t, t)
+        return eu + guidance * (ec - eu)
+    return eps_fn

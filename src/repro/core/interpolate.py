@@ -1,0 +1,38 @@
+"""Latent-space interpolation (paper §5.3, Appendix D.5)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def slerp(x0: jnp.ndarray, x1: jnp.ndarray, alpha: jnp.ndarray,
+          eps: float = 1e-7) -> jnp.ndarray:
+    """Spherical linear interpolation (Shoemake 1985; paper Eq. 67).
+
+    x0, x1: latents of identical shape. alpha: scalar or (K,) coefficients.
+    Returns (K, *x.shape) (or x.shape for scalar alpha).
+    """
+    flat0 = x0.reshape(-1)
+    flat1 = x1.reshape(-1)
+    cos = jnp.clip(jnp.dot(flat0, flat1) /
+                   (jnp.linalg.norm(flat0) * jnp.linalg.norm(flat1) + eps),
+                   -1.0 + eps, 1.0 - eps)
+    theta = jnp.arccos(cos)
+    alpha = jnp.asarray(alpha)
+    scalar = alpha.ndim == 0
+    a = alpha.reshape(-1, *([1] * x0.ndim))
+    out = (jnp.sin((1.0 - a) * theta) * x0[None] +
+           jnp.sin(a * theta) * x1[None]) / jnp.sin(theta)
+    return out[0] if scalar else out
+
+
+def slerp_grid(corners: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Grid interpolation from four corner latents (paper App. D.5).
+
+    corners: (4, *shape) -> returns (n, n, *shape); rows interpolate the two
+    corner pairs, columns interpolate across the interpolated rows.
+    """
+    alphas = jnp.linspace(0.0, 1.0, n)
+    top = slerp(corners[0], corners[1], alphas)       # (n, ...)
+    bot = slerp(corners[2], corners[3], alphas)       # (n, ...)
+    rows = [slerp(top[i], bot[i], alphas) for i in range(n)]
+    return jnp.stack(rows, axis=1)                    # (n_col, n_row, ...)

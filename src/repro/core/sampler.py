@@ -1,0 +1,154 @@
+"""Generalized generative processes (paper §4.1–4.2).
+
+The single update rule Eq. 12 covers the whole family:
+
+  x_s = sqrt(a_s) * x0_hat(x_t)                         "predicted x0"
+      + sqrt(1 - a_s - sigma_t^2) * eps_theta(x_t)      "direction to x_t"
+      + sigma_t * eps                                   "random noise"
+
+with sigma given by Eq. 16: eta=0 -> DDIM (deterministic, implicit model),
+eta=1 -> DDPM, and the over-dispersed sigma-hat variant of Ho et al.'s
+CIFAR10 runs. The trajectory runs over a sub-sequence tau (§4.2) so S << T
+network evaluations produce a sample.
+
+The full S-step loop is one ``jax.lax.scan`` — a single XLA program, the TPU
+analogue of CUDA-graph capture (no host round-trips between steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .diffusion import EpsFn, _bcast, predict_x0
+from .schedules import NoiseSchedule, make_tau
+
+# A fused update implementation: (x, eps, noise, c_x0, c_dir, c_noise,
+# sqrt_a_t, sqrt_1m_a_t) -> x_prev. Injectable so the Pallas kernel
+# (kernels/ddim_step) can replace the pure-jnp path without a circular import.
+StepImpl = Callable[..., jnp.ndarray]
+
+
+def _jnp_step(x, eps, noise, c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t):
+    """Reference fused Eq.12 update (pure jnp)."""
+    x0 = (x - sqrt_1m_a_t * eps) / sqrt_a_t
+    return c_x0 * x0 + c_dir * eps + c_noise * noise
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """How to produce samples from a trained eps-model (paper §5 knobs)."""
+
+    S: int = 50                       # dim(tau): number of sampler steps
+    eta: float = 0.0                  # 0 = DDIM, 1 = DDPM (Eq. 16)
+    tau_kind: str = "linear"          # 'linear' | 'quadratic' (App. D.2)
+    sigma_hat: bool = False           # over-dispersed DDPM variant (App. D.3)
+    clip_x0: Optional[float] = None   # clip predicted x0 (common practice)
+
+    def __post_init__(self):
+        if self.sigma_hat and self.eta != 1.0:
+            raise ValueError("sigma_hat is a DDPM (eta=1) variant")
+
+
+def trajectory_coefficients(schedule: NoiseSchedule, cfg: SamplerConfig):
+    """Precompute per-step scalar coefficients for the Eq. 12 update.
+
+    Returns dict of (S,) arrays: t (current step), and the five coefficients
+    consumed by the fused step. Computed in float64-free numpy->jnp once, so
+    the scan body is pure FMA work.
+    """
+    tau = make_tau(schedule.T, cfg.S, cfg.tau_kind)          # increasing, len S
+    t_cur = jnp.asarray(tau, dtype=jnp.int32)
+    t_prev = jnp.asarray(np.concatenate([[0], tau[:-1]]), dtype=jnp.int32)
+
+    a_t = schedule.alpha_bar[t_cur]
+    a_s = schedule.alpha_bar[t_prev]
+    sigma = cfg.eta * jnp.sqrt((1.0 - a_s) / (1.0 - a_t)) * jnp.sqrt(
+        1.0 - a_t / a_s)
+    if cfg.sigma_hat:
+        noise_scale = jnp.sqrt(1.0 - a_t / a_s)   # hat-sigma: bigger noise
+    else:
+        noise_scale = sigma
+    # last step (t -> 0): the generative process draws x0 with std sigma_1
+    # (Eq. 10 case t=1); the direction term vanishes since a_0 = 1.
+    c_dir = jnp.sqrt(jnp.clip(1.0 - a_s - sigma ** 2, 0.0, None))
+    return dict(
+        t=t_cur,
+        sqrt_a_t=jnp.sqrt(a_t),
+        sqrt_1m_a_t=jnp.sqrt(1.0 - a_t),
+        c_x0=jnp.sqrt(a_s),
+        c_dir=c_dir,
+        c_noise=noise_scale,
+    )
+
+
+def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
+           cfg: SamplerConfig, rng: Optional[jax.Array] = None,
+           step_impl: StepImpl = _jnp_step,
+           return_trajectory: bool = False) -> jnp.ndarray:
+    """Run the generalized generative process from x_T to x_0.
+
+    Args:
+      schedule: noise schedule the model was trained with (T steps).
+      eps_fn: eps_theta(x_t, t) with t an int32 (batch,) array.
+      x_T: initial latent, N(0, I) for generation or an encoding (ode.encode).
+      cfg: sampler configuration (S, eta, tau spacing, ...).
+      rng: PRNG key; required iff the process is stochastic (eta>0/sigma_hat).
+      step_impl: fused update implementation (default pure-jnp; the Pallas
+        kernel from repro.kernels.ddim_step is a drop-in).
+      return_trajectory: also return the (S+1, ...) stack of iterates.
+    """
+    stochastic = cfg.eta > 0.0 or cfg.sigma_hat
+    if stochastic and rng is None:
+        raise ValueError("stochastic sampler (eta>0 or sigma_hat) needs rng")
+    if rng is None:
+        rng = jax.random.PRNGKey(0)  # unused: c_noise == 0 everywhere
+    coefs = trajectory_coefficients(schedule, cfg)
+    batch = x_T.shape[0]
+
+    def body(x, per_step):
+        c, key = per_step
+        t = jnp.full((batch,), c["t"], dtype=jnp.int32)
+        eps = eps_fn(x, t)
+        if cfg.clip_x0 is not None:
+            # clipping predicted x0 re-derives an equivalent eps
+            x0 = predict_x0(schedule, x, t, eps, clip=cfg.clip_x0)
+            eps = (x - jnp.sqrt(schedule.alpha_bar[c["t"]]) * x0) / jnp.sqrt(
+                1.0 - schedule.alpha_bar[c["t"]])
+        noise = jax.random.normal(key, x.shape, dtype=x.dtype)
+        x_prev = step_impl(
+            x, eps, noise,
+            c["c_x0"].astype(x.dtype), c["c_dir"].astype(x.dtype),
+            c["c_noise"].astype(x.dtype), c["sqrt_a_t"].astype(x.dtype),
+            c["sqrt_1m_a_t"].astype(x.dtype))
+        return x_prev, (x_prev if return_trajectory else None)
+
+    # iterate from the largest timestep down: reverse the coefficient arrays
+    rev = jax.tree.map(lambda a: a[::-1], coefs)
+    keys = jax.random.split(rng, cfg.S)
+    x0, traj = jax.lax.scan(body, x_T, (rev, keys))
+    if return_trajectory:
+        return x0, jnp.concatenate([x_T[None], traj], axis=0)
+    return x0
+
+
+def ddim_sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
+                S: int = 50, tau_kind: str = "linear",
+                **kw) -> jnp.ndarray:
+    """Deterministic DDIM (eta = 0) — the paper's headline sampler."""
+    return sample(schedule, eps_fn, x_T,
+                  SamplerConfig(S=S, eta=0.0, tau_kind=tau_kind), **kw)
+
+
+def ddpm_sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
+                rng: jax.Array, S: Optional[int] = None,
+                tau_kind: str = "linear", sigma_hat: bool = False,
+                **kw) -> jnp.ndarray:
+    """DDPM baseline (eta = 1), optionally the sigma-hat variant."""
+    S = S if S is not None else schedule.T
+    return sample(schedule, eps_fn, x_T,
+                  SamplerConfig(S=S, eta=1.0, tau_kind=tau_kind,
+                                sigma_hat=sigma_hat), rng=rng, **kw)

@@ -1,0 +1,111 @@
+"""Noise schedules for diffusion processes.
+
+Notation follows the DDIM paper (Song et al., ICLR 2021): ``alpha_bar[t]`` is
+the *cumulative* product (the paper's alpha_t, which is Ho et al.'s
+``\\bar{alpha}_t`` — see paper Appendix C.2). We store ``alpha_bar`` on a grid
+of T+1 points with the convention ``alpha_bar[0] == 1`` (the paper defines
+``alpha_0 := 1`` below Eq. 12).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+ScheduleKind = Literal["linear", "cosine", "scaled_linear"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseSchedule:
+    """Immutable container for a discrete noise schedule.
+
+    Attributes:
+      alpha_bar: (T+1,) float array, alpha_bar[0] = 1, decreasing in t.
+      T: number of diffusion steps.
+      kind: schedule family used to construct it.
+    """
+
+    alpha_bar: jnp.ndarray
+    T: int
+    kind: str
+
+    @property
+    def betas(self) -> jnp.ndarray:
+        """Per-step beta_t = 1 - alpha_bar[t]/alpha_bar[t-1], shape (T,)."""
+        return 1.0 - self.alpha_bar[1:] / self.alpha_bar[:-1]
+
+    def sqrt_alpha_bar(self, t: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sqrt(self.alpha_bar[t])
+
+    def sqrt_one_minus_alpha_bar(self, t: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sqrt(1.0 - self.alpha_bar[t])
+
+    def snr(self, t: jnp.ndarray) -> jnp.ndarray:
+        """Signal-to-noise ratio alpha_bar / (1 - alpha_bar)."""
+        a = self.alpha_bar[t]
+        return a / (1.0 - a)
+
+    def sigma_continuous(self, t: jnp.ndarray) -> jnp.ndarray:
+        """The ODE reparameterization sigma(t) = sqrt((1-a)/a) (paper Eq. 38)."""
+        a = self.alpha_bar[t]
+        return jnp.sqrt((1.0 - a) / a)
+
+
+def make_schedule(kind: ScheduleKind = "linear", T: int = 1000,
+                  beta_start: float = 1e-4, beta_end: float = 2e-2,
+                  dtype=jnp.float32) -> NoiseSchedule:
+    """Build a NoiseSchedule.
+
+    ``linear`` is the Ho et al. (2020) heuristic the paper uses for all
+    datasets (beta linear from 1e-4 to 2e-2 over T steps). ``cosine``
+    (Nichol & Dhariwal) and ``scaled_linear`` are provided beyond-paper.
+    """
+    if T < 1:
+        raise ValueError(f"T must be >= 1, got {T}")
+    if kind == "linear":
+        betas = np.linspace(beta_start, beta_end, T, dtype=np.float64)
+    elif kind == "scaled_linear":
+        betas = np.linspace(beta_start ** 0.5, beta_end ** 0.5, T,
+                            dtype=np.float64) ** 2
+    elif kind == "cosine":
+        s = 0.008
+        steps = np.arange(T + 1, dtype=np.float64) / T
+        f = np.cos((steps + s) / (1 + s) * np.pi / 2) ** 2
+        ab = f / f[0]
+        betas = np.clip(1.0 - ab[1:] / ab[:-1], 0.0, 0.999)
+    else:
+        raise ValueError(f"unknown schedule kind: {kind}")
+    alpha_bar = np.concatenate([[1.0], np.cumprod(1.0 - betas)])
+    return NoiseSchedule(alpha_bar=jnp.asarray(alpha_bar, dtype=dtype),
+                         T=T, kind=kind)
+
+
+def make_tau(T: int, S: int, kind: Literal["linear", "quadratic"] = "linear",
+             ) -> np.ndarray:
+    """Sampling sub-sequence tau (paper §4.2 / Appendix D.2).
+
+    Returns an increasing array of S timesteps in [1, T].
+      linear:    tau_i = floor(c * i)
+      quadratic: tau_i = floor(c * i^2)   (used for CIFAR10 in the paper)
+    with c chosen so tau_{-1} is close to T.
+    """
+    if not 1 <= S <= T:
+        raise ValueError(f"need 1 <= S <= T, got S={S} T={T}")
+    i = np.arange(1, S + 1, dtype=np.float64)
+    if kind == "linear":
+        c = T / S
+        tau = np.floor(c * i)
+    elif kind == "quadratic":
+        c = T / (S ** 2)
+        tau = np.floor(c * i * i)
+    else:
+        raise ValueError(f"unknown tau kind: {kind}")
+    tau = np.unique(np.clip(tau.astype(np.int64), 1, T))
+    # de-duplication may shorten the trajectory for extreme (S, kind) combos;
+    # pad from the missing low timesteps to preserve length S.
+    if len(tau) < S:
+        missing = np.setdiff1d(np.arange(1, T + 1), tau)
+        tau = np.sort(np.concatenate([tau, missing[: S - len(tau)]]))
+    return tau

@@ -1,0 +1,5 @@
+from .synthetic import (SyntheticImages, SyntheticTokens, GaussianMixture2D,
+                        make_image_pipeline, make_token_pipeline)
+
+__all__ = ["SyntheticImages", "SyntheticTokens", "GaussianMixture2D",
+           "make_image_pipeline", "make_token_pipeline"]

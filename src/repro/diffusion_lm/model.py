@@ -1,0 +1,190 @@
+"""DDIM over sequences: any assigned backbone family as the eps-network.
+
+This carries the paper's technique to the assigned (non-image) architectures
+(DESIGN.md §4): tokens are embedded into a continuous latent sequence
+(Diffusion-LM style, Li et al. 2022), the forward diffusion of core/ runs on
+those latents, and a backbone trunk with additive time conditioning predicts
+the noise. Because training only uses the marginals q(x_t|x0) (the paper's
+key observation), the SAME trained trunk serves every member of the
+generalized family — DDPM, DDIM, and every eta in between — and the
+accelerated tau trajectories give the 10-50x sampling speedup on sequence
+generation too.
+
+Trunk per family:
+  dense / vlm / audio -> bidirectional dense transformer layers
+  moe                 -> bidirectional attention + routed-expert FFN
+  ssm (rwkv6)         -> rwkv6 layers (causal recurrence; noted in DESIGN.md)
+  hybrid (zamba2)     -> mamba2 layers + shared attention (causal)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import NoiseSchedule, SamplerConfig, sample
+from repro.core.diffusion import q_sample
+from repro.models import dense, moe, rwkv6
+from repro.models.common import (ArchConfig, KeyGen, Params, dense_init,
+                                 embed_init, rms_norm,
+                                 sinusoidal_time_embedding,
+                                 stack_layer_params)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionLMConfig:
+    arch: ArchConfig
+    time_dim: int = 256
+    latent_dim: int = 32           # Diffusion-LM: diffuse in a SMALL latent
+    self_condition: bool = False   # beyond-paper option (off by default)
+
+    @property
+    def d(self) -> int:
+        return self.latent_dim
+
+
+def init_params(rng: jax.Array, cfg: DiffusionLMConfig,
+                dtype=jnp.float32) -> Params:
+    a = cfg.arch
+    kg = KeyGen(rng)
+    params: Params = {
+        "embed": embed_init(kg(), (a.vocab, cfg.latent_dim), dtype),
+        "w_in": dense_init(kg(), (cfg.latent_dim, a.d_model), dtype),
+        "time_w1": dense_init(kg(), (cfg.time_dim, cfg.time_dim), dtype),
+        "time_w2": dense_init(kg(), (cfg.time_dim, a.d_model), dtype),
+        "out_norm": jnp.ones((a.d_model,), dtype),
+        "w_out": dense_init(kg(), (a.d_model, cfg.latent_dim), dtype),
+        "rounding": dense_init(kg(), (cfg.latent_dim, a.vocab), dtype),
+    }
+    if a.family in ("dense", "vlm", "audio"):
+        params["layers"] = stack_layer_params(
+            functools.partial(dense.init_layer, cfg=a, dtype=dtype),
+            a.n_layers, kg)
+    elif a.family == "moe":
+        params["layers"] = stack_layer_params(
+            functools.partial(moe.init_layer, cfg=a, dtype=dtype),
+            a.n_layers, kg)
+    elif a.family == "ssm":
+        params["layers"] = stack_layer_params(
+            functools.partial(rwkv6.init_layer, cfg=a, dtype=dtype),
+            a.n_layers, kg)
+    elif a.family == "hybrid":
+        from repro.models import hybrid as hy
+        params["layers"] = stack_layer_params(
+            functools.partial(hy.init_mamba_layer, cfg=a, dtype=dtype),
+            a.n_layers, kg)
+    else:
+        raise ValueError(a.family)
+    return params
+
+
+def _trunk(params: Params, cfg: DiffusionLMConfig, h: jnp.ndarray,
+           remat: bool) -> jnp.ndarray:
+    a = cfg.arch
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if a.family in ("dense", "vlm", "audio"):
+        def scan_fn(x, layer):
+            return dense.layer_fwd(layer, a, x, positions, causal=False), None
+    elif a.family == "moe":
+        def scan_fn(x, layer):
+            xn = rms_norm(x, layer["attn_norm"], a.norm_eps)
+            from repro.models.attention import gqa_forward, mla_forward
+            if a.use_mla:
+                x = x + mla_forward(layer["attn"], a, xn, positions)
+            else:
+                x = x + gqa_forward(layer["attn"], a, xn, positions,
+                                    causal=False)
+            y, _ = moe.moe_ffn(layer["moe"], a,
+                               rms_norm(x, layer["mlp_norm"], a.norm_eps))
+            return x + y, None
+    elif a.family == "ssm":
+        def scan_fn(x, layer):
+            st = rwkv6.init_state(a, B, x.dtype)
+            ln1 = rms_norm(x, layer["ln1"], a.norm_eps)
+            out, _, _ = rwkv6.time_mix(layer["tm"], a, ln1,
+                                       st["tm_last"][0], st["wkv"][0])
+            x = x + out
+            ln2 = rms_norm(x, layer["ln2"], a.norm_eps)
+            out, _ = rwkv6.channel_mix(layer["cm"], a, ln2, st["cm_last"][0])
+            return x + out, None
+    elif a.family == "hybrid":
+        from repro.models import mamba2
+        def scan_fn(x, layer):
+            conv, ssm = mamba2.init_mamba_state(a, B, x.dtype)
+            y, _, _ = mamba2.mamba_forward(
+                layer["mamba"], a, rms_norm(x, layer["norm"], a.norm_eps),
+                conv, ssm)
+            return x + y, None
+    else:
+        raise ValueError(a.family)
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn)
+    h, _ = jax.lax.scan(scan_fn, h, params["layers"])
+    return h
+
+
+def eps_forward(params: Params, cfg: DiffusionLMConfig, x_t: jnp.ndarray,
+                t: jnp.ndarray, remat: bool = True) -> jnp.ndarray:
+    """eps prediction over latent sequences. x_t: (B,S,d); t: (B,) int32."""
+    temb = sinusoidal_time_embedding(t, cfg.time_dim).astype(x_t.dtype)
+    temb = jax.nn.silu(temb @ params["time_w1"]) @ params["time_w2"]
+    h = x_t @ params["w_in"] + temb[:, None, :]
+    h = _trunk(params, cfg, h, remat)
+    h = rms_norm(h, params["out_norm"], cfg.arch.norm_eps)
+    return h @ params["w_out"]
+
+
+def make_eps_fn(params: Params, cfg: DiffusionLMConfig, remat: bool = False):
+    def eps_fn(x, t):
+        return eps_forward(params, cfg, x, t, remat=remat)
+    return eps_fn
+
+
+def embed_tokens(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Tokens -> unit-scale latents (x0 of the diffusion)."""
+    e = params["embed"][tokens]
+    return e / (jnp.std(e, axis=-1, keepdims=True) + 1e-6)
+
+
+def round_to_tokens(params: Params, x0: jnp.ndarray) -> jnp.ndarray:
+    """Latents -> tokens via the rounding head (Diffusion-LM 'rounding')."""
+    return jnp.argmax(x0 @ params["rounding"], axis=-1)
+
+
+def training_loss(params: Params, cfg: DiffusionLMConfig,
+                  schedule: NoiseSchedule, tokens: jnp.ndarray,
+                  rng: jax.Array, rounding_weight: float = 1.0,
+                  remat: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """L_simple on latents + rounding cross-entropy (keeps latents decodable).
+    Identical in form to paper Eq. 5 — gamma = 1."""
+    k_t, k_e = jax.random.split(rng)
+    x0 = embed_tokens(params, tokens)
+    B = tokens.shape[0]
+    t = jax.random.randint(k_t, (B,), 1, schedule.T + 1)
+    noise = jax.random.normal(k_e, x0.shape, dtype=x0.dtype)
+    x_t = q_sample(schedule, x0, t, noise)
+    eps_hat = eps_forward(params, cfg, x_t, t, remat=remat)
+    l_eps = jnp.mean(jnp.square(eps_hat - noise))
+    logits = x0 @ params["rounding"]
+    l_round = -jnp.mean(jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), tokens[..., None], axis=-1))
+    loss = l_eps + rounding_weight * l_round
+    return loss, {"l_eps": l_eps, "l_round": l_round}
+
+
+def generate(params: Params, cfg: DiffusionLMConfig, schedule: NoiseSchedule,
+             rng: jax.Array, batch: int, seq_len: int,
+             sampler: Optional[SamplerConfig] = None) -> jnp.ndarray:
+    """Sample token sequences with the (accelerated) DDIM process."""
+    sampler = sampler or SamplerConfig(S=50, eta=0.0)
+    k_init, k_samp = jax.random.split(rng)
+    x_T = jax.random.normal(k_init, (batch, seq_len, cfg.latent_dim))
+    eps_fn = make_eps_fn(params, cfg)
+    x0 = sample(schedule, eps_fn, x_T, sampler, rng=k_samp)
+    return round_to_tokens(params, x0)

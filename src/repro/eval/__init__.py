@@ -1,0 +1,5 @@
+from .metrics import (mmd_rbf, frechet_proxy, image_features, fid_proxy,
+                      mode_coverage, high_level_similarity)
+
+__all__ = ["mmd_rbf", "frechet_proxy", "image_features", "fid_proxy",
+           "mode_coverage", "high_level_similarity"]

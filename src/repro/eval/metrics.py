@@ -1,0 +1,99 @@
+"""Sample-quality metrics (offline substitutes for FID).
+
+The paper scores with FID, which needs a pretrained Inception network — not
+available offline. We use two substitutes that preserve the *ranking*
+behaviour Table 1 relies on (sensitive to both mode coverage and noise
+perturbations, the failure mode of sigma-hat at small S):
+
+  * kernel MMD (RBF, multi-bandwidth) between sample sets;
+  * a Frechet distance between Gaussian fits of hand-crafted image features
+    ("FID-proxy": channel stats + gradient magnitudes + 4x4 thumbnail).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.linalg
+
+
+def _sq_dists(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    x2 = jnp.sum(x * x, -1)[:, None]
+    y2 = jnp.sum(y * y, -1)[None, :]
+    return x2 + y2 - 2 * x @ y.T
+
+
+def mmd_rbf(x: jnp.ndarray, y: jnp.ndarray,
+            sigmas: Tuple[float, ...] = (1.0, 2.0, 4.0, 8.0)) -> float:
+    """Unbiased multi-bandwidth RBF MMD^2 between flattened sample sets."""
+    x = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    y = y.reshape(y.shape[0], -1).astype(jnp.float32)
+    # median-heuristic scaling keeps bandwidths meaningful across datasets
+    med = jnp.median(_sq_dists(x[:128], x[:128]))
+    total = 0.0
+    for s in sigmas:
+        gamma = 1.0 / (s * jnp.maximum(med, 1e-6))
+        kxx = jnp.exp(-gamma * _sq_dists(x, x))
+        kyy = jnp.exp(-gamma * _sq_dists(y, y))
+        kxy = jnp.exp(-gamma * _sq_dists(x, y))
+        n, m = x.shape[0], y.shape[0]
+        exx = (kxx.sum() - jnp.trace(kxx)) / (n * (n - 1))
+        eyy = (kyy.sum() - jnp.trace(kyy)) / (m * (m - 1))
+        total += exx + eyy - 2 * kxy.mean()
+    return float(total)
+
+
+def image_features(imgs: jnp.ndarray) -> jnp.ndarray:
+    """(N,H,W,C) -> (N,F) hand-crafted features for the FID-proxy."""
+    imgs = imgs.astype(jnp.float32)
+    N, H, W, C = imgs.shape
+    mean_c = imgs.mean(axis=(1, 2))
+    std_c = imgs.std(axis=(1, 2))
+    gy = jnp.abs(jnp.diff(imgs, axis=1)).mean(axis=(1, 2))
+    gx = jnp.abs(jnp.diff(imgs, axis=2)).mean(axis=(1, 2))
+    thumb = jax.image.resize(imgs, (N, 4, 4, C), "linear").reshape(N, -1)
+    return jnp.concatenate([mean_c, std_c, gy, gx, thumb], axis=-1)
+
+
+def frechet_proxy(fx: np.ndarray, fy: np.ndarray) -> float:
+    """Frechet distance between Gaussian fits of two feature sets."""
+    fx, fy = np.asarray(fx, np.float64), np.asarray(fy, np.float64)
+    mu1, mu2 = fx.mean(0), fy.mean(0)
+    c1 = np.cov(fx, rowvar=False) + 1e-6 * np.eye(fx.shape[1])
+    c2 = np.cov(fy, rowvar=False) + 1e-6 * np.eye(fy.shape[1])
+    covmean = scipy.linalg.sqrtm(c1 @ c2)
+    if np.iscomplexobj(covmean):
+        covmean = covmean.real
+    return float(((mu1 - mu2) ** 2).sum()
+                 + np.trace(c1 + c2 - 2 * covmean))
+
+
+def fid_proxy(samples: jnp.ndarray, reference: jnp.ndarray) -> float:
+    """FID-proxy between two image sets (lower is better)."""
+    return frechet_proxy(np.asarray(image_features(samples)),
+                         np.asarray(image_features(reference)))
+
+
+def mode_coverage(samples: np.ndarray, modes: np.ndarray,
+                  thresh: float = 1.0) -> Tuple[int, float]:
+    """For the 2D GMM: (#modes hit, fraction of samples within thresh of a
+    mode — a precision measure)."""
+    d = np.linalg.norm(samples[:, None, :] - modes[None], axis=-1)
+    nearest = d.min(axis=1)
+    assign = d.argmin(axis=1)
+    hit = np.unique(assign[nearest < thresh])
+    return int(len(hit)), float((nearest < thresh).mean())
+
+
+def high_level_similarity(a: jnp.ndarray, b: jnp.ndarray) -> float:
+    """Feature-space cosine similarity between paired sample sets (used for
+    the paper's §5.2 consistency claim: same x_T, different S)."""
+    fa = np.asarray(image_features(a), np.float64)
+    fb = np.asarray(image_features(b), np.float64)
+    fa = (fa - fa.mean(0)) / (fa.std(0) + 1e-8)
+    fb = (fb - fb.mean(0)) / (fb.std(0) + 1e-8)
+    num = (fa * fb).sum(-1)
+    den = np.linalg.norm(fa, axis=-1) * np.linalg.norm(fb, axis=-1) + 1e-12
+    return float((num / den).mean())

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three artifacts:
+  <name>/kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+  <name>/ops.py    — jit'd shape-flexible wrapper (drop-in for the jnp path)
+  <name>/ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Validated with interpret=True on CPU (this container); compiled on TPU.
+"""
+from .ddim_step.ops import fused_ddim_step
+from .flash_attention.ops import gqa_flash, mha_flash
+from .rmsnorm.ops import rms_norm as rms_norm_kernel
+
+__all__ = ["fused_ddim_step", "gqa_flash", "mha_flash", "rms_norm_kernel"]

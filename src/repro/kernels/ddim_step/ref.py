@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused DDIM update (paper Eq. 12).
+
+  x0_hat = (x - sqrt(1-a_t) * eps) / sqrt(a_t)
+  x_prev = c_x0 * x0_hat + c_dir * eps + c_noise * noise
+
+All five coefficients are per-step scalars (trajectory_coefficients).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ddim_step_ref(x: jnp.ndarray, eps: jnp.ndarray, noise: jnp.ndarray,
+                  c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t) -> jnp.ndarray:
+    x0 = (x - sqrt_1m_a_t * eps) / sqrt_a_t
+    return c_x0 * x0 + c_dir * eps + c_noise * noise

@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (blockwise online softmax).
+
+TPU adaptation (DESIGN.md §3): the GPU flash-attention tiling (shared-memory
+staging, warp reductions) becomes HBM->VMEM block streaming with MXU-aligned
+(BLOCK_Q x D) x (D x BLOCK_K) matmuls. The grid's LAST axis iterates over KV
+blocks sequentially per (batch*head, q-block), carrying the online-softmax
+running max / denominator / weighted accumulator in VMEM scratch; the
+normalized output is emitted on the final KV block. Causal masking skips
+fully-masked KV blocks via ``pl.when``.
+
+Used for full-sequence (train / prefill) attention; decode's single-query
+attention is memory-bound gather work the XLA path already handles well.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale       # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)               # (BK, D)
+        v = v_ref[0].astype(jnp.float32)               # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, _NEG)
+        m_prev = m_scr[...]                             # (BQ, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                          # (BQ, BK)
+        alpha = jnp.exp(m_prev - m_new)                 # (BQ, 1)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    if causal:
+        # skip KV blocks strictly above the diagonal
+        pl.when(k_start <= q_start + block_q - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = False,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q/k/v: (BH, S, D) flattened batch*heads. Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    grid = (BH, S // block_q, S // block_k)
+    scale = 1.0 / (D ** 0.5)
+    kernel = functools.partial(_kernel, causal=causal, block_q=block_q,
+                               block_k=block_k, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Jit'd wrappers: (B,H,S,D) MHA and GQA layouts -> flash kernel.
+
+``gqa_flash_attention`` matches models.attention's grouped layout so the
+kernel can replace the einsum path for train/prefill on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret",
+                                             "block_q", "block_k"))
+def mha_flash(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = False, interpret: bool = True,
+              block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """q/k/v: (B, H, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    out = flash_attention(q.reshape(B * H, S, D), k.reshape(B * H, S, D),
+                          v.reshape(B * H, S, D), causal=causal,
+                          interpret=interpret, block_q=block_q,
+                          block_k=block_k)
+    return out.reshape(B, H, S, D)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def gqa_flash(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, interpret: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, D); k/v: (B, S, Hkv, D) — models.attention layout."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    out = mha_flash(q.transpose(0, 2, 1, 3), kr.transpose(0, 2, 1, 3),
+                    vr.transpose(0, 2, 1, 3), causal=causal,
+                    interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

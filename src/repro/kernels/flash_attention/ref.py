@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: standard (causal or full) softmax attention.
+
+q: (B, H, S, D), k/v: (B, H, S, D) — MHA layout (GQA callers repeat kv
+heads before the kernel; the U-Net attention is MHA with H=1..8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = False) -> jnp.ndarray:
+    D = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(
+        jnp.asarray(D, jnp.float32)).astype(q.dtype)
+    if causal:
+        S = q.shape[2]
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)

@@ -1,0 +1,43 @@
+"""Pallas TPU RMSNorm: row-tiled, f32 accumulation, fused scale multiply.
+
+Each grid step normalizes a (TILE_R, d) block: one VMEM pass computes the
+mean-square in f32 (VPU reduction along lanes), rsqrt, and the scale
+multiply — instead of the XLA default of separate square / reduce /
+broadcast / mul HLOs, this is one read + one write of the block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 256
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+    o_ref[...] = (x * inv) * scale_ref[...]
+
+
+def rms_norm_2d(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-5,
+                interpret: bool = True) -> jnp.ndarray:
+    """x: (R, d) with R % TILE_R == 0 (ops.py pads); scale: (d,)."""
+    R, d = x.shape
+    tile = min(TILE_R, R)
+    assert R % tile == 0
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(R // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

@@ -1,0 +1,25 @@
+"""Jit'd wrapper: arbitrary leading dims -> row-tiled RMSNorm kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import TILE_R, rms_norm_2d
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5,
+             interpret: bool = True) -> jnp.ndarray:
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    R = 1
+    for s in lead:
+        R *= s
+    x2 = x.reshape(R, d)
+    pad = (-R) % min(TILE_R, max(R, 1))
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rms_norm_2d(x2, scale, eps=eps, interpret=interpret)
+    return out[:R].reshape(*lead, d)

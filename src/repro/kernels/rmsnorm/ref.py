@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for RMSNorm (matches models.common.rms_norm)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm_ref(x: jnp.ndarray, scale: jnp.ndarray,
+                 eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale

@@ -1,0 +1,6 @@
+"""Launch layer: production mesh, input shapes, dry-run, train/serve CLIs.
+
+NOTE: import repro.launch.dryrun only as __main__ (it sets XLA_FLAGS for 512
+placeholder devices before jax init). mesh/shapes/roofline are import-safe.
+"""
+from . import mesh, roofline, shapes

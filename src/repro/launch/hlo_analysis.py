@@ -1,0 +1,291 @@
+"""Loop-aware HLO analysis for honest roofline terms.
+
+Why this exists: ``compiled.cost_analysis()`` counts each while-loop BODY
+ONCE — but our models lax.scan over layers, so flops/bytes/collective
+counts from the raw analysis are low by ~n_layers (first observed as
+impossible useful-compute ratios > 1; see EXPERIMENTS.md §Roofline).
+
+This module parses the post-SPMD HLO text structurally:
+  * two passes: (1) symbol table instruction-name -> output-shape string;
+    (2) per-computation tallies;
+  * every ``while`` resolves body/condition; the static trip count is the
+    loop-bound integer constant in the condition computation;
+  * the call graph is walked from ENTRY with a MULTIPLICITY per
+    computation (while bodies multiply by trip; fusions/calls inherit);
+  * tallies per computation: dot flops (2 * out_elems * contracted),
+    convolution flops, collective output bytes by kind, and write traffic
+    (sum of instruction output bytes — a post-fusion HBM proxy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([^\s(]+)\s*\(.*->.*\{$")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([^\s=]+)\s*=\s*(.*)$")
+
+
+def _shape_elems(dims_str: str) -> int:
+    if not dims_str:
+        return 1
+    n = 1
+    for d in dims_str.split(","):
+        n *= int(d)
+    return n
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(s):
+        if dtype in _DTYPE_BYTES:
+            total += _shape_elems(dims) * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _out_shape_str(rhs: str) -> str:
+    """Output shape portion of an instruction RHS (tuple or single)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for j, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[:j + 1]
+    return rhs.split(" ", 1)[0]
+
+
+def _operand_names(rhs: str, opword: str) -> List[str]:
+    idx = rhs.find(opword + "(")
+    if idx < 0:
+        return []
+    start = idx + len(opword) + 1
+    depth = 0
+    names, cur = [], []
+    for ch in rhs[start:]:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            names.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        names.append("".join(cur).strip())
+    return [n.lstrip("%") for n in names if n.strip().startswith("%")]
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+    write_bytes: float = 0.0
+    dot_read_bytes: float = 0.0   # operand streams of dot/conv (real reads)
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_count: int = 0
+    calls: List[str] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_int_const: int = 1
+    root_op: str = ""
+    root_out_elems: int = 0
+    dus_out_elems: int = 0          # largest DUS output in this computation
+    dus_update_bytes: float = 0.0   # its update operand bytes
+    pending_fusions: List[Tuple[str, float]] = dataclasses.field(
+        default_factory=list)   # (called comp, fusion output bytes)
+
+
+def parse_hlo(text: str):
+    lines = [l.strip() for l in text.splitlines()]
+
+    # ---- pass 1: symbol table (instruction name -> output shape string)
+    shapes: Dict[str, str] = {}
+    for line in lines:
+        m = _INSTR_RE.match(line)
+        if m and ("(" in m.group(2)):
+            shapes[m.group(1)] = _out_shape_str(m.group(2))
+
+    # ---- pass 2: per-computation stats
+    comps: Dict[str, CompStats] = {}
+    fusion_bodies = set()
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in lines:
+        h = _HDR_RE.match(line)
+        if h:
+            cur = h.group(2)
+            comps[cur] = CompStats()
+            if h.group(1):
+                entry = cur
+            continue
+        if cur is None or not line or line == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        st = comps[cur]
+        rhs = m.group(2)
+        out_str = _out_shape_str(rhs)
+        after = rhs[len(out_str):].strip()
+        opword = after.split("(", 1)[0].strip()
+        out_bytes = _shape_bytes(out_str)
+        is_root = line.startswith("ROOT")
+        if is_root:
+            st.root_op = opword
+            so_root = _SHAPE_RE.search(out_str)
+            if so_root:
+                st.root_out_elems = _shape_elems(so_root.group(2))
+        # write-traffic proxy: skip no-traffic ops (parameters, tuple
+        # plumbing, aliasing bitcasts, the while's carried state); count
+        # in-place dynamic-update-slice as the UPDATE operand only
+        # (XLA aliases the buffer); fusions whose root is a DUS likewise
+        # (resolved after all computations are parsed).
+        if opword in ("parameter", "tuple", "get-tuple-element", "bitcast",
+                      "while", "constant", "iota"):
+            pass
+        elif opword == "dynamic-update-slice":
+            ops = _operand_names(rhs, opword)
+            upd = _shape_bytes(shapes.get(ops[1], "")) if len(ops) >= 2 \
+                else out_bytes
+            st.write_bytes += upd
+            so_d = _SHAPE_RE.search(out_str)
+            elems = _shape_elems(so_d.group(2)) if so_d else 0
+            if elems > st.dus_out_elems:
+                st.dus_out_elems = elems
+                st.dus_update_bytes = upd
+        elif opword == "fusion":
+            mm = re.search(r"calls=%?([\w.\-]+)", rhs)
+            st.pending_fusions.append((mm.group(1) if mm else "", out_bytes))
+        else:
+            st.write_bytes += out_bytes
+
+        for mm in re.finditer(r"constant\((\d+)\)", rhs):
+            st.max_int_const = max(st.max_int_const, int(mm.group(1)))
+
+        if opword == "dot":
+            ops = _operand_names(rhs, "dot")
+            for o in ops[:2]:
+                st.dot_read_bytes += _shape_bytes(shapes.get(o, ""))
+            mc = re.search(r"rhs_contracting_dims=\{([\d,]*)\}", rhs)
+            if len(ops) >= 2 and mc is not None:
+                rhs_shape = shapes.get(ops[1], "")
+                sm = _SHAPE_RE.search(rhs_shape)
+                if sm:
+                    rdims = ([int(x) for x in mc.group(1).split(",")]
+                             if mc.group(1) else [])
+                    rshape = ([int(d) for d in sm.group(2).split(",")]
+                              if sm.group(2) else [])
+                    contracted = 1
+                    for d in rdims:
+                        if d < len(rshape):
+                            contracted *= rshape[d]
+                    out_elems = 0
+                    so = _SHAPE_RE.search(out_str)
+                    if so:
+                        out_elems = _shape_elems(so.group(2))
+                    st.dot_flops += 2.0 * out_elems * contracted
+        elif opword == "convolution":
+            ops = _operand_names(rhs, "convolution")
+            so = _SHAPE_RE.search(out_str)
+            if len(ops) >= 2 and so:
+                ksh = _SHAPE_RE.search(shapes.get(ops[1], ""))
+                if ksh:
+                    k_elems = _shape_elems(ksh.group(2))
+                    out_dims = ([int(d) for d in so.group(2).split(",")]
+                                if so.group(2) else [])
+                    out_elems = _shape_elems(so.group(2))
+                    oc = out_dims[-1] if out_dims else 1
+                    st.conv_flops += 2.0 * out_elems * k_elems / max(oc, 1)
+        elif opword == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", rhs)
+            mc = re.search(r"condition=%?([\w.\-]+)", rhs)
+            if mb and mc:
+                st.whiles.append((mb.group(1), mc.group(1)))
+        else:
+            for kind in _COLLECTIVES:
+                if opword.startswith(kind):
+                    st.coll_bytes[kind] += out_bytes
+                    st.coll_count += 1
+                    break
+            for mm in re.finditer(
+                    r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)", rhs):
+                st.calls.append(mm.group(1))
+                if opword == "fusion":
+                    fusion_bodies.add(mm.group(1))
+
+    for name in fusion_bodies & comps.keys():
+        comps[name].write_bytes = 0.0   # fused internals live in registers
+
+    # resolve fusion write traffic: a fusion whose output IS a (possibly
+    # dtype-converted) dynamic-update-slice of the same logical buffer is
+    # in-place — count the update slice only. bf16 legalization on the CPU
+    # backend wraps the DUS in converts, so match on element count rather
+    # than requiring the root op to be the DUS itself.
+    for st in comps.values():
+        for called, out_bytes in st.pending_fusions:
+            callee = comps.get(called)
+            if (callee is not None and callee.dus_out_elems > 0
+                    and callee.dus_out_elems == callee.root_out_elems):
+                st.write_bytes += callee.dus_update_bytes
+            else:
+                st.write_bytes += out_bytes
+
+    return entry, comps
+
+
+def aggregate(text: str) -> Dict:
+    """Loop-corrected totals for the module (per-device numbers)."""
+    entry, comps = parse_hlo(text)
+    mult: Dict[str, float] = {}
+    trip_log: Dict[str, int] = {}
+
+    def visit(name: str, m: float, depth: int = 0):
+        if name not in comps or depth > 50:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        st = comps[name]
+        for body, cond in st.whiles:
+            trip = comps[cond].max_int_const if cond in comps else 1
+            trip_log[body] = trip
+            visit(cond, m * trip, depth + 1)
+            visit(body, m * trip, depth + 1)
+        for callee in st.calls:
+            visit(callee, m, depth + 1)
+
+    if entry is None and comps:
+        entry = next(iter(comps))
+    visit(entry, 1.0)
+
+    tot = {"dot_flops": 0.0, "conv_flops": 0.0, "write_bytes": 0.0,
+           "dot_read_bytes": 0.0,
+           "coll_bytes": {k: 0.0 for k in _COLLECTIVES}, "coll_count": 0.0}
+    for name, m in mult.items():
+        st = comps[name]
+        tot["dot_flops"] += m * st.dot_flops
+        tot["conv_flops"] += m * st.conv_flops
+        tot["write_bytes"] += m * st.write_bytes
+        tot["dot_read_bytes"] += m * st.dot_read_bytes
+        tot["coll_count"] += m * st.coll_count
+        for k in _COLLECTIVES:
+            tot["coll_bytes"][k] += m * st.coll_bytes[k]
+    tot["flops"] = tot["dot_flops"] + tot["conv_flops"]
+    tot["traffic_bytes"] = tot["write_bytes"] + tot["dot_read_bytes"]
+    tot["coll_bytes_total"] = sum(tot["coll_bytes"].values())
+    tot["trip_counts"] = trip_log
+    return tot

@@ -1,0 +1,110 @@
+"""Assigned input shapes and per-(arch x shape) ShapeDtypeStruct stand-ins.
+
+  train_4k     seq_len=4096    global_batch=256   (training)
+  prefill_32k  seq_len=32768   global_batch=32    (inference-prefill)
+  decode_32k   seq_len=32768   global_batch=128   (inference-decode)
+  long_500k    seq_len=524288  global_batch=1     (long-context-decode)
+
+Decode shapes lower ``decode_step`` (ONE token against a seq_len cache).
+long_500k policy (DESIGN.md §4): native for ssm/hybrid; dense/moe/vlm/audio
+run a sliding-window (8192) variant — marked via ``windowed`` in the combo.
+
+For stub-frontend archs: vlm gets (B, n_ctx_embeds, d) patch embeddings and
+text length seq_len - n_ctx_embeds (total positions == seq_len); audio
+splits the budget between encoder frames and decoder text for train/prefill
+and uses the decoder cache for decode shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+SHAPE_IDS = list(SHAPES)
+WINDOW = 8192  # sliding-window size for the long_500k dense variant
+
+
+@dataclasses.dataclass(frozen=True)
+class Combo:
+    """One (architecture x input shape) dry-run combination."""
+    arch: ArchConfig
+    shape_id: str
+    kind: str            # train | prefill | decode
+    batch: int
+    seq_len: int
+    windowed: bool       # sliding-window long_500k variant
+
+
+def resolve(cfg: ArchConfig, shape_id: str) -> Combo:
+    s = SHAPES[shape_id]
+    windowed = False
+    if shape_id == "long_500k" and cfg.family not in ("ssm",):
+        # hybrid keeps full shared-attn KV (9 apps, sub-quadratic overall);
+        # every full-attention family gets the window variant.
+        if cfg.family != "hybrid":
+            cfg = dataclasses.replace(cfg, sliding_window=WINDOW)
+            windowed = True
+    return Combo(arch=cfg, shape_id=shape_id, kind=s["kind"],
+                 batch=s["global_batch"], seq_len=s["seq_len"],
+                 windowed=windowed)
+
+
+def _embeds_spec(cfg: ArchConfig, batch: int, n: int, dtype) -> SDS:
+    return SDS((batch, n, cfg.d_model), dtype)
+
+
+def input_specs(combo: Combo, dtype=jnp.bfloat16) -> Dict[str, SDS]:
+    """ShapeDtypeStruct stand-ins for every model input of this combo
+    (weak-type-correct, shardable, zero allocation)."""
+    cfg, B, L = combo.arch, combo.batch, combo.seq_len
+    if combo.kind == "train":
+        if cfg.family == "vlm":
+            n_img = cfg.n_ctx_embeds
+            return {"tokens": SDS((B, L - n_img), jnp.int32),
+                    "embeds": _embeds_spec(cfg, B, n_img, dtype)}
+        if cfg.family == "audio":
+            return {"tokens": SDS((B, L // 2), jnp.int32),
+                    "embeds": _embeds_spec(cfg, B, L // 2, dtype)}
+        return {"tokens": SDS((B, L), jnp.int32)}
+    if combo.kind == "prefill":
+        if cfg.family == "vlm":
+            n_img = cfg.n_ctx_embeds
+            return {"tokens": SDS((B, L - n_img), jnp.int32),
+                    "embeds": _embeds_spec(cfg, B, n_img, dtype)}
+        if cfg.family == "audio":
+            # encoder takes the 32k frames; decoder prompt is short
+            return {"tokens": SDS((B, 256), jnp.int32),
+                    "embeds": _embeds_spec(cfg, B, L, dtype)}
+        return {"tokens": SDS((B, L), jnp.int32)}
+    # decode: one new token
+    return {"tokens": SDS((B, 1), jnp.int32)}
+
+
+def cache_specs(combo: Combo, dtype=jnp.bfloat16):
+    """Abstract cache pytree for prefill/decode combos."""
+    from repro.models import get_api
+    cfg = combo.arch
+    api = get_api(cfg)
+    if cfg.family == "audio" and combo.kind == "prefill":
+        # cross cache must match the encoder frame count of this combo
+        import functools
+        from repro.models import encdec
+        return jax.eval_shape(functools.partial(
+            encdec.init_cache, cfg, combo.batch, 256 + 64, combo.seq_len,
+            dtype))
+    import functools
+    return jax.eval_shape(functools.partial(
+        api.init_cache, cfg, combo.batch, combo.seq_len, dtype=dtype))

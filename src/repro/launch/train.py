@@ -1,0 +1,136 @@
+"""Training driver.
+
+Two modes:
+  * --arch <id>        LM pretraining on the synthetic Markov-chain corpus
+                       (reduced --smoke configs run on CPU).
+  * --arch unet        The paper's own training: U-Net eps-model on the
+                       synthetic image distribution with L_simple (Eq. 5,
+                       gamma=1), EMA tracking, checkpoints.
+
+Example (CPU, used by EXPERIMENTS.md):
+  PYTHONPATH=src python -m repro.launch.train --arch unet --steps 300
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import make_schedule, training_loss
+from repro.data import SyntheticImages, SyntheticTokens
+from repro.models import get_api, unet
+from repro.training import (AdamWConfig, ema_init, ema_update,
+                            init_train_state, make_diffusion_train_step,
+                            make_lm_train_step, warmup_cosine, checkpoint)
+
+
+def train_unet(args):
+    ucfg = configs.TOY_UNET if args.smoke or True else configs.CIFAR10_UNET
+    schedule = make_schedule("linear", T=args.T)
+    params = unet.init_params(jax.random.PRNGKey(args.seed), ucfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"U-Net params: {n_params/1e6:.2f}M  T={args.T}")
+
+    def loss_fn(params, batch, rng):
+        eps_fn = lambda x, t: unet.forward(params, ucfg, x, t)
+        loss = training_loss(schedule, eps_fn, batch, rng)
+        return loss, {}
+
+    opt_cfg = AdamWConfig(lr=args.lr,
+                          schedule=warmup_cosine(100, args.steps))
+    step_fn = jax.jit(make_diffusion_train_step(loss_fn, opt_cfg))
+    state = init_train_state(params, jax.random.PRNGKey(args.seed + 1),
+                             opt_cfg)
+    ema = ema_init(params)
+    data = SyntheticImages(size=args.image_size, seed=args.seed)
+    gen = data.batches(args.batch)
+
+    t0 = time.time()
+    for step in range(1, args.steps + 1):
+        state, metrics = step_fn(state, next(gen))
+        ema = ema_update(ema, state.params, decay=0.999)
+        if step % args.log_every == 0 or step == 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/step:.2f}s/step)", flush=True)
+        if args.ckpt_dir and step % args.ckpt_every == 0:
+            checkpoint.save_step(args.ckpt_dir, step,
+                                 {"params": state.params, "ema": ema})
+    if args.ckpt_dir:
+        path = checkpoint.save_step(args.ckpt_dir, args.steps,
+                                    {"params": state.params, "ema": ema})
+        print(f"final checkpoint: {path}")
+    return state, ema
+
+
+def train_lm(args):
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.2f}M params")
+    opt_cfg = AdamWConfig(lr=args.lr,
+                          schedule=warmup_cosine(20, args.steps))
+    step_fn = jax.jit(make_lm_train_step(cfg, opt_cfg))
+    state = init_train_state(params, jax.random.PRNGKey(args.seed + 1),
+                             opt_cfg)
+    data = SyntheticTokens(vocab=cfg.vocab, seed=args.seed)
+    gen = data.batches(args.batch, args.seq)
+
+    embeds = None
+    if cfg.family in ("vlm", "audio"):
+        embeds = jax.random.normal(jax.random.PRNGKey(9),
+                                   (args.batch, cfg.n_ctx_embeds,
+                                    cfg.d_model)) * 0.02
+    t0 = time.time()
+    losses = []
+    for step in range(1, args.steps + 1):
+        batch = {"tokens": next(gen)}
+        if embeds is not None:
+            batch["embeds"] = embeds
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == 1:
+            print(f"step {step:5d} loss={losses[-1]:.4f} "
+                  f"({(time.time()-t0)/step:.2f}s/step)", flush=True)
+    print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1]}))
+    if args.ckpt_dir:
+        checkpoint.save_step(args.ckpt_dir, args.steps,
+                             {"params": state.params})
+    return state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="'unet' or one of " + ", ".join(configs.ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--image-size", type=int, default=16)
+    ap.add_argument("--T", type=int, default=1000)
+    ap.add_argument("--lr", type=float, default=2e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    args = ap.parse_args()
+    if args.arch == "unet":
+        train_unet(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: every assigned architecture family + the paper's U-Net."""
+from .common import ArchConfig, count_params
+from .registry import FAMILIES, ModelApi, get_api
+from . import attention, dense, encdec, hybrid, mamba2, moe, rwkv6, unet, vlm
+
+__all__ = ["ArchConfig", "count_params", "FAMILIES", "ModelApi", "get_api",
+           "attention", "dense", "encdec", "hybrid", "mamba2", "moe",
+           "rwkv6", "unet", "vlm"]

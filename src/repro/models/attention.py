@@ -1,0 +1,377 @@
+"""Attention variants: GQA (all dense archs), MLA (deepseek-v2), sliding
+window, and the decode paths with KV / latent caches.
+
+Layouts:
+  activations  x: (B, S, d_model)
+  q            : (B, S, H, D)
+  k, v         : (B, S_kv, H_kv, D)
+  KV cache     : dict(k=(B, M, H_kv, D), v=(B, M, H_kv, D), idx=int32 scalar)
+                 M = max_len (full) or window size (ring buffer).
+  MLA cache    : dict(ckv=(B, M, kv_lora), krope=(B, M, rope_dim), idx)
+
+The einsum formulation here is the reference path; the Pallas flash-attention
+kernel (repro.kernels.flash_attention) is a drop-in for the (train/prefill)
+full-sequence case and is selected by the model configs' runtime flags.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ArchConfig, KeyGen, apply_rope, causal_mask, dense_init,
+                     rope_freqs)
+
+Cache = Dict[str, jnp.ndarray]
+_NEG = -1e30  # large-negative instead of -inf: safe under bf16 softmax
+
+
+# =============================================================== GQA params
+def init_gqa_params(keygen: KeyGen, cfg: ArchConfig, dtype) -> Dict:
+    d, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    return {
+        "wq": dense_init(keygen(), (d, H * D), dtype),
+        "wk": dense_init(keygen(), (d, Hkv * D), dtype),
+        "wv": dense_init(keygen(), (d, Hkv * D), dtype),
+        "wo": dense_init(keygen(), (H * D, d), dtype),
+    }
+
+
+def _grouped_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       mask: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D), mask additive broadcast to
+    (B,Hkv,G,Sq,Sk). Returns (B,Sq,H,D)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / jnp.sqrt(
+        jnp.asarray(D, q.dtype))
+    scores = scores + mask
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def chunked_grouped_attention(q: jnp.ndarray, k: jnp.ndarray,
+                              v: jnp.ndarray, causal: bool,
+                              q_chunk: int, k_chunk: int,
+                              window: int = 0) -> jnp.ndarray:
+    """Online-softmax attention with O(q_chunk * k_chunk) score blocks.
+
+    Pure-JAX equivalent of the Pallas flash kernel (kernels/flash_attention)
+    — XLA-lowerable everywhere, used to kill the S^2 score materialization
+    that dominates the memory roofline term at 32k prefill (§Perf lever
+    ``attn_chunk``). q: (B,Sq,H,D); k/v: (B,Sk,Hkv,D).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    assert Sq % qc == 0 and Sk % kc == 0, (Sq, qc, Sk, kc)
+    nq, nk = Sq // qc, Sk // kc
+    qg = q.reshape(B, nq, qc, Hkv, G, D)
+    kg = jnp.moveaxis(k.reshape(B, nk, kc, Hkv, D), 1, 0)
+    vg = jnp.moveaxis(v.reshape(B, nk, kc, Hkv, D), 1, 0)
+    scale = 1.0 / (D ** 0.5)
+
+    def q_block(qi):
+        qb = qg[:, qi] * jnp.asarray(scale, q.dtype)     # (B,qc,Hkv,G,D)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            kb, vb, ki = inp                              # (B,kc,Hkv,D)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qb, kb).astype(jnp.float32)
+            rows = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+            cols = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+            ok = jnp.ones((qc, kc), bool)
+            if causal:
+                ok &= rows >= cols
+            if window:
+                ok &= cols > rows - window
+            s = jnp.where(ok[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = alpha * acc + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(q.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, qc, 1), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (kg, vg, jnp.arange(nk, dtype=jnp.int32)))
+        out = acc / jnp.maximum(l, 1e-20)
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)   # (B,qc,Hkv,G,D)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq, dtype=jnp.int32))
+    out = jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, Hkv, G, D)
+    return out.reshape(B, Sq, H, D)
+
+
+def gqa_forward(params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, causal: bool = True,
+                mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). positions: (B, S)."""
+    from .runtime_flags import FLAGS
+    B, S, d = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    q = (x @ params["wq"]).reshape(B, S, H, D)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, D)
+    cos, sin = rope_freqs(positions, D, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if (FLAGS.attn_chunk and mask is None and S > FLAGS.attn_chunk
+            and S % FLAGS.attn_chunk == 0):
+        out = chunked_grouped_attention(q, k, v, causal, FLAGS.attn_chunk,
+                                        FLAGS.attn_chunk,
+                                        window=cfg.sliding_window)
+        return out.reshape(B, S, H * D) @ params["wo"]
+    if mask is None:
+        if causal:
+            mask = causal_mask(S, jnp.float32, cfg.sliding_window)
+        else:
+            mask = jnp.zeros((S, S), jnp.float32)
+    mask = jnp.maximum(mask, _NEG)
+    out = _grouped_attention(q, k, v, mask)
+    return out.reshape(B, S, H * D) @ params["wo"]
+
+
+def gqa_cross_forward(params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                      kv_src: jnp.ndarray) -> jnp.ndarray:
+    """Cross-attention (enc-dec decoder): queries from x, keys/values from
+    kv_src (encoder output). No RoPE across modalities, no causal mask."""
+    B, S, _ = x.shape
+    Sk = kv_src.shape[1]
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    q = (x @ params["wq"]).reshape(B, S, H, D)
+    k = (kv_src @ params["wk"]).reshape(B, Sk, Hkv, D)
+    v = (kv_src @ params["wv"]).reshape(B, Sk, Hkv, D)
+    mask = jnp.zeros((S, Sk), jnp.float32)
+    out = _grouped_attention(q, k, v, mask)
+    return out.reshape(B, S, H * D) @ params["wo"]
+
+
+# ---------------------------------------------------------------- KV cache
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, n_layers: int,
+                  dtype) -> Cache:
+    """Stacked-over-layers KV cache. For sliding-window configs the buffer is
+    a ring of size ``min(window, max_len)``."""
+    M = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+    Hkv, D = cfg.n_kv_heads, cfg.hd()
+    return {
+        "k": jnp.zeros((n_layers, batch, M, Hkv, D), dtype),
+        "v": jnp.zeros((n_layers, batch, M, Hkv, D), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _ring_slot_positions(idx: jnp.ndarray, M: int) -> jnp.ndarray:
+    """Absolute position held by each ring slot after ``idx`` writes.
+
+    Slot i holds position p = n - ((n - i) mod M) with n = idx - 1 (the last
+    written position); p < 0 means the slot is still empty.
+    """
+    n = idx - 1
+    i = jnp.arange(M)
+    return n - jnp.mod(n - i, M)
+
+
+def gqa_decode_step(layer_k: jnp.ndarray, layer_v: jnp.ndarray,
+                    idx: jnp.ndarray, params: Dict, cfg: ArchConfig,
+                    x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                             jnp.ndarray]:
+    """One decode step for ONE layer.
+
+    layer_k/layer_v: (B, M, Hkv, D) this layer's cache; idx: tokens written so
+    far (== position of the incoming token). x: (B, 1, d).
+    Returns (attn_out (B,1,d), new_k, new_v).
+    """
+    B = x.shape[0]
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    M = layer_k.shape[1]
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    q = (x @ params["wq"]).reshape(B, 1, H, D)
+    k = (x @ params["wk"]).reshape(B, 1, Hkv, D)
+    v = (x @ params["wv"]).reshape(B, 1, Hkv, D)
+    cos, sin = rope_freqs(pos, D, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = jnp.mod(idx, M)
+    new_k = jax.lax.dynamic_update_slice_in_dim(layer_k, k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(layer_v, v, slot, axis=1)
+    slot_pos = _ring_slot_positions(idx + 1, M)          # (M,)
+    valid = slot_pos >= 0
+    mask = jnp.where(valid, 0.0, _NEG)[None, None, None, None, :]
+    out = _grouped_attention(q, new_k, new_v, mask)
+    return out.reshape(B, 1, H * D) @ params["wo"], new_k, new_v
+
+
+def gqa_prefill(layer_k: jnp.ndarray, layer_v: jnp.ndarray, params: Dict,
+                cfg: ArchConfig, x: jnp.ndarray,
+                positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                 jnp.ndarray]:
+    """Full-sequence prefill for one layer, writing the cache.
+
+    Assumes prompt length S <= M (or window); writes rows [0, S)."""
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    M = layer_k.shape[1]
+    q = (x @ params["wq"]).reshape(B, S, H, D)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, D)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, D)
+    cos, sin = rope_freqs(positions, D, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    from .runtime_flags import FLAGS
+    if (FLAGS.attn_chunk and S > FLAGS.attn_chunk
+            and S % FLAGS.attn_chunk == 0):
+        out = chunked_grouped_attention(q, k, v, True, FLAGS.attn_chunk,
+                                        FLAGS.attn_chunk,
+                                        window=cfg.sliding_window)
+    else:
+        mask = jnp.maximum(causal_mask(S, jnp.float32, cfg.sliding_window),
+                           _NEG)
+        out = _grouped_attention(q, k, v, mask)
+    if S >= M:
+        new_k, new_v = k[:, S - M:], v[:, S - M:]
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(layer_k, k, 0, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(layer_v, v, 0, axis=1)
+    return out.reshape(B, S, H * D) @ params["wo"], new_k, new_v
+
+
+# ====================================================================== MLA
+def init_mla_params(keygen: KeyGen, cfg: ArchConfig, dtype) -> Dict:
+    """Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+    K/V are compressed into a ``kv_lora``-dim latent c_kv; decode caches only
+    (c_kv, k_rope) — the paper's 93% KV-cache reduction. Queries optionally
+    go through their own low-rank bottleneck (q_lora).
+    """
+    d, H = cfg.d_model, cfg.n_heads
+    qk_nope, qk_rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    qd = qk_nope + qk_rope
+    p = {
+        "w_dkv": dense_init(keygen(), (d, cfg.kv_lora), dtype),
+        "w_krope": dense_init(keygen(), (d, qk_rope), dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora,), dtype),
+        "w_uk": dense_init(keygen(), (cfg.kv_lora, H * qk_nope), dtype),
+        "w_uv": dense_init(keygen(), (cfg.kv_lora, H * dv), dtype),
+        "wo": dense_init(keygen(), (H * dv, d), dtype),
+    }
+    if cfg.q_lora:
+        p["w_dq"] = dense_init(keygen(), (d, cfg.q_lora), dtype)
+        p["q_norm"] = jnp.ones((cfg.q_lora,), dtype)
+        p["w_uq"] = dense_init(keygen(), (cfg.q_lora, H * qd), dtype)
+    else:
+        p["wq"] = dense_init(keygen(), (d, H * qd), dtype)
+    return p
+
+
+def _mla_q(params: Dict, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    from .common import rms_norm
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora:
+        cq = rms_norm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
+        q = cq @ params["w_uq"]
+    else:
+        q = x @ params["wq"]
+    return q.reshape(B, S, H, qd)
+
+
+def _mla_attend(params: Dict, cfg: ArchConfig, q: jnp.ndarray,
+                ckv: jnp.ndarray, krope: jnp.ndarray,
+                mask: jnp.ndarray, positions_q: jnp.ndarray,
+                positions_k: jnp.ndarray) -> jnp.ndarray:
+    """Shared MLA attention math. q: (B,Sq,H,qd); ckv: (B,Sk,kv_lora);
+    krope: (B,Sk,rope)."""
+    B, Sq, H, _ = q.shape
+    Sk = ckv.shape[1]
+    nope, rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos_q, sin_q = rope_freqs(positions_q, rope, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos_q, sin_q)
+    cos_k, sin_k = rope_freqs(positions_k, rope, cfg.rope_theta)
+    k_rope = apply_rope(krope[:, :, None, :], cos_k, sin_k)[:, :, 0]
+    k_nope = (ckv @ params["w_uk"]).reshape(B, Sk, H, nope)
+    v = (ckv @ params["w_uv"]).reshape(B, Sk, H, dv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(nope + rope, q.dtype))
+    scores = (jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope) +
+              jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope)) * scale
+    scores = scores + mask
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    return out.reshape(B, Sq, H * dv) @ params["wo"]
+
+
+def mla_forward(params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                positions: jnp.ndarray) -> jnp.ndarray:
+    from .common import rms_norm
+    B, S, _ = x.shape
+    q = _mla_q(params, cfg, x)
+    ckv = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    krope = x @ params["w_krope"]
+    mask = jnp.maximum(causal_mask(S, jnp.float32, cfg.sliding_window), _NEG)
+    return _mla_attend(params, cfg, q, ckv, krope, mask, positions, positions)
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, max_len: int, n_layers: int,
+                   dtype) -> Cache:
+    M = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+    return {
+        "ckv": jnp.zeros((n_layers, batch, M, cfg.kv_lora), dtype),
+        "krope": jnp.zeros((n_layers, batch, M, cfg.qk_rope_dim), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode_step(layer_ckv: jnp.ndarray, layer_krope: jnp.ndarray,
+                    idx: jnp.ndarray, params: Dict, cfg: ArchConfig,
+                    x: jnp.ndarray):
+    from .common import rms_norm
+    B = x.shape[0]
+    M = layer_ckv.shape[1]
+    q = _mla_q(params, cfg, x)                               # (B,1,H,qd)
+    ckv_new = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    krope_new = x @ params["w_krope"]
+    slot = jnp.mod(idx, M)
+    new_ckv = jax.lax.dynamic_update_slice_in_dim(layer_ckv, ckv_new, slot, 1)
+    new_krope = jax.lax.dynamic_update_slice_in_dim(layer_krope, krope_new,
+                                                    slot, 1)
+    slot_pos = _ring_slot_positions(idx + 1, M)
+    mask = jnp.where(slot_pos >= 0, 0.0, _NEG)[None, None, None, :]
+    pos_q = jnp.full((B, 1), idx, jnp.int32)
+    pos_k = jnp.broadcast_to(jnp.maximum(slot_pos, 0)[None], (B, M))
+    out = _mla_attend(params, cfg, q, new_ckv, new_krope, mask, pos_q, pos_k)
+    return out, new_ckv, new_krope
+
+
+def mla_prefill(layer_ckv: jnp.ndarray, layer_krope: jnp.ndarray,
+                params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                positions: jnp.ndarray):
+    from .common import rms_norm
+    B, S, _ = x.shape
+    M = layer_ckv.shape[1]
+    q = _mla_q(params, cfg, x)
+    ckv = rms_norm(x @ params["w_dkv"], params["kv_norm"], cfg.norm_eps)
+    krope = x @ params["w_krope"]
+    mask = jnp.maximum(causal_mask(S, jnp.float32, cfg.sliding_window), _NEG)
+    out = _mla_attend(params, cfg, q, ckv, krope, mask, positions, positions)
+    if S >= M:
+        new_ckv, new_krope = ckv[:, S - M:], krope[:, S - M:]
+    else:
+        new_ckv = jax.lax.dynamic_update_slice_in_dim(layer_ckv, ckv, 0, 1)
+        new_krope = jax.lax.dynamic_update_slice_in_dim(layer_krope, krope,
+                                                        0, 1)
+    return out, new_ckv, new_krope

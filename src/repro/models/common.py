@@ -1,0 +1,181 @@
+"""Shared building blocks for all backbones: config, norms, RoPE, inits.
+
+Everything is a pure function over explicit parameter pytrees (no flax in the
+environment, and pure-function style keeps pjit sharding rules path-based).
+Parameters for repeated layers are STACKED along a leading ``n_layers`` axis so
+the forward pass is a single ``jax.lax.scan`` — this keeps the lowered HLO
+small enough to compile 88-layer/123B-parameter graphs on one CPU host and
+makes activation rematerialization a one-line ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One assigned architecture. Field names follow the assignment table."""
+
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    source: str = ""               # citation from the assignment table
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    # --- MLA (deepseek-style latent attention) ---
+    use_mla: bool = False
+    kv_lora: int = 0
+    q_lora: int = 0
+    qk_rope_dim: int = 64
+    qk_nope_dim: int = 128
+    v_head_dim: int = 128
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    attn_every: int = 0            # hybrid: shared attn block period
+    # --- enc-dec ---
+    enc_layers: int = 0
+    dec_layers: int = 0
+    # --- vlm / audio frontends (stubs: embeddings arrive precomputed) ---
+    n_ctx_embeds: int = 0          # image patch / audio frame token count
+    # --- serving ---
+    sliding_window: int = 0        # 0 = full attention
+
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def validate(self) -> None:
+        if self.n_kv_heads and self.n_heads % self.n_kv_heads:
+            raise ValueError(f"{self.name}: n_heads % n_kv_heads != 0")
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+        if self.use_mla:
+            assert self.kv_lora > 0
+
+
+# ------------------------------------------------------------------ numerics
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-5) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+            + bias)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU FFN used by every llama-family config."""
+    g = jax.nn.silu(x @ w_gate)
+    return (g * (x @ w_up)) @ w_down
+
+
+def rope_freqs(positions: jnp.ndarray, dim: int,
+               theta: float = 10000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables for rotary embeddings. positions: (..., S) int32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D). cos/sin: broadcastable (..., S, D/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoidal_time_embedding(t: jnp.ndarray, dim: int,
+                              max_period: float = 10000.0) -> jnp.ndarray:
+    """Transformer/DDPM sinusoidal embedding of (integer) timesteps."""
+    half = dim // 2
+    freqs = jnp.exp(-np.log(max_period) *
+                    jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb
+
+
+# -------------------------------------------------------------------- inits
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               scale: Optional[float] = None) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Sequential PRNG key dispenser for verbose init code."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def stack_layer_params(layer_inits, n_layers: int, keygen: KeyGen):
+    """Initialize per-layer params and stack along a leading axis.
+
+    layer_inits: fn(key) -> pytree for ONE layer. Uses vmap over split keys so
+    the stacked tree is created directly (no python-loop concat).
+    """
+    keys = jnp.stack([keygen() for _ in range(n_layers)])
+    return jax.vmap(layer_inits)(keys)
+
+
+def causal_mask(S: int, dtype=jnp.float32,
+                window: int = 0) -> jnp.ndarray:
+    """(S, S) additive mask; optional sliding window (local attention)."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = j <= i
+    if window:
+        ok &= j > i - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(dtype)
+
+
+def count_params(params: Params) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))

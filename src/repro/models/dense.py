@@ -1,0 +1,208 @@
+"""Decoder-only dense transformer (llama family).
+
+Covers the assigned archs: mistral-large-123b, llama3.2-3b, smollm-135m,
+deepseek-7b — and serves as the language backbone of llava-next (vlm) and as
+the transformer trunk reused by the MoE models (attention + norms).
+
+All layers are stacked; the forward pass is one ``lax.scan`` with optional
+``jax.checkpoint`` rematerialization so 88-layer graphs stay compact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (gqa_decode_step, gqa_forward, gqa_prefill,
+                        init_gqa_params, init_kv_cache)
+from .common import (ArchConfig, KeyGen, Params, dense_init, embed_init,
+                     rms_norm, stack_layer_params, swiglu)
+
+
+def init_layer(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "attn": init_gqa_params(kg, cfg, dtype),
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "w_gate": dense_init(kg(), (cfg.d_model, cfg.d_ff), dtype),
+        "w_up": dense_init(kg(), (cfg.d_model, cfg.d_ff), dtype),
+        "w_down": dense_init(kg(), (cfg.d_ff, cfg.d_model), dtype,
+                             scale=cfg.d_ff ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    cfg.validate()
+    kg = KeyGen(rng)
+    params = {
+        "embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dtype),
+        "layers": stack_layer_params(
+            functools.partial(init_layer, cfg=cfg, dtype=dtype),
+            cfg.n_layers, kg),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(kg(), (cfg.d_model, cfg.vocab), dtype)
+    return params
+
+
+def layer_fwd(layer: Dict, cfg: ArchConfig, x: jnp.ndarray,
+              positions: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    h = x + gqa_forward(layer["attn"], cfg,
+                        rms_norm(x, layer["attn_norm"], cfg.norm_eps),
+                        positions, causal=causal)
+    h = h + swiglu(rms_norm(h, layer["mlp_norm"], cfg.norm_eps),
+                   layer["w_gate"], layer["w_up"], layer["w_down"])
+    return h
+
+
+def _logits(params: Params, cfg: ArchConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ params["embed"].T
+    return h @ params["unembed"]
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True) -> jnp.ndarray:
+    """Full-sequence forward -> logits (B, S, vocab).
+
+    embeds: optional (B, S_ctx, d) prefix embeddings (VLM image tokens /
+    audio frames) prepended before the token embeddings.
+    """
+    h = params["embed"][tokens]
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    from .runtime_flags import constrain_residual
+    body = functools.partial(layer_fwd, cfg=cfg, positions=positions)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, layer):
+        # §Perf lever: sequence-parallel residual (shards the saved
+        # per-layer activations over "model"; no-op unless enabled)
+        return constrain_residual(body(layer, x=carry)), None
+
+    h, _ = jax.lax.scan(scan_fn, h, params["layers"])
+    return _logits(params, cfg, h)
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            cache: Dict, embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """Run the prompt through the model, filling the cache.
+
+    Returns (last-position logits (B, vocab), cache)."""
+    h = params["embed"][tokens]
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def scan_fn(x, layer_kv):
+        layer, k, v = layer_kv
+        attn_out, nk, nv = gqa_prefill(
+            k, v, layer["attn"], cfg,
+            rms_norm(x, layer["attn_norm"], cfg.norm_eps), positions)
+        h2 = x + attn_out
+        h2 = h2 + swiglu(rms_norm(h2, layer["mlp_norm"], cfg.norm_eps),
+                         layer["w_gate"], layer["w_up"], layer["w_down"])
+        return h2, (nk, nv)
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn)
+    h, (ks, vs) = jax.lax.scan(scan_fn, h,
+                               (params["layers"], cache["k"], cache["v"]))
+    new_cache = {"k": ks, "v": vs,
+                 "idx": jnp.asarray(S, jnp.int32)}
+    logits = _logits(params, cfg, h[:, -1:])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """One AR decode step. tokens: (B, 1) -> logits (B, vocab)."""
+    from .runtime_flags import FLAGS
+    if FLAGS.decode_inplace:
+        return decode_step_inplace(params, cfg, tokens, cache)
+    h = params["embed"][tokens]
+    idx = cache["idx"]
+
+    def scan_fn(x, layer_kv):
+        layer, k, v = layer_kv
+        attn_out, nk, nv = gqa_decode_step(
+            k, v, idx, layer["attn"], cfg,
+            rms_norm(x, layer["attn_norm"], cfg.norm_eps))
+        h2 = x + attn_out
+        h2 = h2 + swiglu(rms_norm(h2, layer["mlp_norm"], cfg.norm_eps),
+                         layer["w_gate"], layer["w_up"], layer["w_down"])
+        return h2, (nk, nv)
+
+    h, (ks, vs) = jax.lax.scan(scan_fn, h,
+                               (params["layers"], cache["k"], cache["v"]))
+    new_cache = {"k": ks, "v": vs, "idx": idx + 1}
+    return _logits(params, cfg, h)[:, 0], new_cache
+
+
+def decode_step_inplace(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                        cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """§Perf variant: the stacked KV cache is a scan CARRY updated with a
+    token-sized dynamic_update_slice per layer, instead of re-stacking each
+    layer's full cache as scan outputs.
+
+    Baseline decode writes O(full cache) per step (the ys-stacking copies);
+    this writes O(L * token) — the roofline memory floor becomes cache READ
+    bound only. With jit donation the carry aliases the input buffer.
+    """
+    from .attention import _grouped_attention, _ring_slot_positions
+    from .common import apply_rope, rope_freqs
+    h = params["embed"][tokens]
+    idx = cache["idx"]
+    K, V = cache["k"], cache["v"]              # (L, B, M, Hkv, D)
+    B = h.shape[0]
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    M = K.shape[2]
+    slot = jnp.mod(idx, M)
+    pos = jnp.full((B, 1), idx, jnp.int32)
+    cos, sin = rope_freqs(pos, D, cfg.rope_theta)
+    slot_pos = _ring_slot_positions(idx + 1, M)
+    mask = jnp.where(slot_pos >= 0, 0.0, -1e30)[None, None, None, None, :]
+
+    def scan_fn(carry, layer_i):
+        x, K, V = carry
+        layer, i = layer_i
+        ap = layer["attn"]
+        xn = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        q = apply_rope((xn @ ap["wq"]).reshape(B, 1, H, D), cos, sin)
+        k = apply_rope((xn @ ap["wk"]).reshape(B, 1, Hkv, D), cos, sin)
+        v = (xn @ ap["wv"]).reshape(B, 1, Hkv, D)
+        # token-sized in-place writes into the stacked carry
+        K = jax.lax.dynamic_update_slice(
+            K, k[None], (i, 0, slot, 0, 0))
+        V = jax.lax.dynamic_update_slice(
+            V, v[None], (i, 0, slot, 0, 0))
+        k_layer = jax.lax.dynamic_index_in_dim(K, i, 0, keepdims=False)
+        v_layer = jax.lax.dynamic_index_in_dim(V, i, 0, keepdims=False)
+        out = _grouped_attention(q, k_layer, v_layer, mask)
+        x = x + out.reshape(B, 1, H * D) @ ap["wo"]
+        x = x + swiglu(rms_norm(x, layer["mlp_norm"], cfg.norm_eps),
+                       layer["w_gate"], layer["w_up"], layer["w_down"])
+        return (x, K, V), None
+
+    (h, K, V), _ = jax.lax.scan(
+        scan_fn, (h, K, V),
+        (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    new_cache = {"k": K, "v": V, "idx": idx + 1}
+    return _logits(params, cfg, h)[:, 0], new_cache

@@ -1,0 +1,204 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): Mamba2 backbone with a single
+weight-SHARED attention block applied every ``attn_every`` layers.
+
+The shared block consumes concat(hidden, original embedding) (2d -> d input
+projection, as in Zamba) so late applications retain access to the raw token
+signal; its KV cache is per-APPLICATION (n_apps = n_layers // attn_every),
+since each application sees different activations.
+
+Layer stack = outer python loop over n_apps groups; each group is an inner
+``lax.scan`` over ``attn_every`` stacked Mamba2 layers followed by the shared
+attention. Keeps HLO compact for the 54-layer config.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (gqa_decode_step, gqa_forward, gqa_prefill,
+                        init_gqa_params)
+from .common import (ArchConfig, KeyGen, Params, dense_init, embed_init,
+                     rms_norm, stack_layer_params, swiglu)
+from .mamba2 import (init_mamba_params, init_mamba_state, mamba_decode_step,
+                     mamba_forward, n_ssm_heads)
+
+
+def n_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_mamba_layer(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "mamba": init_mamba_params(kg, cfg, dtype),
+    }
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+    kg = KeyGen(rng)
+    shared = {
+        "w_in": dense_init(kg(), (2 * cfg.d_model, cfg.d_model), dtype),
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_gqa_params(kg, cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "w_gate": dense_init(kg(), (cfg.d_model, cfg.d_ff), dtype),
+        "w_up": dense_init(kg(), (cfg.d_model, cfg.d_ff), dtype),
+        "w_down": dense_init(kg(), (cfg.d_ff, cfg.d_model), dtype),
+    }
+    layers = stack_layer_params(
+        functools.partial(init_mamba_layer, cfg=cfg, dtype=dtype),
+        cfg.n_layers, kg)
+    # reshape to (n_apps, attn_every, ...) for the grouped scan
+    layers = jax.tree.map(
+        lambda a: a.reshape((n_apps(cfg), cfg.attn_every) + a.shape[1:]),
+        layers)
+    return {
+        "embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dtype),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(kg(), (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    conv, ssm = init_mamba_state(cfg, batch, dtype)
+    A = n_apps(cfg)
+    M = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+    Hkv, D = cfg.n_kv_heads, cfg.hd()
+    return {
+        "conv": jnp.broadcast_to(conv, (cfg.n_layers,) + conv.shape).reshape(
+            (A, cfg.attn_every) + conv.shape),
+        "ssm": jnp.broadcast_to(ssm, (cfg.n_layers,) + ssm.shape).reshape(
+            (A, cfg.attn_every) + ssm.shape),
+        "k": jnp.zeros((A, batch, M, Hkv, D), dtype),
+        "v": jnp.zeros((A, batch, M, Hkv, D), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _mamba_group_fwd(group_layers: Dict, cfg: ArchConfig, h: jnp.ndarray,
+                     conv_g, ssm_g, remat: bool):
+    """Inner scan over ``attn_every`` stacked mamba layers."""
+
+    from .runtime_flags import constrain_residual
+
+    def scan_fn(x, layer_state):
+        layer, conv, ssm = layer_state
+        y, nconv, nssm = mamba_forward(
+            layer["mamba"], cfg, rms_norm(x, layer["norm"], cfg.norm_eps),
+            conv, ssm)
+        return constrain_residual(x + y), (nconv, nssm)
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn)
+    return jax.lax.scan(scan_fn, h, (group_layers, conv_g, ssm_g))
+
+
+def _shared_attn(params: Params, cfg: ArchConfig, h: jnp.ndarray,
+                 h0: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    sh = params["shared"]
+    x = jnp.concatenate([h, h0], axis=-1) @ sh["w_in"]
+    x = x + gqa_forward(sh["attn"], cfg,
+                        rms_norm(x, sh["attn_norm"], cfg.norm_eps), positions)
+    x = x + swiglu(rms_norm(x, sh["mlp_norm"], cfg.norm_eps),
+                   sh["w_gate"], sh["w_up"], sh["w_down"])
+    return h + x
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True) -> jnp.ndarray:
+    h = params["embed"][tokens]
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    h0 = h
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    conv, ssm = init_mamba_state(cfg, B, h.dtype)
+    for g in range(n_apps(cfg)):
+        group = jax.tree.map(lambda a: a[g], params["layers"])
+        conv_g = jnp.broadcast_to(conv, (cfg.attn_every,) + conv.shape)
+        ssm_g = jnp.broadcast_to(ssm, (cfg.attn_every,) + ssm.shape)
+        h, _ = _mamba_group_fwd(group, cfg, h, conv_g, ssm_g, remat)
+        h = _shared_attn(params, cfg, h, h0, positions)
+    logits = rms_norm(h, params["final_norm"], cfg.norm_eps) @ params["unembed"]
+    return logits
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray, cache: Dict,
+            embeds: Optional[jnp.ndarray] = None, remat: bool = True):
+    h = params["embed"][tokens]
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    h0 = h
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    convs, ssms, ks, vs = [], [], [], []
+    sh = params["shared"]
+    for g in range(n_apps(cfg)):
+        group = jax.tree.map(lambda a: a[g], params["layers"])
+        h, (nconv, nssm) = _mamba_group_fwd(group, cfg, h,
+                                            cache["conv"][g], cache["ssm"][g],
+                                            remat)
+        convs.append(nconv)
+        ssms.append(nssm)
+        x = jnp.concatenate([h, h0], axis=-1) @ sh["w_in"]
+        attn_out, nk, nv = gqa_prefill(
+            cache["k"][g], cache["v"][g], sh["attn"], cfg,
+            rms_norm(x, sh["attn_norm"], cfg.norm_eps), positions)
+        x = x + attn_out
+        x = x + swiglu(rms_norm(x, sh["mlp_norm"], cfg.norm_eps),
+                       sh["w_gate"], sh["w_up"], sh["w_down"])
+        h = h + x
+        ks.append(nk)
+        vs.append(nv)
+    new_cache = {"conv": jnp.stack(convs), "ssm": jnp.stack(ssms),
+                 "k": jnp.stack(ks), "v": jnp.stack(vs),
+                 "idx": jnp.asarray(S, jnp.int32)}
+    logits = (rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+              @ params["unembed"])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                cache: Dict):
+    h = params["embed"][tokens]
+    h0 = h
+    idx = cache["idx"]
+    sh = params["shared"]
+    convs, ssms, ks, vs = [], [], [], []
+    for g in range(n_apps(cfg)):
+        group = jax.tree.map(lambda a: a[g], params["layers"])
+
+        def scan_fn(x, layer_state):
+            layer, conv, ssm = layer_state
+            y, nconv, nssm = mamba_decode_step(
+                layer["mamba"], cfg, rms_norm(x, layer["norm"], cfg.norm_eps),
+                conv, ssm)
+            return x + y, (nconv, nssm)
+
+        h, (nconv, nssm) = jax.lax.scan(
+            scan_fn, h, (group, cache["conv"][g], cache["ssm"][g]))
+        convs.append(nconv)
+        ssms.append(nssm)
+        x = jnp.concatenate([h, h0], axis=-1) @ sh["w_in"]
+        attn_out, nk, nv = gqa_decode_step(
+            cache["k"][g], cache["v"][g], idx, sh["attn"], cfg,
+            rms_norm(x, sh["attn_norm"], cfg.norm_eps))
+        x = x + attn_out
+        x = x + swiglu(rms_norm(x, sh["mlp_norm"], cfg.norm_eps),
+                       sh["w_gate"], sh["w_up"], sh["w_down"])
+        h = h + x
+        ks.append(nk)
+        vs.append(nv)
+    new_cache = {"conv": jnp.stack(convs), "ssm": jnp.stack(ssms),
+                 "k": jnp.stack(ks), "v": jnp.stack(vs), "idx": idx + 1}
+    logits = (rms_norm(h, params["final_norm"], cfg.norm_eps)
+              @ params["unembed"])[:, 0]
+    return logits, new_cache

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD — state-space duality) blocks, used by zamba2-2.7b.
+
+TPU adaptation (see DESIGN.md §3): instead of the GPU implementation's
+hardware-aware parallel scan over time (warp-level primitives), we use the
+paper's own *chunked SSD* formulation — intra-chunk work becomes MXU-friendly
+(L x L) matmuls and inter-chunk state passing is a short ``lax.scan`` over
+S / L carries. This is the canonical TPU-native mapping of the algorithm.
+
+Recurrence (per head h, head_dim P, state N):
+  a_t   = exp(dt_t * A)                       (scalar decay per head/step)
+  state = a_t * state + dt_t * x_t  (x)  B_t   -> (P, N)
+  y_t   = state @ C_t + D * x_t
+
+Chunked with chunk length L and within-chunk cumulated log-decay c_i:
+  intra: Y[i] = sum_{j<=i} exp(c_i - c_j) (C_i . B_j) dt_j x_j
+  state: S_c  = sum_j exp(c_L - c_j) dt_j x_j (x) B_j
+  inter: H_c  = exp(c_L) H_{c-1} + S_c ;  Y[i] += exp(c_i) (C_i . H_{c-1})
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, KeyGen, dense_init, rms_norm
+
+CHUNK = 128  # SSD chunk length (MXU-aligned)
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg: ArchConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def init_mamba_params(kg: KeyGen, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    di = d_inner(cfg)
+    H, N = n_ssm_heads(cfg), cfg.ssm_state
+    conv_dim = di + 2 * N  # x, B, C go through the causal conv
+    return {
+        # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+        "w_in": dense_init(kg(), (d, 2 * di + 2 * N + H), dtype),
+        "conv_w": dense_init(kg(), (cfg.ssm_conv, conv_dim), dtype,
+                             scale=cfg.ssm_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(kg(), (H,), jnp.float32) *
+                    (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3)))
+        ).astype(dtype),
+        "gate_norm": jnp.ones((di,), dtype),
+        "w_out": dense_init(kg(), (di, d), dtype),
+    }
+
+
+def _split_in(proj: jnp.ndarray, cfg: ArchConfig):
+    di = d_inner(cfg)
+    H, N = n_ssm_heads(cfg), cfg.ssm_state
+    z = proj[..., :di]
+    x = proj[..., di:2 * di]
+    B = proj[..., 2 * di:2 * di + N]
+    C = proj[..., 2 * di + N:2 * di + 2 * N]
+    dt = proj[..., 2 * di + 2 * N:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(seq: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time. seq: (B,S,Cd); prev: (B,K-1,Cd)
+    carry-in from the previous segment. Returns (out, new carry)."""
+    K = w.shape[0]
+    full = jnp.concatenate([prev, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i] for i in range(K))
+    new_prev = full[:, full.shape[1] - (K - 1):]
+    return jax.nn.silu(out + b), new_prev
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                state0: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. x: (Bt,S,H,P), dt: (Bt,S,H), A: (H,) negative,
+    B/C: (Bt,S,N) (single group broadcast over heads), state0: (Bt,H,P,N).
+    Returns (y (Bt,S,H,P), final state)."""
+    Bt, S, H, P = x.shape
+    N = B.shape[-1]
+    L = min(CHUNK, S)
+    S_in = S
+    if S % L:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input leave the
+        # recurrence untouched; padded outputs are sliced off below.
+        pad = L - S % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // L
+
+    xr = x.reshape(Bt, nc, L, H, P)
+    dtr = dt.reshape(Bt, nc, L, H)
+    Br = B.reshape(Bt, nc, L, N)
+    Cr = C.reshape(Bt, nc, L, N)
+
+    loga = dtr * A  # (Bt,nc,L,H), <= 0
+    cum = jnp.cumsum(loga, axis=2)                      # within-chunk cumsum
+    total = cum[:, :, -1]                                # (Bt,nc,H)
+
+    # intra-chunk: M[i,j] = exp(cum_i - cum_j) * (C_i . B_j) * dt_j, j <= i
+    scores = jnp.einsum("bcln,bcmn->bclm", Cr, Br)       # (Bt,nc,L,L)
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (Bt,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(mask[None, None, :, :, None],
+                  jnp.exp(decay), 0.0) * scores[..., None]
+    y = jnp.einsum("bclmh,bcmh,bcmhp->bclhp", M, dtr, xr)
+
+    # chunk summaries: S_c = sum_j exp(total - cum_j) dt_j x_j (x) B_j
+    w_j = jnp.exp(total[:, :, None] - cum) * dtr          # (Bt,nc,L,H)
+    chunk_states = jnp.einsum("bclh,bclhp,bcln->bchpn", w_j, xr, Br)
+
+    # inter-chunk scan over carries
+    def scan_fn(h_prev, inp):
+        tot_c, s_c = inp                                  # (Bt,H), (Bt,H,P,N)
+        h_new = jnp.exp(tot_c)[..., None, None] * h_prev + s_c
+        return h_new, h_prev                              # emit state BEFORE
+
+    tot_t = jnp.moveaxis(total, 1, 0)                     # (nc,Bt,H)
+    st_t = jnp.moveaxis(chunk_states, 1, 0).astype(jnp.float32)
+    final_state, h_before = jax.lax.scan(
+        scan_fn, state0.astype(jnp.float32), (tot_t, st_t))
+    h_before = jnp.moveaxis(h_before, 0, 1)               # (Bt,nc,H,P,N)
+
+    # inter-chunk contribution: y[i] += exp(cum_i) * C_i . H_{c-1}
+    y = y + jnp.einsum("bclh,bcln,bchpn->bclhp",
+                       jnp.exp(cum), Cr, h_before)
+    y = y + D[None, None, :, None] * xr
+    return y.reshape(Bt, S, H, P)[:, :S_in], final_state
+
+
+def mamba_forward(params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                  conv_state: jnp.ndarray, ssm_state: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence Mamba2 block. x: (B,S,d).
+    conv_state: (B,K-1,conv_dim); ssm_state: (B,H,P,N)."""
+    Bt, S, _ = x.shape
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    proj = x @ params["w_in"]
+    z, xs, Bmat, Cmat, dt = _split_in(proj, cfg)
+    conv_in = jnp.concatenate([xs, Bmat, Cmat], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], conv_state)
+    di = d_inner(cfg)
+    xs = conv_out[..., :di].reshape(Bt, S, H, P)
+    Bmat = conv_out[..., di:di + N]
+    Cmat = conv_out[..., di + N:]
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_ssm = ssd_chunked(xs, dt, A, Bmat, Cmat, params["D"], ssm_state)
+    y = y.reshape(Bt, S, di).astype(x.dtype)
+    new_ssm = new_ssm.astype(ssm_state.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return y @ params["w_out"], new_conv, new_ssm
+
+
+def mamba_decode_step(params: Dict, cfg: ArchConfig, x: jnp.ndarray,
+                      conv_state: jnp.ndarray, ssm_state: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token state update. x: (B,1,d)."""
+    Bt = x.shape[0]
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    di = d_inner(cfg)
+    proj = x @ params["w_in"]
+    z, xs, Bmat, Cmat, dt = _split_in(proj, cfg)
+    conv_in = jnp.concatenate([xs, Bmat, Cmat], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], conv_state)
+    xs = conv_out[:, 0, :di].reshape(Bt, H, P)
+    Bv = conv_out[:, 0, di:di + N]
+    Cv = conv_out[:, 0, di + N:]
+    dtv = jax.nn.softplus(dt[:, 0] + params["dt_bias"])          # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dtv * A)                                          # (B,H)
+    upd = (dtv[..., None] * xs)[..., None] * Bv[:, None, None, :]
+    new_ssm = (a[..., None, None] * ssm_state + upd).astype(ssm_state.dtype)
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cv)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(Bt, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    return y @ params["w_out"], new_conv, new_ssm
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype):
+    H, P, N = n_ssm_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = d_inner(cfg) + 2 * N
+    return (jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+            jnp.zeros((batch, H, P, N), dtype))

@@ -1,0 +1,313 @@
+"""Mixture-of-Experts models: kimi-k2 (GQA attn, 384 routed experts top-8)
+and deepseek-v2 (MLA attention, 2 shared + 160 routed top-6).
+
+Dispatch is the GShard/Switch grouped-capacity formulation: tokens are split
+into groups of ``MOE_GROUP`` and routed with a per-group capacity
+``C = ceil(top_k * group * capacity_factor / E)``. The dispatch/combine
+einsums contract a (G, S, E, C) one-hot against token activations — under a
+mesh with experts sharded on the "model" axis and groups on "data", XLA GSPMD
+lowers these einsums to all-to-all collectives (verified in the dry-run HLO;
+this is the collective the roofline analysis attributes to MoE).
+
+Overflow tokens beyond capacity are dropped (their combine weight is zero and
+the residual path carries them) — standard for capacity-based routing.
+
+Layer 0 is a dense-FFN layer (both source models do this: "first_k_dense=1"),
+handled outside the scanned MoE stack.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dense as dense_model
+from .attention import (gqa_decode_step, gqa_forward, gqa_prefill,
+                        init_gqa_params, init_kv_cache, init_mla_cache,
+                        init_mla_params, mla_decode_step, mla_forward,
+                        mla_prefill)
+from .common import (ArchConfig, KeyGen, Params, dense_init, embed_init,
+                     rms_norm, stack_layer_params, swiglu)
+
+MOE_GROUP = 512  # tokens per routing group (GShard's G axis); see DESIGN.md
+
+
+# ------------------------------------------------------------------ routing
+def _capacity(cfg: ArchConfig, group: int) -> int:
+    import math
+    return max(1, math.ceil(cfg.top_k * group * cfg.capacity_factor /
+                            cfg.n_experts))
+
+
+def route(router_w: jnp.ndarray, x: jnp.ndarray, cfg: ArchConfig,
+          capacity: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compute dispatch/combine tensors for grouped tokens.
+
+    x: (G, S, d). Returns (dispatch (G,S,E,C) in x.dtype, combine same,
+    aux_loss scalar)."""
+    G, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("gsd,de->gse", x, router_w.astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)                      # (G,S,K)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)       # renormalize
+
+    # Switch-style load-balance auxiliary loss: E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(jax.nn.one_hot(topi[..., 0], E), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    dispatch = jnp.zeros((G, S, E, capacity), x.dtype)
+    combine = jnp.zeros((G, S, E, capacity), x.dtype)
+    # occupancy counter per expert, accumulated across the K choices
+    counts = jnp.zeros((G, E), jnp.int32)
+    for j in range(K):
+        onehot = jax.nn.one_hot(topi[..., j], E, dtype=jnp.int32)  # (G,S,E)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + counts[:, None, :]
+        keep = (pos < capacity) & (onehot > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                                dtype=x.dtype)                 # OOB -> zeros
+        sel = (onehot * keep).astype(x.dtype)[..., None] * pos_oh
+        dispatch = dispatch + sel
+        combine = combine + sel * topw[..., j, None, None].astype(x.dtype)
+        counts = counts + jnp.sum(onehot * keep, axis=1)
+    return dispatch, combine, aux
+
+
+def moe_ffn(block: Dict, cfg: ArchConfig, x: jnp.ndarray
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """MoE feed-forward over (B, S, d) activations. Returns (out, aux)."""
+    from .runtime_flags import FLAGS, constrain
+    B, S, d = x.shape
+    N = B * S
+    group = min(FLAGS.moe_group or MOE_GROUP, N)
+    G = N // group
+    rem = N - G * group  # guard: pad to a multiple of the group size
+    xt = x.reshape(N, d)
+    if rem:
+        xt = jnp.pad(xt, ((0, group - rem), (0, 0)))
+        G += 1
+    xg = xt.reshape(G, group, d)
+    C = _capacity(cfg, group)
+    dispatch, combine, aux = route(block["router"], xg, cfg, C)
+    # §Perf lever: shard the routing one-hots' E dim over "model" so the
+    # expert input is BORN expert-sharded (replaces the exp_in all-to-all
+    # with a much smaller all-gather of x over the model axis)
+    dispatch = constrain(dispatch, FLAGS.dispatch_spec)
+    combine = constrain(combine, FLAGS.dispatch_spec)
+    # (G,S,E,C) x (G,S,d) -> (E,G,C,d): the all-to-all under expert sharding
+    exp_in = jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+    # §Perf lever: pin the expert-parallel boundary (E->model, G->data)
+    exp_in = constrain(exp_in, FLAGS.exp_in_spec)
+    h = jnp.einsum("egcd,edf->egcf", exp_in, block["w_gate"])
+    u = jnp.einsum("egcd,edf->egcf", exp_in, block["w_up"])
+    h = jax.nn.silu(h) * u
+    exp_out = jnp.einsum("egcf,efd->egcd", h, block["w_down"])
+    y = jnp.einsum("gsec,egcd->gsd", combine, exp_out)
+    y = y.reshape(-1, d)[:N].reshape(B, S, d)
+    if cfg.n_shared_experts:
+        y = y + swiglu(x, block["sw_gate"], block["sw_up"], block["sw_down"])
+    return y, aux
+
+
+# ------------------------------------------------------------------- params
+def init_moe_block(kg: KeyGen, cfg: ArchConfig, dtype) -> Dict:
+    d, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    block = {
+        "router": dense_init(kg(), (d, E), jnp.float32),  # router in f32
+        "w_gate": dense_init(kg(), (E, d, F), dtype),
+        "w_up": dense_init(kg(), (E, d, F), dtype),
+        "w_down": dense_init(kg(), (E, F, d), dtype,
+                             scale=F ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.d_ff_expert * cfg.n_shared_experts
+        block["sw_gate"] = dense_init(kg(), (d, Fs), dtype)
+        block["sw_up"] = dense_init(kg(), (d, Fs), dtype)
+        block["sw_down"] = dense_init(kg(), (Fs, d), dtype)
+    return block
+
+
+def _init_attn(kg: KeyGen, cfg: ArchConfig, dtype) -> Dict:
+    if cfg.use_mla:
+        return init_mla_params(kg, cfg, dtype)
+    return init_gqa_params(kg, cfg, dtype)
+
+
+def init_layer(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "attn": _init_attn(kg, cfg, dtype),
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "moe": init_moe_block(kg, cfg, dtype),
+    }
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    cfg.validate()
+    kg = KeyGen(rng)
+    # layer 0: dense FFN (first_k_dense = 1)
+    dense0 = {
+        "attn": _init_attn(kg, cfg, dtype),
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "w_gate": dense_init(kg(), (cfg.d_model, cfg.d_ff), dtype),
+        "w_up": dense_init(kg(), (cfg.d_model, cfg.d_ff), dtype),
+        "w_down": dense_init(kg(), (cfg.d_ff, cfg.d_model), dtype),
+    }
+    return {
+        "embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dtype),
+        "layer0": dense0,
+        "layers": stack_layer_params(
+            functools.partial(init_layer, cfg=cfg, dtype=dtype),
+            cfg.n_layers - 1, kg),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(kg(), (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+# ------------------------------------------------------------------ forward
+def _attn_fwd(layer: Dict, cfg: ArchConfig, x: jnp.ndarray,
+              positions: jnp.ndarray) -> jnp.ndarray:
+    xn = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+    if cfg.use_mla:
+        return mla_forward(layer["attn"], cfg, xn, positions)
+    return gqa_forward(layer["attn"], cfg, xn, positions)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            embeds: Optional[jnp.ndarray] = None, remat: bool = True,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. Returns (logits, aux_loss)."""
+    h = params["embed"][tokens]
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    l0 = params["layer0"]
+    h = h + _attn_fwd(l0, cfg, h, positions)
+    h = h + swiglu(rms_norm(h, l0["mlp_norm"], cfg.norm_eps),
+                   l0["w_gate"], l0["w_up"], l0["w_down"])
+
+    from .runtime_flags import constrain_residual
+
+    def scan_fn(x, layer):
+        x = x + _attn_fwd(layer, cfg, x, positions)
+        y, aux = moe_ffn(layer["moe"], cfg,
+                         rms_norm(x, layer["mlp_norm"], cfg.norm_eps))
+        return constrain_residual(x + y), aux
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn)
+    h, auxes = jax.lax.scan(scan_fn, h, params["layers"])
+    logits = rms_norm(h, params["final_norm"], cfg.norm_eps) @ params["unembed"]
+    return logits, jnp.mean(auxes)
+
+
+# ------------------------------------------------------------------ serving
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    if cfg.use_mla:
+        return init_mla_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+    return init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+
+
+def _split_cache(cache: Dict):
+    """layer-0 slice + stacked remainder of every cache array."""
+    first = {k: v[0] for k, v in cache.items() if k != "idx"}
+    rest = {k: v[1:] for k, v in cache.items() if k != "idx"}
+    return first, rest
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            cache: Dict, embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    h = params["embed"][tokens]
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    c0, crest = _split_cache(cache)
+
+    l0 = params["layer0"]
+    xn = rms_norm(h, l0["attn_norm"], cfg.norm_eps)
+    if cfg.use_mla:
+        attn_out, a0, b0 = mla_prefill(c0["ckv"], c0["krope"], l0["attn"],
+                                       cfg, xn, positions)
+    else:
+        attn_out, a0, b0 = gqa_prefill(c0["k"], c0["v"], l0["attn"], cfg, xn,
+                                       positions)
+    h = h + attn_out
+    h = h + swiglu(rms_norm(h, l0["mlp_norm"], cfg.norm_eps),
+                   l0["w_gate"], l0["w_up"], l0["w_down"])
+
+    def scan_fn(x, layer_kv):
+        layer, ca, cb = layer_kv
+        xn = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        if cfg.use_mla:
+            attn_out, na, nb = mla_prefill(ca, cb, layer["attn"], cfg, xn,
+                                           positions)
+        else:
+            attn_out, na, nb = gqa_prefill(ca, cb, layer["attn"], cfg, xn,
+                                           positions)
+        x = x + attn_out
+        y, _ = moe_ffn(layer["moe"], cfg,
+                       rms_norm(x, layer["mlp_norm"], cfg.norm_eps))
+        return x + y, (na, nb)
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn)
+    names = ("ckv", "krope") if cfg.use_mla else ("k", "v")
+    h, (nas, nbs) = jax.lax.scan(
+        scan_fn, h, (params["layers"], crest[names[0]], crest[names[1]]))
+    new_cache = {
+        names[0]: jnp.concatenate([a0[None], nas], axis=0),
+        names[1]: jnp.concatenate([b0[None], nbs], axis=0),
+        "idx": jnp.asarray(S, jnp.int32),
+    }
+    logits = (rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+              @ params["unembed"])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                cache: Dict) -> Tuple[jnp.ndarray, Dict]:
+    h = params["embed"][tokens]
+    idx = cache["idx"]
+    c0, crest = _split_cache(cache)
+
+    def attn_step(layer, ca, cb, x):
+        xn = rms_norm(x, layer["attn_norm"], cfg.norm_eps)
+        if cfg.use_mla:
+            return mla_decode_step(ca, cb, idx, layer["attn"], cfg, xn)
+        return gqa_decode_step(ca, cb, idx, layer["attn"], cfg, xn)
+
+    l0 = params["layer0"]
+    attn_out, a0, b0 = attn_step(l0, *(
+        (c0["ckv"], c0["krope"]) if cfg.use_mla else (c0["k"], c0["v"])), h)
+    h = h + attn_out
+    h = h + swiglu(rms_norm(h, l0["mlp_norm"], cfg.norm_eps),
+                   l0["w_gate"], l0["w_up"], l0["w_down"])
+
+    def scan_fn(x, layer_kv):
+        layer, ca, cb = layer_kv
+        attn_out, na, nb = attn_step(layer, ca, cb, x)
+        x = x + attn_out
+        y, _ = moe_ffn(layer["moe"], cfg,
+                       rms_norm(x, layer["mlp_norm"], cfg.norm_eps))
+        return x + y, (na, nb)
+
+    names = ("ckv", "krope") if cfg.use_mla else ("k", "v")
+    h, (nas, nbs) = jax.lax.scan(
+        scan_fn, h, (params["layers"], crest[names[0]], crest[names[1]]))
+    new_cache = {
+        names[0]: jnp.concatenate([a0[None], nas], axis=0),
+        names[1]: jnp.concatenate([b0[None], nbs], axis=0),
+        "idx": idx + 1,
+    }
+    logits = (rms_norm(h, params["final_norm"], cfg.norm_eps)
+              @ params["unembed"])[:, 0]
+    return logits, new_cache

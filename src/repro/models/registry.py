@@ -1,0 +1,90 @@
+"""Uniform model API over every architecture family.
+
+Each family adapter exposes:
+  init_params(rng, cfg, dtype)                     -> params
+  forward(params, cfg, tokens, embeds=None, remat) -> (logits, aux_loss)
+  init_cache(cfg, batch, max_len, dtype)           -> cache pytree
+  prefill(params, cfg, tokens, cache, embeds=None) -> (last logits, cache)
+  decode_step(params, cfg, tokens, cache)          -> (logits, cache)
+
+`embeds` carries stub-frontend context (VLM patches / audio frames).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from . import dense, encdec, hybrid, moe, rwkv6, vlm
+from .common import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    forward: Callable          # -> (logits, aux)
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+    needs_embeds: bool = False  # stub frontend supplies `embeds`
+    has_decode: bool = True
+
+
+def _wrap_no_aux(fwd):
+    def f(params, cfg, tokens, embeds=None, remat=True):
+        return fwd(params, cfg, tokens, embeds=embeds, remat=remat), jnp.zeros(
+            (), jnp.float32)
+    return f
+
+
+def _rwkv_forward(params, cfg, tokens, embeds=None, remat=True):
+    assert embeds is None
+    return rwkv6.forward(params, cfg, tokens, remat=remat), jnp.zeros(
+        (), jnp.float32)
+
+
+def _rwkv_cache(cfg, batch, max_len, dtype=jnp.float32):
+    del max_len  # O(1) state — the whole point of rwkv at long context
+    return rwkv6.init_state(cfg, batch, dtype)
+
+
+def _rwkv_prefill(params, cfg, tokens, cache, embeds=None, remat=True):
+    assert embeds is None
+    return rwkv6.prefill(params, cfg, tokens, cache, remat=remat)
+
+
+def _encdec_forward(params, cfg, tokens, embeds=None, remat=True):
+    assert embeds is not None, "audio arch needs frame embeddings"
+    return encdec.forward(params, cfg, tokens, embeds, remat=remat), jnp.zeros(
+        (), jnp.float32)
+
+
+def _encdec_cache(cfg, batch, max_len, dtype=jnp.float32):
+    return encdec.init_cache(cfg, batch, max_len, cfg.n_ctx_embeds, dtype)
+
+
+FAMILIES: Dict[str, ModelApi] = {
+    "dense": ModelApi(dense.init_params, _wrap_no_aux(dense.forward),
+                      dense.init_cache, dense.prefill, dense.decode_step),
+    "moe": ModelApi(moe.init_params,
+                    lambda p, c, t, embeds=None, remat=True: moe.forward(
+                        p, c, t, embeds=embeds, remat=remat),
+                    moe.init_cache, moe.prefill, moe.decode_step),
+    "ssm": ModelApi(rwkv6.init_params, _rwkv_forward, _rwkv_cache,
+                    _rwkv_prefill, rwkv6.decode_step),
+    "hybrid": ModelApi(hybrid.init_params, _wrap_no_aux(hybrid.forward),
+                       hybrid.init_cache, hybrid.prefill, hybrid.decode_step),
+    "audio": ModelApi(encdec.init_params, _encdec_forward, _encdec_cache,
+                      encdec.prefill, encdec.decode_step, needs_embeds=True),
+    "vlm": ModelApi(vlm.init_params, _wrap_no_aux(vlm.forward),
+                    vlm.init_cache, vlm.prefill, vlm.decode_step,
+                    needs_embeds=True),
+}
+
+
+def get_api(cfg: ArchConfig) -> ModelApi:
+    try:
+        return FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r} for {cfg.name}")

@@ -1,0 +1,86 @@
+"""Runtime performance flags (the §Perf hillclimb levers).
+
+All default OFF so the paper-faithful / baseline path is unchanged; the
+dry-run's --opt mode (and real launches) enable them. Flags are process-
+global with a context manager so jitted closures pick them up at trace
+time.
+
+Levers:
+  * seq_parallel_spec: PartitionSpec applied to the residual stream between
+    layers (sequence parallelism — Korthikanti et al. adapted to GSPMD).
+    Baseline GSPMD keeps the (B, S, d) carry replicated over "model", so
+    the per-layer saved activations for backward are ~n_layers * B*S*d per
+    device — over HBM for the 123B config. Constraining S onto "model"
+    cuts that by the model-axis size for one extra all-gather per layer.
+  * attn_chunk: KV-block size for chunked (online-softmax) attention in
+    pure JAX. Kills the S^2 score materialization (the memory-term killer
+    at 32k prefill); the XLA-level equivalent of the Pallas flash kernel,
+    used where Mosaic isn't available (CPU dry-run) or as the lowering the
+    TPU kernel replaces.
+  * moe_group: routing group size (GShard G axis); smaller groups shrink
+    the (G,S,E,C) dispatch one-hots at slightly higher drop risk.
+  * exp_in_spec: sharding constraint for the MoE expert input tensor
+    (E,G,C,d) — forces the all-to-all boundary instead of leaving GSPMD to
+    choose (it sometimes all-gathers).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class PerfFlags:
+    seq_parallel_spec: Optional[Any] = None    # PartitionSpec or None
+    attn_chunk: int = 0                        # 0 = full S^2 attention
+    moe_group: int = 512
+    exp_in_spec: Optional[Any] = None
+    dispatch_spec: Optional[Any] = None        # (G,S,E,C) routing one-hots
+    decode_inplace: bool = False               # carry-cache decode variant
+    mesh: Optional[Any] = None                 # Mesh for NamedSharding
+    accum_steps: int = 1                       # grad-accum microbatching
+
+
+FLAGS = PerfFlags()
+
+
+@contextlib.contextmanager
+def perf_flags(**kw):
+    global FLAGS
+    old = dataclasses.replace(FLAGS)
+    for k, v in kw.items():
+        setattr(FLAGS, k, v)
+    try:
+        yield FLAGS
+    finally:
+        FLAGS = old
+
+
+def constrain(x, spec):
+    """Sharding constraint; requires FLAGS.mesh (explicit NamedSharding —
+    a bare PartitionSpec under `with mesh:` silently no-ops, which cost us
+    a §Perf iteration to discover; see EXPERIMENTS.md)."""
+    if spec is None or FLAGS.mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    # drop axis entries for dims that don't divide (mirrors rules._divisible)
+    import numpy as np
+    fixed = []
+    for dim, ax in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([FLAGS.mesh.shape[a] for a in axes]))
+        fixed.append(ax if dim % size == 0 else None)
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(FLAGS.mesh, P(*fixed)))
+
+
+def constrain_residual(x):
+    """Apply the sequence-parallel constraint to a (B, S, d) carry."""
+    return constrain(x, FLAGS.seq_parallel_spec)

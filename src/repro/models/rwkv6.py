@@ -1,0 +1,232 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Per layer: a time-mixing block (the WKV linear-attention recurrence with
+per-channel dynamic decay w_t produced by a LoRA of the shifted input) and a
+channel-mixing block (squared-ReLU FFN with token shift). Decode state is
+O(1) in sequence length — (head, d_k, d_v) matrix per layer plus the last
+token for the shifts — which is why rwkv6 runs `long_500k` natively.
+
+WKV recurrence per head (d_k = d_v = head size):
+  out_t = r_t . (S + u (*) k_t v_t^T)
+  S     = diag(w_t) S + k_t v_t^T
+
+Training/prefill uses a time ``lax.scan`` (the recurrence is inherently
+sequential in w_t; the chunked form is a beyond-paper perf option tracked in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, KeyGen, Params, dense_init, embed_init, rms_norm
+
+LORA_R = 32          # decay/mix LoRA rank
+MIX_KEYS = ("r", "k", "v", "w", "g")
+
+
+def head_size(cfg: ArchConfig) -> int:
+    return cfg.hd()
+
+
+def n_rwkv_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // head_size(cfg)
+
+
+def init_time_mix(kg: KeyGen, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    H, K = n_rwkv_heads(cfg), head_size(cfg)
+    p = {
+        "mu_base": jax.random.uniform(kg(), (d,), jnp.float32).astype(dtype),
+        "w0": jnp.zeros((d,), dtype),
+        "w_lora_a": dense_init(kg(), (d, LORA_R * 2), dtype),
+        "w_lora_b": dense_init(kg(), (LORA_R * 2, d), dtype, scale=0.01),
+        "u": dense_init(kg(), (H, K), jnp.float32).astype(dtype),  # bonus
+        "wr": dense_init(kg(), (d, d), dtype),
+        "wk": dense_init(kg(), (d, d), dtype),
+        "wv": dense_init(kg(), (d, d), dtype),
+        "wg": dense_init(kg(), (d, d), dtype),
+        "wo": dense_init(kg(), (d, d), dtype),
+        "ln_scale": jnp.ones((d,), dtype),
+    }
+    for name in MIX_KEYS:
+        p[f"mu_{name}"] = jax.random.uniform(kg(), (d,),
+                                             jnp.float32).astype(dtype)
+        p[f"mix_a_{name}"] = dense_init(kg(), (d, LORA_R), dtype)
+        p[f"mix_b_{name}"] = dense_init(kg(), (LORA_R, d), dtype, scale=0.01)
+    return p
+
+
+def init_channel_mix(kg: KeyGen, cfg: ArchConfig, dtype) -> Dict:
+    d = cfg.d_model
+    return {
+        "mu_k": jax.random.uniform(kg(), (d,), jnp.float32).astype(dtype),
+        "mu_r": jax.random.uniform(kg(), (d,), jnp.float32).astype(dtype),
+        "wk": dense_init(kg(), (d, cfg.d_ff), dtype),
+        "wv": dense_init(kg(), (cfg.d_ff, d), dtype),
+        "wr": dense_init(kg(), (d, d), dtype),
+    }
+
+
+def _ddlerp(p: Dict, name: str, x: jnp.ndarray,
+            x_prev: jnp.ndarray) -> jnp.ndarray:
+    """RWKV6 data-dependent lerp between x and the shifted x_prev."""
+    dx = x_prev - x
+    xx = x + dx * p["mu_base"]
+    lora = jnp.tanh(xx @ p[f"mix_a_{name}"]) @ p[f"mix_b_{name}"]
+    return x + dx * (p[f"mu_{name}"] + lora)
+
+
+def _shift(x: jnp.ndarray, last: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: previous token's activation ((B,S,d), carry (B,d))."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray, last: jnp.ndarray,
+             wkv_state: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d), last: (B,d) previous token, wkv_state: (B,H,K,K).
+    Returns (out, new last, new wkv_state)."""
+    B, S, d = x.shape
+    H, K = n_rwkv_heads(cfg), head_size(cfg)
+    xp = _shift(x, last)
+    r = _ddlerp(p, "r", x, xp) @ p["wr"]
+    k = _ddlerp(p, "k", x, xp) @ p["wk"]
+    v = _ddlerp(p, "v", x, xp) @ p["wv"]
+    g = _ddlerp(p, "g", x, xp) @ p["wg"]
+    # dynamic decay: w_t = exp(-exp(w0 + lora_w)) in (0, 1), per channel
+    wl = (jnp.tanh(_ddlerp(p, "w", x, xp) @ p["w_lora_a"][:, :LORA_R])
+          @ p["w_lora_b"][:LORA_R])
+    logw = -jnp.exp(jnp.clip(p["w0"] + wl, -10.0, 5.0))
+    w = jnp.exp(logw)                                      # (B,S,d)
+
+    rh = r.reshape(B, S, H, K)
+    kh = k.reshape(B, S, H, K)
+    vh = v.reshape(B, S, H, K)
+    wh = w.reshape(B, S, H, K)
+
+    def scan_fn(state, inp):
+        rt, kt, vt, wt = inp                               # (B,H,K) each
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,K,K)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, state + p["u"][..., None] * kv)
+        new_state = wt[..., :, None] * state + kv
+        return new_state, out
+
+    inp = tuple(jnp.moveaxis(a, 1, 0) for a in (rh, kh, vh, wh))
+    new_state, outs = jax.lax.scan(scan_fn, wkv_state, inp)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, d)
+    out = rms_norm(out, p["ln_scale"], cfg.norm_eps)       # per-head GN approx
+    out = out * jax.nn.silu(g)
+    return out @ p["wo"], x[:, -1], new_state
+
+
+def channel_mix(p: Dict, cfg: ArchConfig, x: jnp.ndarray, last: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xp = _shift(x, last)
+    xk = x + (xp - x) * p["mu_k"]
+    xr = x + (xp - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1]
+
+
+def init_layer(key: jax.Array, cfg: ArchConfig, dtype) -> Dict:
+    kg = KeyGen(key)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "tm": init_time_mix(kg, cfg, dtype),
+        "cm": init_channel_mix(kg, cfg, dtype),
+    }
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    kg = KeyGen(rng)
+    from .common import stack_layer_params
+    import functools
+    return {
+        "embed": embed_init(kg(), (cfg.vocab, cfg.d_model), dtype),
+        "ln_in": jnp.ones((cfg.d_model,), dtype),
+        "layers": stack_layer_params(
+            functools.partial(init_layer, cfg=cfg, dtype=dtype),
+            cfg.n_layers, kg),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(kg(), (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict:
+    """Recurrent state for all layers (the rwkv 'cache')."""
+    H, K = n_rwkv_heads(cfg), head_size(cfg)
+    L, d = cfg.n_layers, cfg.d_model
+    return {
+        "tm_last": jnp.zeros((L, batch, d), dtype),
+        "cm_last": jnp.zeros((L, batch, d), dtype),
+        "wkv": jnp.zeros((L, batch, H, K, K), dtype),
+        "idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def _block(layer: Dict, cfg: ArchConfig, x: jnp.ndarray, tm_last, cm_last,
+           wkv):
+    a, new_tm_last, new_wkv = time_mix(
+        layer["tm"], cfg, rms_norm(x, layer["ln1"], cfg.norm_eps),
+        tm_last, wkv)
+    x = x + a
+    b, new_cm_last = channel_mix(
+        layer["cm"], cfg, rms_norm(x, layer["ln2"], cfg.norm_eps), cm_last)
+    return x + b, new_tm_last, new_cm_last, new_wkv
+
+
+def forward_with_state(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                       state: Dict, remat: bool = True):
+    """Full-sequence forward threading recurrent state (train & prefill).
+
+    NOTE on shifts: state's tm_last/cm_last hold the *normalized* previous
+    activation per layer (what the shift consumes)."""
+    h = rms_norm(params["embed"][tokens], params["ln_in"], cfg.norm_eps)
+
+    def scan_fn(x, layer_state):
+        layer, tm_last, cm_last, wkv = layer_state
+        ln1 = rms_norm(x, layer["ln1"], cfg.norm_eps)
+        a, _, new_wkv = time_mix(layer["tm"], cfg, ln1, tm_last, wkv)
+        new_tm_last = ln1[:, -1]
+        x = x + a
+        ln2 = rms_norm(x, layer["ln2"], cfg.norm_eps)
+        b, _ = channel_mix(layer["cm"], cfg, ln2, cm_last)
+        new_cm_last = ln2[:, -1]
+        from .runtime_flags import constrain_residual
+        return constrain_residual(x + b), (new_tm_last, new_cm_last,
+                                           new_wkv)
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn)
+    h, (tm_lasts, cm_lasts, wkvs) = jax.lax.scan(
+        scan_fn, h,
+        (params["layers"], state["tm_last"], state["cm_last"], state["wkv"]))
+    logits = rms_norm(h, params["final_norm"], cfg.norm_eps) @ params["unembed"]
+    new_state = {"tm_last": tm_lasts, "cm_last": cm_lasts, "wkv": wkvs,
+                 "idx": state["idx"] + tokens.shape[1]}
+    return logits, new_state
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            remat: bool = True) -> jnp.ndarray:
+    state = init_state(cfg, tokens.shape[0], params["embed"].dtype)
+    logits, _ = forward_with_state(params, cfg, tokens, state, remat)
+    return logits
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            state: Dict, remat: bool = True):
+    logits, new_state = forward_with_state(params, cfg, tokens, state, remat)
+    return logits[:, -1], new_state
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                state: Dict):
+    """tokens: (B,1)."""
+    logits, new_state = forward_with_state(params, cfg, tokens, state,
+                                           remat=False)
+    return logits[:, 0], new_state

@@ -1,0 +1,207 @@
+"""Paper-faithful DDPM/DDIM U-Net epsilon-network (Ho et al. 2020 §B;
+DDIM App. D.1): Wide-ResNet blocks + sinusoidal time embedding + self-
+attention at low resolutions, downsample/upsample ladder.
+
+Pure-JAX (lax.conv) implementation with an explicit parameter pytree.
+Channel widths/attention resolutions are configurable so the same code runs
+the CIFAR10-shaped faithful config and tiny CPU smoke variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, Params, dense_init, sinusoidal_time_embedding
+
+
+@dataclasses.dataclass(frozen=True)
+class UNetConfig:
+    in_channels: int = 3
+    base_width: int = 128
+    width_mults: Tuple[int, ...] = (1, 2, 2, 2)   # per resolution level
+    n_res_blocks: int = 2
+    attn_levels: Tuple[int, ...] = (1,)           # levels with self-attention
+    time_dim: int = 512
+    groups: int = 8                               # GroupNorm groups
+
+
+def _conv_init(key, k, cin, cout, dtype, scale=None):
+    fan_in = k * k * cin
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, (k, k, cin, cout),
+                                        jnp.float32) * std).astype(dtype)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC conv with SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               groups: int, eps: float = 1e-5) -> jnp.ndarray:
+    N, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(N, H, W, g, C // g).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(N, H, W, C).astype(x.dtype) * scale + bias
+
+
+def _init_resblock(kg: KeyGen, cin: int, cout: int, time_dim: int,
+                   dtype) -> Dict:
+    p = {
+        "gn1_s": jnp.ones((cin,), dtype), "gn1_b": jnp.zeros((cin,), dtype),
+        "conv1": _conv_init(kg(), 3, cin, cout, dtype),
+        "time_w": dense_init(kg(), (time_dim, cout), dtype),
+        "time_b": jnp.zeros((cout,), dtype),
+        "gn2_s": jnp.ones((cout,), dtype), "gn2_b": jnp.zeros((cout,), dtype),
+        "conv2": _conv_init(kg(), 3, cout, cout, dtype, scale=1e-10),
+    }
+    if cin != cout:
+        p["skip"] = _conv_init(kg(), 1, cin, cout, dtype)
+    return p
+
+
+def _resblock(p: Dict, x: jnp.ndarray, temb: jnp.ndarray,
+              groups: int) -> jnp.ndarray:
+    h = jax.nn.silu(group_norm(x, p["gn1_s"], p["gn1_b"], groups))
+    h = conv2d(h, p["conv1"])
+    h = h + (jax.nn.silu(temb) @ p["time_w"] + p["time_b"])[:, None, None, :]
+    h = jax.nn.silu(group_norm(h, p["gn2_s"], p["gn2_b"], groups))
+    h = conv2d(h, p["conv2"])
+    skip = conv2d(x, p["skip"]) if "skip" in p else x
+    return h + skip
+
+
+def _init_attn(kg: KeyGen, c: int, dtype) -> Dict:
+    return {
+        "gn_s": jnp.ones((c,), dtype), "gn_b": jnp.zeros((c,), dtype),
+        "wq": dense_init(kg(), (c, c), dtype),
+        "wk": dense_init(kg(), (c, c), dtype),
+        "wv": dense_init(kg(), (c, c), dtype),
+        "wo": dense_init(kg(), (c, c), dtype, scale=1e-10),
+    }
+
+
+def _attnblock(p: Dict, x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    N, H, W, C = x.shape
+    h = group_norm(x, p["gn_s"], p["gn_b"], groups).reshape(N, H * W, C)
+    q, k, v = h @ p["wq"], h @ p["wk"], h @ p["wv"]
+    att = jax.nn.softmax(
+        (q @ k.transpose(0, 2, 1)).astype(jnp.float32) / C ** 0.5,
+        axis=-1).astype(x.dtype)
+    out = (att @ v) @ p["wo"]
+    return x + out.reshape(N, H, W, C)
+
+
+def init_params(rng: jax.Array, cfg: UNetConfig,
+                dtype=jnp.float32) -> Params:
+    kg = KeyGen(rng)
+    W0 = cfg.base_width
+    tdim = cfg.time_dim
+    params: Params = {
+        "time_w1": dense_init(kg(), (W0, tdim), dtype),
+        "time_b1": jnp.zeros((tdim,), dtype),
+        "time_w2": dense_init(kg(), (tdim, tdim), dtype),
+        "time_b2": jnp.zeros((tdim,), dtype),
+        "conv_in": _conv_init(kg(), 3, cfg.in_channels, W0, dtype),
+    }
+    widths = [W0 * m for m in cfg.width_mults]
+    # --- down path
+    downs: List[Dict] = []
+    ch = W0
+    skip_chs = [ch]
+    for lvl, w in enumerate(widths):
+        blocks = []
+        for _ in range(cfg.n_res_blocks):
+            blk = {"res": _init_resblock(kg, ch, w, tdim, dtype)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = _init_attn(kg, w, dtype)
+            blocks.append(blk)
+            ch = w
+            skip_chs.append(ch)
+        entry = {"blocks": blocks}
+        if lvl < len(widths) - 1:
+            entry["down"] = _conv_init(kg(), 3, ch, ch, dtype)
+            skip_chs.append(ch)
+        downs.append(entry)
+    params["downs"] = downs
+    # --- middle
+    params["mid_res1"] = _init_resblock(kg, ch, ch, tdim, dtype)
+    params["mid_attn"] = _init_attn(kg, ch, dtype)
+    params["mid_res2"] = _init_resblock(kg, ch, ch, tdim, dtype)
+    # --- up path
+    ups: List[Dict] = []
+    for lvl, w in reversed(list(enumerate(widths))):
+        blocks = []
+        for _ in range(cfg.n_res_blocks + 1):
+            sc = skip_chs.pop()
+            blk = {"res": _init_resblock(kg, ch + sc, w, tdim, dtype)}
+            if lvl in cfg.attn_levels:
+                blk["attn"] = _init_attn(kg, w, dtype)
+            blocks.append(blk)
+            ch = w
+        entry = {"blocks": blocks}
+        if lvl > 0:
+            entry["up"] = _conv_init(kg(), 3, ch, ch, dtype)
+        ups.append(entry)
+    params["ups"] = ups
+    params["gn_out_s"] = jnp.ones((ch,), dtype)
+    params["gn_out_b"] = jnp.zeros((ch,), dtype)
+    params["conv_out"] = _conv_init(kg(), 3, ch, cfg.in_channels, dtype,
+                                    scale=1e-10)
+    return params
+
+
+def forward(params: Params, cfg: UNetConfig, x: jnp.ndarray,
+            t: jnp.ndarray) -> jnp.ndarray:
+    """eps prediction. x: (B,H,W,C) noisy images; t: (B,) int32 in [1,T]."""
+    temb = sinusoidal_time_embedding(t, cfg.base_width)
+    temb = jax.nn.silu(temb.astype(x.dtype) @ params["time_w1"]
+                       + params["time_b1"])
+    temb = temb @ params["time_w2"] + params["time_b2"]
+
+    h = conv2d(x, params["conv_in"])
+    skips = [h]
+    for lvl, entry in enumerate(params["downs"]):
+        for blk in entry["blocks"]:
+            h = _resblock(blk["res"], h, temb, cfg.groups)
+            if "attn" in blk:
+                h = _attnblock(blk["attn"], h, cfg.groups)
+            skips.append(h)
+        if "down" in entry:
+            h = conv2d(h, entry["down"], stride=2)
+            skips.append(h)
+
+    h = _resblock(params["mid_res1"], h, temb, cfg.groups)
+    h = _attnblock(params["mid_attn"], h, cfg.groups)
+    h = _resblock(params["mid_res2"], h, temb, cfg.groups)
+
+    for entry in params["ups"]:
+        for blk in entry["blocks"]:
+            h = jnp.concatenate([h, skips.pop()], axis=-1)
+            h = _resblock(blk["res"], h, temb, cfg.groups)
+            if "attn" in blk:
+                h = _attnblock(blk["attn"], h, cfg.groups)
+        if "up" in entry:
+            B, H, W, C = h.shape
+            h = jax.image.resize(h, (B, 2 * H, 2 * W, C), "nearest")
+            h = conv2d(h, entry["up"])
+
+    h = jax.nn.silu(group_norm(h, params["gn_out_s"], params["gn_out_b"],
+                               cfg.groups))
+    return conv2d(h, params["conv_out"])
+
+
+def make_eps_fn(params: Params, cfg: UNetConfig):
+    """Adapter to the core sampler's eps_fn(x, t) signature."""
+    def eps_fn(x, t):
+        return forward(params, cfg, x, t)
+    return eps_fn

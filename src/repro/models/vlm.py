@@ -1,0 +1,47 @@
+"""LLaVA-NeXT-style VLM (llava-hf/llava-v1.6-mistral-7b-hf).
+
+The vision tower (SigLIP/CLIP ViT + anyres tiling + 2-layer MLP projector)
+is a STUB per the assignment carve-out: ``input_specs()`` supplies already-
+projected patch embeddings (B, n_img_tokens, d_model) where n_img_tokens
+reflects anyres tiling (base 576 + up to 4 tiles). The language backbone is
+the Mistral-7B dense transformer, consuming [image tokens ; text tokens].
+
+Everything below delegates to models.dense with an embeds prefix; decode is
+plain LM decode (image tokens live in the prompt / prefill).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import dense
+from .common import ArchConfig, Params
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    return dense.init_params(rng, cfg, dtype)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True) -> jnp.ndarray:
+    """tokens: (B, S_text); embeds: (B, n_img_tokens, d) projected patches."""
+    return dense.forward(params, cfg, tokens, embeds=embeds, remat=remat)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return dense.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+            cache: Dict, embeds: Optional[jnp.ndarray] = None,
+            remat: bool = True):
+    return dense.prefill(params, cfg, tokens, cache, embeds=embeds,
+                         remat=remat)
+
+
+def decode_step(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                cache: Dict):
+    return dense.decode_step(params, cfg, tokens, cache)

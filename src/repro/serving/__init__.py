@@ -1,0 +1,3 @@
+from .engine import ARGenerator, DiffusionSampler, GenRequest, GenResult
+
+__all__ = ["ARGenerator", "DiffusionSampler", "GenRequest", "GenResult"]

@@ -1,0 +1,5 @@
+from .rules import (spec_for_param, shard_params, shard_batch, shard_cache,
+                    spec_for_cache, batch_spec, data_axes, replicated)
+
+__all__ = ["spec_for_param", "shard_params", "shard_batch", "shard_cache",
+           "spec_for_cache", "batch_spec", "data_axes", "replicated"]

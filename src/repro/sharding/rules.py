@@ -1,0 +1,182 @@
+"""Path-based sharding rules: param/opt/cache pytrees -> NamedSharding.
+
+Conventions (DESIGN.md §6):
+  * batch-like dims      -> ("pod","data") axes (all data axes of the mesh)
+  * weight output dims of wq/wk/wv/w_gate/w_up/embeddings/router/unembed
+                         -> "model" (tensor parallel)
+  * weight input dims of wo/w_down/w_out -> "model"
+  * expert dim of MoE expert weights -> "model" (expert parallel; the
+    dispatch/combine einsums then lower to all-to-all)
+  * anything indivisible -> replicated on that axis
+
+Rules are name-based over flattened tree paths and tolerate arbitrary
+leading stacking dims (layers / (n_apps, attn_every)) by aligning the spec
+to the TRAILING dimensions.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# name -> spec on the trailing dims of the base (unstacked) array
+_COL2 = (None, "model")      # (in, out) with out sharded
+_ROW2 = ("model", None)      # (in, out) with in sharded
+_RULES = [
+    # --- embeddings / unembeddings: shard the vocab dim
+    (r"(^|/)embed$", ("model", None)),
+    (r"(^|/)unembed$", _COL2),
+    (r"(^|/)rounding$", _COL2),
+    # --- attention (GQA + MLA + shared/cross variants)
+    (r"/w?q$|/wq$", _COL2),
+    (r"/wk$", _COL2),
+    (r"/wv$", _COL2),
+    (r"/wg$", _COL2),
+    (r"/wo$", _ROW2),
+    (r"/w_dq$", _COL2),
+    (r"/w_uq$", _COL2),
+    (r"/w_dkv$", (None, None)),          # latent small: replicate
+    (r"/w_krope$", (None, None)),
+    (r"/w_uk$", _COL2),
+    (r"/w_uv$", _COL2),
+    # --- FFN
+    (r"/w_gate$", _COL2),
+    (r"/w_up$", _COL2),
+    (r"/w_down$", _ROW2),
+    (r"/sw_gate$", _COL2),
+    (r"/sw_up$", _COL2),
+    (r"/sw_down$", _ROW2),
+    # --- MoE router + expert weights (expert dim leads the base array)
+    (r"/router$", (None, None)),
+    (r"/moe/w_gate$", ("model", None, None)),
+    (r"/moe/w_up$", ("model", None, None)),
+    (r"/moe/w_down$", ("model", None, None)),
+    # --- mamba / hybrid
+    (r"/w_in$", _COL2),
+    (r"/conv_w$", (None, "model")),
+    (r"/conv_b$", ("model",)),
+    (r"/w_out$", _ROW2),
+    # --- rwkv time/channel mix
+    (r"/wr$", _COL2),
+    (r"/mix_a_\w+$", (None, None)),
+    (r"/mix_b_\w+$", (None, None)),
+    (r"/w_lora_a$", (None, None)),
+    (r"/w_lora_b$", (None, None)),
+    # --- diffusion-LM / U-Net style projections
+    (r"/time_w\d?$", (None, None)),
+    (r"/gate_norm$", ("model",)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divisible(shape: Tuple[int, ...], spec: Tuple, mesh: Mesh) -> Tuple:
+    """Drop axis assignments whose dim isn't divisible by the mesh axis."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))]))
+        out.append(ax if dim % size == 0 else None)
+    return tuple(out)
+
+
+def spec_for_param(path_str: str, shape: Tuple[int, ...],
+                   mesh: Mesh) -> P:
+    """Resolve a parameter's PartitionSpec from its tree path."""
+    for pattern, trailing in _RULES:
+        if re.search(pattern, path_str):
+            n_lead = len(shape) - len(trailing)
+            if n_lead < 0:      # e.g. scalar matched by a 2D rule: replicate
+                return P()
+            spec = (None,) * n_lead + tuple(trailing)
+            return P(*_divisible(shape, spec, mesh))
+    # expert weights matched structurally: 3D+ trailing (E, d, f) under moe
+    return P(*((None,) * len(shape)))
+
+
+def shard_params(tree_shapes: Pytree, mesh: Mesh) -> Pytree:
+    """ShapeDtypeStruct (or array) pytree -> NamedSharding pytree."""
+    def assign(path, leaf):
+        spec = spec_for_param(_path_str(path), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(assign, tree_shapes)
+
+
+# --------------------------------------------------------------- activations
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All batch-sharding axes present in the mesh ('pod' first if present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Shard dim0 over the data axes if divisible, else replicate."""
+    axes = data_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    first = axes if batch % size == 0 else None
+    return P(first, *([None] * (ndim - 1)))
+
+
+def shard_batch(tree_shapes: Pytree, mesh: Mesh) -> Pytree:
+    def assign(path, leaf):
+        return NamedSharding(mesh, batch_spec(mesh, leaf.shape[0],
+                                              len(leaf.shape)))
+    return jax.tree_util.tree_map_with_path(assign, tree_shapes)
+
+
+def spec_for_cache(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+                   batch: int) -> P:
+    """Cache arrays: (L, B, M, ...) KV / latent caches and recurrent states.
+
+    Policy: shard batch over data axes when divisible; otherwise (e.g.
+    long_500k, B=1) shard the sequence dim of KV caches over "data" so the
+    half-MB-per-token cache spreads across the mesh. Head-like dims shard
+    over "model" when divisible.
+    """
+    if path_str.endswith("idx"):
+        return P()
+    axes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in axes]))
+    msize = mesh.shape["model"]
+    spec = [None] * len(shape)
+    if len(shape) >= 2 and shape[1] == batch and batch % dsize == 0:
+        spec[1] = axes
+    elif len(shape) >= 3 and shape[2] % dsize == 0:
+        spec[2] = axes          # shard sequence dim (B indivisible)
+    # shard a heads-like dim over model: KV caches (L,B,M,Hkv,D) -> dim 3,
+    # wkv/ssm states (L,B,H,K,K) / (L,B,H,P,N) -> dim 2
+    if len(shape) == 5:
+        cand = 3 if spec[1] is not None or len(shape) < 3 else 2
+        for d in (3, 2):
+            if spec[d] is None and shape[d] % msize == 0:
+                spec[d] = "model"
+                break
+    return P(*spec)
+
+
+def shard_cache(tree_shapes: Pytree, mesh: Mesh, batch: int) -> Pytree:
+    def assign(path, leaf):
+        return NamedSharding(mesh, spec_for_cache(_path_str(path), leaf.shape,
+                                                  mesh, batch))
+    return jax.tree_util.tree_map_with_path(assign, tree_shapes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

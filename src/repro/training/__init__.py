@@ -1,0 +1,17 @@
+from .optim import (AdamWConfig, AdamWState, AdafactorConfig,
+                    AdafactorState, adafactor_init, adafactor_update,
+                    adamw_init, adamw_update,
+                    ema_init, ema_update, warmup_cosine, constant,
+                    global_norm, clip_by_global_norm)
+from .steps import (TrainState, init_train_state, make_lm_train_step,
+                    make_diffusion_train_step, make_prefill_step,
+                    make_decode_step, lm_loss_fn)
+from . import checkpoint
+
+__all__ = ["AdamWConfig", "AdamWState", "AdafactorConfig",
+           "AdafactorState", "adafactor_init", "adafactor_update", "adamw_init", "adamw_update",
+           "ema_init", "ema_update", "warmup_cosine", "constant",
+           "global_norm", "clip_by_global_norm", "TrainState",
+           "init_train_state", "make_lm_train_step",
+           "make_diffusion_train_step", "make_prefill_step",
+           "make_decode_step", "lm_loss_fn", "checkpoint"]

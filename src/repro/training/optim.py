@@ -1,0 +1,196 @@
+"""Pure-JAX optimizers (no optax in the environment): AdamW with decoupled
+weight decay + global-norm clipping, SGD+momentum, EMA of parameters (the
+DDPM/DDIM papers sample from the EMA model), and LR schedules.
+
+State layout mirrors the param pytree, so the same sharding specs apply to
+optimizer moments as to parameters (used by the dry-run's in_shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Pytree
+    nu: Pytree
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 2e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0       # 0 disables clipping
+    schedule: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float
+                        ) -> Tuple[Pytree, jnp.ndarray]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gnorm
+
+
+def adamw_update(cfg: AdamWConfig, grads: Pytree, state: AdamWState,
+                 params: Pytree) -> Tuple[Pytree, AdamWState, Dict]:
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = cfg.lr if cfg.schedule is None else cfg.lr * cfg.schedule(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm,
+                                                   "lr": lr}
+
+
+# -------------------------------------------------------------- Adafactor
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Pytree       # row-factored second moment (>=2D params)
+    vc: Pytree       # col-factored second moment
+    v: Pytree        # full second moment (for <2D params)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    """Factored second-moment optimizer (Shazeer & Stern 2018), momentum-free.
+
+    The production choice for >=100B-parameter models in this framework:
+    optimizer state is ~2 x sqrt-size instead of 2 x full-size, which is what
+    lets the 123B/236B/1T train steps fit v5e HBM (EXPERIMENTS.md §Dry-run).
+    """
+    lr: float = 1e-3
+    decay: float = 0.8           # \hat{beta}_2 exponent for t^-decay schedule
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Pytree) -> AdafactorState:
+    def vr_init(p):
+        return (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape)
+                else jnp.zeros((), jnp.float32))
+
+    def vc_init(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape) else jnp.zeros((), jnp.float32))
+
+    def v_init(p):
+        return (jnp.zeros((), jnp.float32) if _factored(p.shape)
+                else jnp.zeros(p.shape, jnp.float32))
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr_init, params),
+                          vc=jax.tree.map(vc_init, params),
+                          v=jax.tree.map(v_init, params))
+
+
+def adafactor_update(cfg: AdafactorConfig, grads: Pytree,
+                     state: AdafactorState, params: Pytree
+                     ) -> Tuple[Pytree, AdafactorState, Dict]:
+    step = state.step + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay)
+    gnorm = global_norm(grads)
+
+    def upd(p, g, vr, vc, v):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + cfg.eps
+        if _factored(p.shape):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            mean_r = jnp.mean(vr, axis=-1, keepdims=True)
+            u = gf * jax.lax.rsqrt(
+                (vr / jnp.maximum(mean_r, cfg.eps))[..., None]
+                * vc[..., None, :] + cfg.eps)
+        else:
+            v = beta2 * v + (1 - beta2) * g2
+            u = gf * jax.lax.rsqrt(v + cfg.eps)
+        # update clipping by RMS (Shazeer & Stern eq. 6)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        new_p = p.astype(jnp.float32) - cfg.lr * u
+        if cfg.weight_decay:
+            new_p = new_p - cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), vr, vc, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    out = [upd(p, g, vr, vc, v) for p, g, vr, vc, v in
+           zip(flat_p, jax.tree.leaves(grads), jax.tree.leaves(state.vr),
+               jax.tree.leaves(state.vc), jax.tree.leaves(state.v))]
+    unf = lambda i: jax.tree.unflatten(treedef, [o[i] for o in out])
+    return unf(0), AdafactorState(step, unf(1), unf(2), unf(3)), {
+        "grad_norm": gnorm}
+
+
+# ------------------------------------------------------------------ EMA
+def ema_init(params: Pytree) -> Pytree:
+    return jax.tree.map(jnp.copy, params)
+
+
+def ema_update(ema: Pytree, params: Pytree, decay: float = 0.9999) -> Pytree:
+    return jax.tree.map(lambda e, p: decay * e + (1.0 - decay) * p, ema,
+                        params)
+
+
+# ------------------------------------------------------------ LR schedules
+def warmup_cosine(warmup: int, total: int, floor: float = 0.1):
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return schedule
+
+
+def constant():
+    return lambda step: jnp.ones((), jnp.float32)

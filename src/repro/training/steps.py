@@ -1,0 +1,144 @@
+"""Jit-able train / serve step builders, shared by the real training loop,
+the examples, and the multi-pod dry-run (which lowers exactly these).
+
+Two kinds of train step:
+  * LM next-token step (every assigned architecture) — cross-entropy +
+    aux (MoE load-balance) loss, AdamW update.
+  * Diffusion step (the paper's own training, Eq. 5 gamma=1) — for the
+    U-Net and for diffusion-LM backbones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_api
+from repro.models.common import ArchConfig
+from .optim import (AdafactorConfig, AdamWConfig, AdamWState, adafactor_init,
+                    adafactor_update, adamw_init, adamw_update)
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Pytree
+    opt: Any
+    rng: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt", "rng"], meta_fields=[])
+
+
+def _opt_fns(opt_cfg):
+    if isinstance(opt_cfg, AdafactorConfig):
+        return adafactor_init, functools.partial(adafactor_update, opt_cfg)
+    return adamw_init, functools.partial(adamw_update, opt_cfg)
+
+
+def lm_loss_fn(api, cfg: ArchConfig, params: Pytree, tokens: jnp.ndarray,
+               embeds: Optional[jnp.ndarray], aux_weight: float = 0.01
+               ) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = api.forward(params, cfg, tokens, embeds=embeds)
+    S = tokens.shape[1]
+    logits = logits[:, -S:]                      # drop ctx-embed positions
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, tokens[:, 1:, None], axis=-1)
+    loss = jnp.mean(nll)
+    return loss + aux_weight * aux, {"loss": loss, "aux": aux}
+
+
+def make_lm_train_step(cfg: ArchConfig, opt_cfg, aux_weight: float = 0.01,
+                       accum_steps: int = 1) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B,S) int32, optional "embeds": (B,F,d)}.
+    opt_cfg: AdamWConfig or AdafactorConfig (the latter is the production
+    choice for >=100B-param models — see optim.AdafactorConfig).
+    accum_steps > 1 splits the global batch into microbatches and
+    accumulates grads in a lax.scan — peak activation memory scales with
+    B/accum_steps at unchanged math (§Perf lever for the big-train HBM
+    fit)."""
+    api = get_api(cfg)
+    _, opt_update = _opt_fns(opt_cfg)
+
+    def grads_of(p, batch):
+        def loss_fn(p):
+            return lm_loss_fn(api, cfg, p, batch["tokens"],
+                              batch.get("embeds"), aux_weight)
+        return jax.value_and_grad(loss_fn, has_aux=True)(p)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if accum_steps == 1:
+            (_, metrics), grads = grads_of(state.params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % accum_steps == 0
+            micro = {k: v.reshape((accum_steps, B // accum_steps)
+                                  + v.shape[1:])
+                     for k, v in batch.items()}
+
+            def body(acc, mb):
+                (_, metrics), grads = grads_of(state.params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, metrics_stack = jax.lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: jnp.mean(m), metrics_stack)
+        new_params, new_opt, opt_metrics = opt_update(
+            grads, state.opt, state.params)
+        rng, _ = jax.random.split(state.rng)
+        return (TrainState(new_params, new_opt, rng),
+                {**metrics, **opt_metrics})
+
+    return train_step
+
+
+def make_diffusion_train_step(loss_fn: Callable, opt_cfg) -> Callable:
+    """Generic diffusion train step. loss_fn(params, batch, rng) ->
+    (loss, metrics)."""
+    _, opt_update = _opt_fns(opt_cfg)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        rng, sub = jax.random.split(state.rng)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch, sub)
+        new_params, new_opt, opt_metrics = opt_update(
+            grads, state.opt, state.params)
+        return (TrainState(new_params, new_opt, rng),
+                {"loss": loss, **metrics, **opt_metrics})
+
+    return train_step
+
+
+def init_train_state(params: Pytree, rng: jax.Array,
+                     opt_cfg=None) -> TrainState:
+    opt_init, _ = _opt_fns(opt_cfg if opt_cfg is not None else AdamWConfig())
+    return TrainState(params=params, opt=opt_init(params), rng=rng)
+
+
+# ------------------------------------------------------------ serve steps
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    api = get_api(cfg)
+
+    def prefill_step(params, tokens, cache, embeds=None):
+        return api.prefill(params, cfg, tokens, cache, embeds=embeds)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    api = get_api(cfg)
+
+    def decode_step(params, tokens, cache):
+        return api.decode_step(params, cfg, tokens, cache)
+
+    return decode_step

@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests: reduced same-family variants run one
+forward + one train (grad) step on CPU; shapes and finiteness asserted.
+Decode paths are exercised against the cache APIs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import get_api
+from repro.models.common import count_params
+
+ARCHS = configs.ARCH_IDS
+B, S = 2, 16
+
+
+def _inputs(cfg, rng):
+    k1, k2 = jax.random.split(rng)
+    tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab)
+    embeds = None
+    if cfg.family in ("vlm", "audio"):
+        embeds = jax.random.normal(k2, (B, cfg.n_ctx_embeds, cfg.d_model),
+                                   jnp.float32) * 0.02
+    return tokens, embeds
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.get_smoke(arch)
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    assert count_params(params) > 0
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, aux = api.forward(params, cfg, tokens, embeds=embeds)
+    S_out = S + (cfg.n_ctx_embeds if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_out, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    """One grad step of next-token cross-entropy; finite loss and grads."""
+    cfg = configs.get_smoke(arch)
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+
+    def loss_fn(p):
+        logits, aux = api.forward(p, cfg, tokens, embeds=embeds)
+        logits = logits[:, -S:]  # text positions only (vlm prepends image)
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, tokens[:, 1:, None], axis=-1)
+        return jnp.mean(nll) + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0, f"{arch}: bad grads"
+    # apply an SGD step; loss must stay finite on reevaluation
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+    assert bool(jnp.isfinite(loss_fn(new_params)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Prefill last-token logits match full forward; a decode step runs."""
+    cfg = configs.get_smoke(arch)
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+    logits, _ = api.forward(params, cfg, tokens, embeds=embeds)
+
+    max_len = S + 8 + (cfg.n_ctx_embeds if cfg.family == "vlm" else 0)
+    cache = api.init_cache(cfg, B, max_len)
+    lp, cache = api.prefill(params, cfg, tokens, cache, embeds=embeds)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(logits[:, -1]),
+                               atol=5e-3, rtol=1e-3,
+                               err_msg=f"{arch}: prefill != forward")
+    nxt = lp.argmax(-1)[:, None].astype(jnp.int32)
+    lp2, cache = api.decode_step(params, cfg, nxt, cache)
+    assert lp2.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(lp2).all())
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "deepseek-7b", "rwkv6-7b",
+                                  "zamba2-2.7b"])
+def test_greedy_decode_matches_forward(arch):
+    """Strict check on families without capacity-routing nondeterminism:
+    3 greedy decode steps agree with fresh full forwards."""
+    cfg = configs.get_smoke(arch)
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, embeds = _inputs(cfg, jax.random.PRNGKey(1))
+    cache = api.init_cache(cfg, B, S + 8)
+    lp, cache = api.prefill(params, cfg, tokens, cache, embeds=embeds)
+    t = tokens
+    for _ in range(3):
+        nxt = lp.argmax(-1)[:, None].astype(jnp.int32)
+        t = jnp.concatenate([t, nxt], axis=1)
+        lp, cache = api.decode_step(params, cfg, nxt, cache)
+        full, _ = api.forward(params, cfg, t, embeds=embeds)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(full[:, -1]),
+                                   atol=5e-3, rtol=1e-3)
+
+
+def test_full_configs_match_assignment_table():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    t = configs.ARCHS
+    m = t["mistral-large-123b"]
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_ff,
+            m.vocab) == (88, 12288, 96, 8, 28672, 32768)
+    l = t["llama3.2-3b"]
+    assert (l.n_layers, l.d_model, l.n_heads, l.n_kv_heads, l.d_ff,
+            l.vocab) == (28, 3072, 24, 8, 8192, 128256)
+    z = t["zamba2-2.7b"]
+    assert (z.n_layers, z.d_model, z.n_heads, z.n_kv_heads, z.d_ff, z.vocab,
+            z.ssm_state) == (54, 2560, 32, 32, 10240, 32000, 64)
+    k = t["kimi-k2-1t-a32b"]
+    assert (k.n_layers, k.d_model, k.n_heads, k.n_kv_heads, k.vocab,
+            k.n_experts, k.top_k, k.d_ff_expert) == (
+        61, 7168, 64, 8, 163840, 384, 8, 2048)
+    r = t["rwkv6-7b"]
+    assert (r.n_layers, r.d_model, r.d_ff, r.vocab) == (32, 4096, 14336,
+                                                        65536)
+    s = t["seamless-m4t-large-v2"]
+    assert (s.n_layers, s.d_model, s.n_heads, s.n_kv_heads, s.d_ff,
+            s.vocab) == (24, 1024, 16, 16, 8192, 256206)
+    d = t["deepseek-v2-236b"]
+    assert (d.n_layers, d.d_model, d.n_heads, d.vocab, d.n_experts, d.top_k,
+            d.d_ff_expert, d.kv_lora) == (60, 5120, 128, 102400, 160, 6,
+                                          1536, 512)
+    assert d.use_mla and d.n_shared_experts == 2
+    sm = t["smollm-135m"]
+    assert (sm.n_layers, sm.d_model, sm.n_heads, sm.n_kv_heads, sm.d_ff,
+            sm.vocab) == (30, 576, 9, 3, 1536, 49152)
+    d7 = t["deepseek-7b"]
+    assert (d7.n_layers, d7.d_model, d7.n_heads, d7.n_kv_heads, d7.d_ff,
+            d7.vocab) == (30, 4096, 32, 32, 11008, 102400)
+    lv = t["llava-next-mistral-7b"]
+    assert (lv.n_layers, lv.d_model, lv.n_heads, lv.n_kv_heads, lv.d_ff,
+            lv.vocab) == (32, 4096, 32, 8, 14336, 32000)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "kimi-k2-1t-a32b",
+                                  "deepseek-v2-236b"])
+def test_smoke_respects_reduction_bounds(arch):
+    cfg = configs.get_smoke(arch)
+    assert cfg.n_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4

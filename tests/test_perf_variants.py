@@ -1,0 +1,109 @@
+"""Equivalence tests for the §Perf optimization levers: each optimized
+variant must be numerically interchangeable with the baseline path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import dense, get_api
+from repro.models.attention import (_grouped_attention,
+                                    chunked_grouped_attention)
+from repro.models.common import causal_mask
+from repro.models.runtime_flags import FLAGS, PerfFlags, perf_flags
+
+
+def test_perf_flags_context_restores():
+    assert FLAGS.attn_chunk == 0
+    with perf_flags(attn_chunk=64, decode_inplace=True):
+        from repro.models.runtime_flags import FLAGS as F2
+        assert F2.attn_chunk == 64 and F2.decode_inplace
+    from repro.models.runtime_flags import FLAGS as F3
+    assert F3.attn_chunk == 0 and not F3.decode_inplace
+
+
+@pytest.mark.parametrize("qc,kc", [(32, 32), (64, 32), (32, 64)])
+def test_chunked_attention_matches_full(qc, kc):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 128, 8, 16))
+    k = jax.random.normal(ks[1], (2, 128, 4, 16))
+    v = jax.random.normal(ks[2], (2, 128, 4, 16))
+    ref = _grouped_attention(q, k, v, jnp.maximum(causal_mask(128), -1e30))
+    out = chunked_grouped_attention(q, k, v, True, qc, kc)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_forward_with_chunked_flag_matches_baseline():
+    cfg = configs.get_smoke("deepseek-7b")
+    p = dense.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)
+    base = dense.forward(p, cfg, toks)
+    with perf_flags(attn_chunk=16):
+        opt = dense.forward(p, cfg, toks)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt),
+                               atol=5e-4, rtol=1e-4)
+
+
+def test_decode_inplace_matches_baseline_over_steps():
+    cfg = configs.get_smoke("mistral-large-123b")
+    p = dense.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    c1 = dense.init_cache(cfg, 2, 24)
+    c2 = dense.init_cache(cfg, 2, 24)
+    l1, c1 = dense.prefill(p, cfg, toks, c1)
+    l2, c2 = dense.prefill(p, cfg, toks, c2)
+    for _ in range(5):
+        nxt = l1.argmax(-1)[:, None].astype(jnp.int32)
+        l1, c1 = dense.decode_step(p, cfg, nxt, c1)
+        with perf_flags(decode_inplace=True):
+            l2, c2 = dense.decode_step(p, cfg, nxt, c2)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(c1["k"], np.float32),
+                                   np.asarray(c2["k"], np.float32),
+                                   atol=1e-5)
+
+
+def test_decode_inplace_with_sliding_window():
+    cfg = dataclasses.replace(configs.get_smoke("deepseek-7b"),
+                              sliding_window=8)
+    p = dense.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    c1 = dense.init_cache(cfg, 2, 32)
+    c2 = dense.init_cache(cfg, 2, 32)
+    l1, c1 = dense.prefill(p, cfg, toks, c1)
+    l2, c2 = dense.prefill(p, cfg, toks, c2)
+    for _ in range(4):
+        nxt = l1.argmax(-1)[:, None].astype(jnp.int32)
+        l1, c1 = dense.decode_step(p, cfg, nxt, c1)
+        with perf_flags(decode_inplace=True):
+            l2, c2 = dense.decode_step(p, cfg, nxt, c2)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_moe_group_flag_changes_grouping_not_output_much():
+    """Ample capacity: group size must not change routing results."""
+    cfg = dataclasses.replace(configs.get_smoke("kimi-k2-1t-a32b"),
+                              capacity_factor=8.0)
+    api = get_api(cfg)
+    p = api.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    base, _ = api.forward(p, cfg, toks)
+    with perf_flags(moe_group=16):
+        opt, _ = api.forward(p, cfg, toks)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt),
+                               atol=5e-4, rtol=1e-4)
+
+
+def test_seq_parallel_constraint_is_noop_without_mesh():
+    cfg = configs.get_smoke("smollm-135m")
+    p = dense.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    base = dense.forward(p, cfg, toks)
+    from jax.sharding import PartitionSpec as P
+    with perf_flags(seq_parallel_spec=P(None, None, None)):
+        opt = dense.forward(p, cfg, toks)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(opt), atol=1e-6)
