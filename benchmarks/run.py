@@ -1,7 +1,8 @@
 """Benchmark harness — one module per paper table/figure (+ beyond-paper).
 
-  PYTHONPATH=src python -m benchmarks.run            # full
+  PYTHONPATH=src python -m benchmarks.run                  # full paper suite
   PYTHONPATH=src python -m benchmarks.run --budget quick
+  PYTHONPATH=src python -m benchmarks.run --suite sampler  # hot-path bench
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
 """
@@ -13,7 +14,7 @@ import sys
 import time
 import traceback
 
-MODULES = [
+PAPER_MODULES = [
     "benchmarks.table1_quality",
     "benchmarks.table2_reconstruction",
     "benchmarks.fig4_timing",
@@ -23,17 +24,25 @@ MODULES = [
     "benchmarks.roofline_table",
 ]
 
+SUITES = {
+    "paper": PAPER_MODULES,
+    "sampler": ["benchmarks.sampler_overhead"],
+    "all": PAPER_MODULES + ["benchmarks.sampler_overhead"],
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=["quick", "full"], default="full")
+    ap.add_argument("--suite", choices=sorted(SUITES), default="paper",
+                    help="module group to run (sampler = hot-path microbench)")
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     failed = []
-    for modname in MODULES:
+    for modname in SUITES[args.suite]:
         if args.only and args.only not in modname:
             continue
         t0 = time.time()

@@ -1,0 +1,127 @@
+"""Sampler hot-path overhead microbench (ISSUE 1 tentpole evidence).
+
+Measures the per-step cost of the S-step generative loop for three scan
+bodies, holding the eps-model constant (a cheap analytic Gaussian model, so
+the numbers isolate SAMPLER overhead, not network time):
+
+  jnp            pure-jnp StepImpl (separate normal + update passes)
+  fused_step     legacy kernels/ddim_step (per-step pad -> kernel -> unpad)
+  tile_resident  kernels/sampler_step (state stays in the (R, C) tile
+                 layout for the whole scan; noise drawn in-kernel)
+
+Reports wall-clock per-step ms (post-compile median) and a MODELED
+HBM-bytes-per-step figure: the count of state-sized array reads+writes the
+scan body performs outside the eps model, times the element bytes. On CPU
+(interpret mode) wall-clock mostly tracks op-dispatch overhead; the bytes
+model is the hardware-relevant number and is what the kernel eliminates.
+
+Writes BENCH_sampler.json at the repo root and emits the standard Row CSV.
+
+  PYTHONPATH=src python -m benchmarks.run --suite sampler
+  PYTHONPATH=src python -m benchmarks.sampler_overhead          # standalone
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._common import ROOT, Row, timed
+from repro.core import SamplerConfig, make_schedule, sample
+from repro.core.sampler import _jnp_step
+from repro.kernels import fused_ddim_step
+
+# 65536 elements == exactly one (256, 256) tile: every path moves the same
+# live data, so modeled traffic is directly comparable
+BATCH, DIM = 64, 1024
+SCH = make_schedule("linear", T=1000)
+
+# state-sized HBM touches per scan step, by path (excluding the eps model):
+#   jnp eta>0:   normal write + update(x,eps,noise reads + x_prev write) = 5
+#   jnp eta=0:   update(x,eps reads + write) = 3  (noise pass skipped)
+#   fused eta>0: normal 1W + pack x/eps/noise 3R+3W + kernel 3R+1W
+#                + unpack 1R+1W = 13
+#   fused eta=0: zeros 1W + pack 3R+3W + kernel 3R+1W + unpack 1R+1W = 13
+#                (legacy kernel still materializes a zero noise tensor)
+#   tile eta>=0: kernel x,eps reads + x_prev write = 3 (noise in-kernel,
+#                no layout traffic; eps pack-free for tile-aware models)
+_TOUCHES = {"jnp": {0.0: 3, 1.0: 5},
+            "fused_step": {0.0: 13, 1.0: 13},
+            "tile_resident": {0.0: 3, 1.0: 3}}
+
+
+def _eps_nat(x, t):
+    a = SCH.alpha_bar[t].reshape((-1,) + (1,) * (x.ndim - 1))
+    return x * jnp.sqrt(1 - a) / (1 - a + a * 0.25)
+
+
+def _eps_tile(x2, t):
+    a = SCH.alpha_bar[t]
+    return x2 * jnp.sqrt(1 - a) / (1 - a + a * 0.25)
+
+
+_eps_tile.tile_aware = True
+
+
+def _make_fn(path: str, cfg: SamplerConfig):
+    if path == "jnp":
+        def fn(x, r):
+            return sample(SCH, _eps_nat, x, cfg, rng=r, step_impl=_jnp_step)
+    elif path == "fused_step":
+        def fn(x, r):
+            return sample(SCH, _eps_nat, x, cfg, rng=r,
+                          step_impl=fused_ddim_step)
+    else:
+        def fn(x, r):
+            return sample(SCH, _eps_tile, x, cfg, rng=r, tile_resident=True)
+    return jax.jit(fn)
+
+
+def run(budget: str = "full"):
+    s_list = [10, 50] if budget == "quick" else [10, 20, 50, 100]
+    x = jax.random.normal(jax.random.PRNGKey(0), (BATCH, DIM))
+    rng = jax.random.PRNGKey(1)
+    elem_bytes = x.size * x.dtype.itemsize
+    rows, results = [], []
+    for eta in (0.0, 1.0):
+        for S in s_list:
+            cfg = SamplerConfig(S=S, eta=eta)
+            for path in ("jnp", "fused_step", "tile_resident"):
+                dt = timed(_make_fn(path, cfg), x, rng)
+                per_step_ms = dt * 1e3 / S
+                hbm = _TOUCHES[path][eta] * elem_bytes
+                rows.append(Row(
+                    f"sampler_overhead/{path}/eta{eta:g}/S{S}",
+                    dt * 1e6, f"per_step_ms={per_step_ms:.3f};"
+                    f"modeled_hbm_bytes_per_step={hbm}"))
+                results.append(dict(path=path, eta=eta, S=S,
+                                    total_ms=dt * 1e3,
+                                    per_step_ms=per_step_ms,
+                                    modeled_hbm_bytes_per_step=hbm))
+    from repro.kernels.sampler_step.ops import default_interpret
+    payload = {
+        "bench": "sampler_overhead",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "pallas_interpret": default_interpret(),
+        "shape": [BATCH, DIM],
+        "dtype": "float32",
+        "state_bytes": elem_bytes,
+        "note": ("modeled_hbm_bytes_per_step counts state-sized array "
+                 "reads+writes in the scan body outside the eps model; "
+                 "wall-clock on CPU interpret mode tracks dispatch "
+                 "overhead, not HBM"),
+        "results": results,
+    }
+    with open(os.path.join(ROOT, "BENCH_sampler.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run("full"):
+        print(row.csv())

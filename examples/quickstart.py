@@ -101,6 +101,14 @@ def run_gmm(args):
     print(f"\nPallas fused step max|delta| vs jnp path: "
           f"{float(jnp.abs(a-b).max()):.2e}")
 
+    # the tile-resident hot path goes further: one layout conversion for
+    # the WHOLE S-step scan, clipping + noise fused into the kernel
+    # (benchmarks/sampler_overhead.py quantifies the saved HBM traffic)
+    c = sample(schedule, eps_fn, xT[:256], SamplerConfig(S=20),
+               tile_resident=True)
+    print(f"tile-resident sampler max|delta| vs jnp path: "
+          f"{float(jnp.abs(a-c).max()):.2e}")
+
 
 def run_images(args):
     T = args.T

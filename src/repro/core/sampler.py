@@ -13,6 +13,19 @@ network evaluations produce a sample.
 
 The full S-step loop is one ``jax.lax.scan`` — a single XLA program, the TPU
 analogue of CUDA-graph capture (no host round-trips between steps).
+
+Two scan-body implementations:
+
+  * the pure-jnp ``StepImpl`` path (default) — the oracle. A drop-in fused
+    kernel (kernels/ddim_step) can replace the update, but the state still
+    enters/exits the kernel's padded tile layout every step.
+  * the tile-resident path (``tile_resident=True``) — the production hot
+    path. x_T is converted to the padded (R, C) tile layout ONCE, the whole
+    scan carries that layout (kernels/sampler_step fuses x0-prediction,
+    optional clipping, the Eq. 12 update, and in-kernel noise generation),
+    and the natural shape is restored ONCE at the end. Per-step PRNG seeds
+    are drawn before the scan, so the deterministic (eta=0) program
+    contains no random ops inside the loop at all.
 """
 from __future__ import annotations
 
@@ -33,9 +46,16 @@ StepImpl = Callable[..., jnp.ndarray]
 
 
 def _jnp_step(x, eps, noise, c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t):
-    """Reference fused Eq.12 update (pure jnp)."""
+    """Reference fused Eq.12 update (pure jnp).
+
+    ``noise`` is None on the deterministic (eta=0, no sigma-hat) path —
+    the noise term is skipped entirely rather than multiplied by zero.
+    """
     x0 = (x - sqrt_1m_a_t * eps) / sqrt_a_t
-    return c_x0 * x0 + c_dir * eps + c_noise * noise
+    out = c_x0 * x0 + c_dir * eps
+    if noise is not None:
+        out = out + c_noise * noise
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,27 +105,93 @@ def trajectory_coefficients(schedule: NoiseSchedule, cfg: SamplerConfig):
     )
 
 
+def _tile_resident_sample(schedule, eps_fn, x_T, cfg, rng,
+                          return_trajectory, interpret):
+    """S-step scan carried entirely in the kernel's padded (R, C) layout.
+
+    One layout conversion on entry, one on exit (the layout contract —
+    kernels/sampler_step/ops.py). The fused kernel does x0-prediction,
+    optional clipping + eps re-derivation, the Eq. 12 update and (for
+    stochastic processes) in-kernel noise generation, so the scan body
+    touches HBM once per input and once for the output.
+    """
+    from repro.kernels.sampler_step import ops as tile_ops
+
+    if interpret is None:  # interpreter everywhere except a real TPU
+        interpret = tile_ops.default_interpret()
+    stochastic = cfg.eta > 0.0 or cfg.sigma_hat
+    coefs = trajectory_coefficients(schedule, cfg)
+    rev = jax.tree.map(lambda a: a[::-1], coefs)
+    batch, shape = x_T.shape[0], x_T.shape
+    hw_prng = tile_ops.default_hw_prng(interpret)
+    # all randomness outside the scan: per-step int32 seeds, one per tile
+    # family; the deterministic program never touches the PRNG at all
+    seeds = (jax.random.randint(rng, (cfg.S,), 0, np.iinfo(np.int32).max,
+                                dtype=jnp.int32)
+             if stochastic else None)
+    tile_aware = getattr(eps_fn, "tile_aware", False)
+
+    x2, n = tile_ops.to_tile_layout(x_T)             # conversion #1 (entry)
+
+    def body(x2, per_step):
+        c, seed = per_step
+        cvec = jnp.stack([c["c_x0"], c["c_dir"], c["c_noise"],
+                          c["sqrt_a_t"], c["sqrt_1m_a_t"]])
+        if tile_aware:
+            eps2 = eps_fn(x2, c["t"])                # native (R, C) model
+        else:
+            x_view = tile_ops.from_tile_layout(x2, n, shape)
+            t = jnp.full((batch,), c["t"], dtype=jnp.int32)
+            eps2, _ = tile_ops.to_tile_layout(eps_fn(x_view, t))
+        x2_prev = tile_ops.sampler_step_tiles(
+            x2, eps2, cvec, seed, clip=cfg.clip_x0, stochastic=stochastic,
+            hw_prng=hw_prng, interpret=interpret)
+        return x2_prev, (x2_prev if return_trajectory else None)
+
+    x2_0, traj2 = jax.lax.scan(body, x2, (rev, seeds))
+    x0 = tile_ops.from_tile_layout(x2_0, n, shape)   # conversion #2 (exit)
+    if return_trajectory:
+        traj = jax.vmap(lambda a: tile_ops.from_tile_layout(a, n, shape))(
+            traj2)
+        return x0, jnp.concatenate([x_T[None], traj], axis=0)
+    return x0
+
+
 def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
            cfg: SamplerConfig, rng: Optional[jax.Array] = None,
            step_impl: StepImpl = _jnp_step,
-           return_trajectory: bool = False) -> jnp.ndarray:
+           return_trajectory: bool = False,
+           tile_resident: bool = False,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
     """Run the generalized generative process from x_T to x_0.
 
     Args:
       schedule: noise schedule the model was trained with (T steps).
-      eps_fn: eps_theta(x_t, t) with t an int32 (batch,) array.
+      eps_fn: eps_theta(x_t, t) with t an int32 (batch,) array. On the
+        tile-resident path a model may declare ``eps_fn.tile_aware = True``
+        to receive the (R, C) tile view and a scalar t directly (elementwise
+        models); otherwise a view-restoring adapter shows it the natural
+        shape.
       x_T: initial latent, N(0, I) for generation or an encoding (ode.encode).
       cfg: sampler configuration (S, eta, tau spacing, ...).
       rng: PRNG key; required iff the process is stochastic (eta>0/sigma_hat).
       step_impl: fused update implementation (default pure-jnp; the Pallas
-        kernel from repro.kernels.ddim_step is a drop-in).
+        kernel from repro.kernels.ddim_step is a drop-in). Ignored when
+        tile_resident.
       return_trajectory: also return the (S+1, ...) stack of iterates.
+      tile_resident: run the scan in the Pallas tile layout end-to-end
+        (kernels/sampler_step) — the production hot path.
+      interpret: Pallas interpret mode; None (default) resolves to
+        "everywhere except a real TPU". Only used when tile_resident.
     """
     stochastic = cfg.eta > 0.0 or cfg.sigma_hat
     if stochastic and rng is None:
         raise ValueError("stochastic sampler (eta>0 or sigma_hat) needs rng")
     if rng is None:
-        rng = jax.random.PRNGKey(0)  # unused: c_noise == 0 everywhere
+        rng = jax.random.PRNGKey(0)  # unused: deterministic path draws none
+    if tile_resident:
+        return _tile_resident_sample(schedule, eps_fn, x_T, cfg, rng,
+                                     return_trajectory, interpret)
     coefs = trajectory_coefficients(schedule, cfg)
     batch = x_T.shape[0]
 
@@ -118,7 +204,8 @@ def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
             x0 = predict_x0(schedule, x, t, eps, clip=cfg.clip_x0)
             eps = (x - jnp.sqrt(schedule.alpha_bar[c["t"]]) * x0) / jnp.sqrt(
                 1.0 - schedule.alpha_bar[c["t"]])
-        noise = jax.random.normal(key, x.shape, dtype=x.dtype)
+        noise = (jax.random.normal(key, x.shape, dtype=x.dtype)
+                 if stochastic else None)
         x_prev = step_impl(
             x, eps, noise,
             c["c_x0"].astype(x.dtype), c["c_dir"].astype(x.dtype),
@@ -128,7 +215,7 @@ def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
 
     # iterate from the largest timestep down: reverse the coefficient arrays
     rev = jax.tree.map(lambda a: a[::-1], coefs)
-    keys = jax.random.split(rng, cfg.S)
+    keys = jax.random.split(rng, cfg.S) if stochastic else None
     x0, traj = jax.lax.scan(body, x_T, (rev, keys))
     if return_trajectory:
         return x0, jnp.concatenate([x_T[None], traj], axis=0)

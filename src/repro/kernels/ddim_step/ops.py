@@ -27,10 +27,16 @@ def _to_tiles(a: jnp.ndarray):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def fused_ddim_step(x: jnp.ndarray, eps: jnp.ndarray, noise: jnp.ndarray,
-                    c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t,
+def fused_ddim_step(x: jnp.ndarray, eps: jnp.ndarray, noise, c_x0, c_dir,
+                    c_noise, sqrt_a_t, sqrt_1m_a_t,
                     interpret: bool = True) -> jnp.ndarray:
-    """Drop-in StepImpl backed by the Pallas kernel."""
+    """Drop-in StepImpl backed by the Pallas kernel.
+
+    ``noise`` may be None (deterministic path): c_noise is zeroed so the
+    padding tiles contribute nothing either way.
+    """
+    if noise is None:
+        noise, c_noise = jnp.zeros_like(x), 0.0
     coefs = jnp.stack([jnp.asarray(c, jnp.float32) for c in
                        (c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t)])
     x2, n = _to_tiles(x)

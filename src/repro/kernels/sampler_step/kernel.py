@@ -1,0 +1,183 @@
+"""Pallas TPU kernel: the whole DDIM sampler step body, tile-resident.
+
+Fuses everything the scan body does to the state (paper Eq. 12) into ONE
+VPU pass over (TILE_R, TILE_C) VMEM tiles — one HBM read per input tensor
+and one write, replacing the three separate passes of the legacy path
+(jax.random.normal, clip-x0/eps-rederivation, fused update):
+
+  x0_hat  = (x - sqrt(1-a_t) * eps) / sqrt(a_t)          predicted x0
+  x0_hat  = clip(x0_hat, +-clip)                          [optional]
+  eps_eff = (x - sqrt(a_t) * x0_hat) / sqrt(1-a_t)        [iff clipped]
+  x_prev  = c_x0 * x0_hat + c_dir * eps_eff + c_noise * z
+
+The stochastic variant draws z ~ N(0, I) *inside* the kernel: per-tile
+seeded PRNG -> two uint32 draws -> Box-Muller. On real TPUs the hardware
+PRNG is used (pltpu.prng_seed + pltpu.prng_random_bits, seeded from an
+SMEM scalar plus the grid-tile id); in interpret mode (CPU CI) a
+counter-based software generator with identical call structure runs
+instead — ref.py replays it bit-exactly for the oracle tests.
+
+The deterministic variant (eta == 0 and not sigma_hat) is a separate
+specialization that takes no seed and contains no PRNG code at all, so
+the lowered scan body is provably noise-free (asserted on the jaxpr in
+tests/test_sampler_step.py).
+
+All arithmetic runs in float32 regardless of the tile dtype (bf16 state /
+fp32 coefficient policy); the store casts back to the state dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# VPU-aligned tile: 8 sublanes x 128 lanes, scaled up for fewer grid steps.
+TILE_R = 256
+TILE_C = 256
+SUBLANE = 8   # minimum row granule — small states tile at (8, TILE_C)
+
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def tile_rows(R: int) -> int:
+    """Row-tile height for a padded (R, TILE_C) layout.
+
+    Full (TILE_R, TILE_C) tiles when R allows; otherwise fall back to the
+    8-sublane granule so a small sampler state (a few hundred elements)
+    costs one (8, 256) tile, not a 65536-element minimum.
+    """
+    return TILE_R if R % TILE_R == 0 else SUBLANE
+
+
+def _fmix32(h):
+    """murmur3 finalizer: full-avalanche 32-bit mix (uint32 in/out)."""
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    return h
+
+
+def sw_random_bits(seed, tid, salt: int, shape):
+    """Counter-based uint32 bits — the software PRNG path.
+
+    Pure jnp arithmetic, so it runs identically inside the Pallas
+    interpreter and in the ref.py oracle. ``seed`` and ``tid`` may be
+    traced scalars; ``salt`` distinguishes independent draws per tile.
+    """
+    seed = jnp.asarray(seed).astype(jnp.uint32)
+    tid = jnp.asarray(tid).astype(jnp.uint32)
+    salt_c = np.uint32((int(salt) * 0x85157AF5) & 0xFFFFFFFF)
+    key = _fmix32(seed ^ (tid * np.uint32(0x632BE59B)) ^ salt_c)
+    r = jax.lax.broadcasted_iota(jnp.uint32, shape, 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, shape, 1)
+    ctr = r * np.uint32(shape[1]) + c
+    return _fmix32((ctr ^ key) * _GOLDEN + key)
+
+
+def bits_to_normal(b1, b2):
+    """Box-Muller: two uint32 draws -> one standard-normal float32."""
+    # 24-bit mantissa-sized uniforms in (0, 1), exclusive at both ends
+    u1 = (jnp.right_shift(b1, np.uint32(8)).astype(jnp.float32)
+          + 0.5) * np.float32(1.0 / 16777216.0)
+    u2 = jnp.right_shift(b2, np.uint32(8)).astype(jnp.float32) * np.float32(
+        1.0 / 16777216.0)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(
+        np.float32(2.0 * np.pi) * u2)
+
+
+def _tile_noise(seed, tid, shape, hw_prng: bool):
+    if hw_prng:
+        # mix (seed, tid) with full avalanche before seeding — a plain
+        # seed + tid would collide across (step, tile) pairs whose sums
+        # coincide, replaying identical noise blocks
+        mixed = _fmix32(jnp.asarray(seed).astype(jnp.uint32)
+                        ^ (jnp.asarray(tid).astype(jnp.uint32)
+                           * np.uint32(0x632BE59B)))
+        pltpu.prng_seed((mixed >> np.uint32(1)).astype(jnp.int32))
+        b1 = pltpu.bitcast(pltpu.prng_random_bits(shape), jnp.uint32)
+        b2 = pltpu.bitcast(pltpu.prng_random_bits(shape), jnp.uint32)
+    else:
+        b1 = sw_random_bits(seed, tid, 1, shape)
+        b2 = sw_random_bits(seed, tid, 2, shape)
+    return bits_to_normal(b1, b2)
+
+
+def _update(x, eps, coef_ref, clip):
+    """The fused deterministic part: x0-predict [+clip+eps-rederive] + Eq 12."""
+    c_x0, c_dir = coef_ref[0], coef_ref[1]
+    sqrt_a_t, sqrt_1m_a_t = coef_ref[3], coef_ref[4]
+    if clip is not None:
+        x0 = (x - sqrt_1m_a_t * eps) / sqrt_a_t
+        x0 = jnp.clip(x0, -clip, clip)
+        eps_eff = (x - sqrt_a_t * x0) / sqrt_1m_a_t
+        return c_x0 * x0 + c_dir * eps_eff
+    # no clip: algebraic fusion down to two FMAs per element
+    a = c_x0 / sqrt_a_t
+    b = c_dir - a * sqrt_1m_a_t
+    return a * x + b * eps
+
+
+def _det_kernel(coef_ref, x_ref, eps_ref, out_ref, *, clip):
+    """Deterministic specialization: no seed input, no PRNG code."""
+    x = x_ref[...].astype(jnp.float32)
+    eps = eps_ref[...].astype(jnp.float32)
+    out_ref[...] = _update(x, eps, coef_ref, clip).astype(out_ref.dtype)
+
+
+def _stoch_kernel(coef_ref, seed_ref, x_ref, eps_ref, out_ref, *, clip,
+                  hw_prng):
+    x = x_ref[...].astype(jnp.float32)
+    eps = eps_ref[...].astype(jnp.float32)
+    out = _update(x, eps, coef_ref, clip)
+    tid = pl.program_id(0) * pl.num_programs(1) + pl.program_id(1)
+    noise = _tile_noise(seed_ref[0], tid, x.shape, hw_prng)
+    out_ref[...] = (out + coef_ref[2] * noise).astype(out_ref.dtype)
+
+
+def sampler_step_2d(x: jnp.ndarray, eps: jnp.ndarray, coefs: jnp.ndarray,
+                    seed=None, *, clip=None, stochastic: bool = False,
+                    hw_prng: bool = False, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """Tiled full-step update over a 2D (R, C) view.
+
+    Args:
+      x, eps: (R, C) with R % tile_rows(R) == 0 and C % TILE_C == 0 (the
+        padded tile layout produced by ops.to_tile_layout — core/sampler
+        owns it).
+      coefs: (5,) float32 [c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t].
+      seed: int32 scalar; required iff stochastic. Each grid tile derives
+        its stream from seed + tile-id, so draws never repeat across tiles.
+      clip: static |x0| bound, or None (compile-time specialization).
+      stochastic: False selects the no-PRNG deterministic kernel.
+      hw_prng: use the TPU hardware PRNG (compiled mode only; the
+        interpreter has no CPU lowering for pltpu.prng_seed).
+    """
+    R, C = x.shape
+    tr = tile_rows(R)
+    grid = (R // tr, C // TILE_C)
+    spec = pl.BlockSpec((tr, TILE_C), lambda i, j: (i, j))
+    clip = None if clip is None else float(clip)
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM)]
+    args = [coefs.astype(jnp.float32)]
+    if stochastic:
+        if seed is None:
+            raise ValueError("stochastic sampler_step needs a seed")
+        kernel = functools.partial(_stoch_kernel, clip=clip, hw_prng=hw_prng)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        args.append(jnp.asarray(seed, jnp.int32).reshape(1))
+    else:
+        kernel = functools.partial(_det_kernel, clip=clip)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs + [spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((R, C), x.dtype),
+        interpret=interpret,
+    )(*args, x, eps)

@@ -1,0 +1,91 @@
+"""Jit'd wrappers + the tile-layout contract for the fused sampler step.
+
+Layout contract (who owns the (R, C) view):
+  * ``to_tile_layout(a) -> (a2, n)`` flattens ``a`` and zero-pads it into a
+    (R, TILE_C) array with R a multiple of TILE_R; ``n = a.size`` is the
+    live-element count. Padding lanes are compute garbage — never read back.
+  * ``core/sampler.sample(tile_resident=True)`` owns the view for the whole
+    S-step scan: it converts x_T ONCE on entry, carries the (R, C) state
+    through every step, and converts back ONCE on exit. Nothing inside the
+    scan body pads or reshapes the state.
+  * eps models see the natural shape via ``from_tile_layout`` (a
+    view-restoring adapter), unless they declare ``tile_aware = True`` and
+    accept the (R, C) view directly (then the body is conversion-free).
+
+``fused_sampler_step`` is the shape-flexible one-shot entry (used by the
+allclose test sweeps); ``sampler_step_tiles`` is the scan-body entry that
+stays in the tile layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import SUBLANE, TILE_C, TILE_R, sampler_step_2d
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def default_hw_prng(interpret: bool) -> bool:
+    """Hardware PRNG iff compiling for a real TPU (no CPU lowering exists)."""
+    return (not interpret) and jax.default_backend() == "tpu"
+
+
+def to_tile_layout(a: jnp.ndarray):
+    """Flatten + pad into the (R, TILE_C) tile view. Returns (view, n).
+
+    R is padded to a multiple of TILE_R when at least one full tile of
+    data exists, else to the 8-sublane granule (kernel.tile_rows picks
+    the matching block height), so small states don't balloon to a
+    65536-element minimum.
+    """
+    n = a.size
+    C = TILE_C
+    R = -(-n // C)
+    granule = TILE_R if R >= TILE_R else SUBLANE
+    R_pad = -(-R // granule) * granule
+    flat = jnp.ravel(a)
+    pad = R_pad * C - n
+    if pad:  # static, so the aligned case traces no pad op at all
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(R_pad, C), n
+
+
+def from_tile_layout(a2: jnp.ndarray, n: int, shape) -> jnp.ndarray:
+    """Restore the natural-shape view from the (R, C) tile layout."""
+    if a2.size == n:
+        return a2.reshape(shape)
+    return jnp.ravel(a2)[:n].reshape(shape)
+
+
+def sampler_step_tiles(x2: jnp.ndarray, eps2: jnp.ndarray,
+                       coefs: jnp.ndarray, seed=None, *, clip=None,
+                       stochastic: bool = False, hw_prng: bool = False,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Scan-body entry: (R, C) in -> (R, C) out, zero layout conversions."""
+    return sampler_step_2d(x2, eps2, coefs, seed, clip=clip,
+                           stochastic=stochastic, hw_prng=hw_prng,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "stochastic", "hw_prng",
+                                             "interpret"))
+def fused_sampler_step(x: jnp.ndarray, eps: jnp.ndarray, c_x0, c_dir,
+                       c_noise, sqrt_a_t, sqrt_1m_a_t, seed=0, *,
+                       clip=None, stochastic: bool = False,
+                       hw_prng: bool = False, interpret: bool = True
+                       ) -> jnp.ndarray:
+    """One-shot arbitrary-shape step: pad -> kernel -> unpad."""
+    coefs = jnp.stack([jnp.asarray(c, jnp.float32) for c in
+                       (c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t)])
+    x2, n = to_tile_layout(x)
+    e2, _ = to_tile_layout(eps)
+    out = sampler_step_tiles(x2, e2, coefs, seed, clip=clip,
+                             stochastic=stochastic, hw_prng=hw_prng,
+                             interpret=interpret)
+    return from_tile_layout(out, n, x.shape)

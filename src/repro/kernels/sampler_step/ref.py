@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the fused full-step sampler kernel.
+
+Replays the kernel's arithmetic (fp32 internal math, optional x0 clipping
+with eps re-derivation, Eq. 12 update) and — for the stochastic variant —
+the software PRNG bit-exactly: the same counter-based generator seeded per
+(TILE_R, TILE_C) grid tile, assembled over the padded layout and restored
+to the natural shape, exactly as the interpret-mode kernel produces it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import TILE_C, bits_to_normal, sw_random_bits, tile_rows
+from .ops import from_tile_layout, to_tile_layout
+
+
+def sampler_noise_tiles(seed, R: int, C: int) -> jnp.ndarray:
+    """The (R, C) normal field the software-PRNG kernel draws for ``seed``."""
+    tr = tile_rows(R)
+    ni, nj = R // tr, C // TILE_C
+    rows = []
+    for i in range(ni):
+        row = []
+        for j in range(nj):
+            tid = i * nj + j
+            b1 = sw_random_bits(seed, tid, 1, (tr, TILE_C))
+            b2 = sw_random_bits(seed, tid, 2, (tr, TILE_C))
+            row.append(bits_to_normal(b1, b2))
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def sampler_step_ref(x: jnp.ndarray, eps: jnp.ndarray, c_x0, c_dir, c_noise,
+                     sqrt_a_t, sqrt_1m_a_t, seed=None, *, clip=None,
+                     stochastic: bool = False) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    e32 = eps.astype(jnp.float32)
+    x0 = (x32 - sqrt_1m_a_t * e32) / sqrt_a_t
+    if clip is not None:
+        x0 = jnp.clip(x0, -clip, clip)
+        e32 = (x32 - sqrt_a_t * x0) / sqrt_1m_a_t
+    out = c_x0 * x0 + c_dir * e32
+    if stochastic:
+        x2, n = to_tile_layout(x)
+        noise2 = sampler_noise_tiles(seed, *x2.shape)
+        noise = from_tile_layout(noise2, n, x.shape)
+        out = out + c_noise * noise
+    return out.astype(x.dtype)

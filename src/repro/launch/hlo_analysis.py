@@ -88,7 +88,14 @@ def _operand_names(rhs: str, opword: str) -> List[str]:
             cur.append(ch)
     if cur:
         names.append("".join(cur).strip())
-    return [n.lstrip("%") for n in names if n.strip().startswith("%")]
+    # operands render either as "%name" or (newer jaxlib) with the shape
+    # inline: "f32[64,64]{1,0} %name" — the name is the last token
+    out = []
+    for n in names:
+        tok = n.split()[-1] if n.split() else ""
+        if tok.startswith("%"):
+            out.append(tok.lstrip("%"))
+    return out
 
 
 @dataclasses.dataclass

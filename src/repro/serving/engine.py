@@ -9,6 +9,16 @@ Two services:
     so steady-state cost per sample is S/batch network evals.
 
 Both pad ragged request batches to the compiled shapes (standard bucketing).
+
+Performance policy (threaded through both services):
+  * buffer donation — the jitted sampler donates x_T and the AR decode step
+    donates the KV cache, so steady-state serving allocates no new state
+    buffers. Enabled automatically on TPU/GPU (XLA:CPU cannot donate).
+  * dtype policy — DiffusionSampler can carry bf16 state while every
+    trajectory coefficient stays fp32 (the kernels compute in fp32
+    internally and cast on store).
+  * bucketed batch shapes — ragged loads are rounded up to a small ladder
+    of batch sizes so recompilation happens per bucket, not per load.
 """
 from __future__ import annotations
 
@@ -47,26 +57,44 @@ class ARGenerator:
     """Fixed-batch autoregressive server for one architecture."""
 
     def __init__(self, cfg: ArchConfig, params, batch_size: int,
-                 max_len: int, dtype=jnp.float32):
+                 max_len: int, dtype=jnp.float32,
+                 donate: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.batch = batch_size
         self.max_len = max_len
         self.dtype = dtype
         self.api = get_api(cfg)
+        if donate is None:  # XLA:CPU can't donate — avoid the warning spam
+            donate = jax.default_backend() in ("tpu", "gpu")
+        self.donate = donate
+        decode_kw = dict(donate_argnames=("cache",)) if donate else {}
         self._prefill = jax.jit(functools.partial(self.api.prefill, cfg=cfg))
         self._decode = jax.jit(functools.partial(self.api.decode_step,
-                                                 cfg=cfg))
+                                                 cfg=cfg), **decode_kw)
+        self._sample = jax.jit(self._sample_tokens,
+                               static_argnames=("max_k",))
 
-    def _sample_token(self, logits: jnp.ndarray, req_cfg: GenRequest,
-                      rng: jax.Array) -> jnp.ndarray:
-        if req_cfg.temperature <= 0.0:
-            return logits.argmax(-1)
-        logits = logits / req_cfg.temperature
-        if req_cfg.top_k:
-            top, _ = jax.lax.top_k(logits, req_cfg.top_k)
-            logits = jnp.where(logits < top[..., -1:], -jnp.inf, logits)
-        return jax.random.categorical(rng, logits, axis=-1)
+    @staticmethod
+    def _sample_tokens(logits: jnp.ndarray, temps: jnp.ndarray,
+                       top_ks: jnp.ndarray, rngs: jnp.ndarray,
+                       max_k: int) -> jnp.ndarray:
+        """Per-request sampling, vectorized over the batch.
+
+        logits (B, V); temps/top_ks (B,); rngs (B, 2). Rows with
+        temperature <= 0 are greedy; rows with top_k == 0 skip the top-k
+        filter. max_k is the static lax.top_k width (max over requests).
+        """
+        greedy = logits.argmax(-1)
+        scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+        if max_k > 0:
+            top, _ = jax.lax.top_k(scaled, max_k)
+            kth = jnp.take_along_axis(
+                top, jnp.clip(top_ks - 1, 0, max_k - 1)[:, None], axis=-1)
+            scaled = jnp.where((top_ks[:, None] > 0) & (scaled < kth),
+                               -jnp.inf, scaled)
+        sampled = jax.vmap(jax.random.categorical)(rngs, scaled)
+        return jnp.where(temps <= 0.0, greedy, sampled)
 
     def generate(self, requests: Sequence[GenRequest],
                  embeds: Optional[jnp.ndarray] = None) -> List[GenResult]:
@@ -86,11 +114,19 @@ class ARGenerator:
         logits.block_until_ready()
         t1 = time.perf_counter()
         max_new = max(r.max_new_tokens for r in reqs)
-        rng = jax.random.PRNGKey(reqs[0].rng_seed)
+        # per-request sampling params (padding rows are greedy/ignored)
+        pad = self.batch - len(reqs)
+        temps = jnp.asarray([r.temperature for r in reqs] + [0.0] * pad,
+                            jnp.float32)
+        top_ks = jnp.asarray([r.top_k for r in reqs] + [0] * pad, jnp.int32)
+        max_k = max((r.top_k for r in reqs), default=0)
+        rngs = jnp.stack([jax.random.PRNGKey(r.rng_seed) for r in reqs]
+                         + [jax.random.PRNGKey(0)] * pad)
         out = [[] for _ in range(self.batch)]
         for step in range(max_new):
-            rng, sub = jax.random.split(rng)
-            nxt = self._sample_token(logits, reqs[0], sub)
+            split = jax.vmap(functools.partial(jax.random.split, num=2))(rngs)
+            rngs, subs = split[:, 0], split[:, 1]
+            nxt = self._sample(logits, temps, top_ks, subs, max_k=max_k)
             for i in range(len(reqs)):
                 out[i].append(int(nxt[i]))
             logits, cache = self._decode(params=self.params,
@@ -118,26 +154,65 @@ class DiffusionSampler:
     """
 
     def __init__(self, schedule: NoiseSchedule, eps_fn: Callable,
-                 sample_shape: Tuple[int, ...], batch_size: int):
+                 sample_shape: Tuple[int, ...], batch_size: int,
+                 dtype=jnp.float32, tile_resident: bool = False,
+                 donate: Optional[bool] = None,
+                 bucket_sizes: Optional[Sequence[int]] = None,
+                 interpret: Optional[bool] = None):
+        """Args beyond the seed version:
+
+        dtype: state dtype (bf16 halves sampler HBM traffic; trajectory
+          coefficients stay fp32 — the kernels compute in fp32 internally).
+        tile_resident: run each batch's scan in the Pallas tile layout
+          (kernels/sampler_step) instead of the pure-jnp step.
+        donate: donate x_T into the jitted sampler (default: on TPU/GPU).
+        bucket_sizes: ascending batch-size ladder for ragged loads; the
+          tail batch compiles for the smallest bucket that fits instead of
+          the full batch. Defaults to (batch_size,) — one program.
+        interpret: Pallas interpret mode; None = compiled on TPU,
+          interpreter elsewhere. tile_resident only.
+        """
         self.schedule = schedule
         self.eps_fn = eps_fn
         self.shape = sample_shape
         self.batch = batch_size
+        self.dtype = dtype
+        self.tile_resident = tile_resident
+        self.interpret = interpret
+        if donate is None:  # XLA:CPU can't donate — avoid the warning spam
+            donate = jax.default_backend() in ("tpu", "gpu")
+        self.donate = donate
+        buckets = tuple(sorted(bucket_sizes or (batch_size,)))
+        if buckets[-1] < batch_size:
+            buckets = buckets + (batch_size,)
+        self.buckets = buckets
         self._compiled: Dict[Tuple, Callable] = {}
 
-    def _get_fn(self, cfg: SamplerConfig) -> Callable:
-        key = (cfg.S, cfg.eta, cfg.tau_kind, cfg.sigma_hat)
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _get_fn(self, cfg: SamplerConfig, batch: int) -> Callable:
+        # key on the FULL config (frozen dataclass => hashable) + shape:
+        # configs differing only in e.g. clip_x0 must not share a program
+        key = (cfg, batch)
         if key not in self._compiled:
             def run(x_T, rng):
-                return sample(self.schedule, self.eps_fn, x_T, cfg, rng=rng)
-            self._compiled[key] = jax.jit(run)
+                return sample(self.schedule, self.eps_fn, x_T, cfg, rng=rng,
+                              tile_resident=self.tile_resident,
+                              interpret=self.interpret)
+            jit_kw = dict(donate_argnums=(0,)) if self.donate else {}
+            self._compiled[key] = jax.jit(run, **jit_kw)
         return self._compiled[key]
 
-    def sample_batch(self, cfg: SamplerConfig, rng: jax.Array
-                     ) -> Tuple[jnp.ndarray, float]:
+    def sample_batch(self, cfg: SamplerConfig, rng: jax.Array,
+                     n: Optional[int] = None) -> Tuple[jnp.ndarray, float]:
+        batch = self._bucket_for(n) if n is not None else self.batch
         k1, k2 = jax.random.split(rng)
-        x_T = jax.random.normal(k1, (self.batch,) + self.shape)
-        fn = self._get_fn(cfg)
+        x_T = jax.random.normal(k1, (batch,) + self.shape, self.dtype)
+        fn = self._get_fn(cfg, batch)
         t0 = time.perf_counter()
         out = fn(x_T, k2)
         out.block_until_ready()
@@ -146,21 +221,29 @@ class DiffusionSampler:
     def serve(self, n_samples: int, cfg: SamplerConfig,
               seed: int = 0) -> Tuple[jnp.ndarray, Dict]:
         """Produce n_samples, batching as needed; returns samples + stats."""
-        outs, times = [], []
+        outs, times, sizes = [], [], []
         rng = jax.random.PRNGKey(seed)
-        n_batches = -(-n_samples // self.batch)
-        for i in range(n_batches):
+        remaining = n_samples
+        while remaining > 0:
             rng, sub = jax.random.split(rng)
-            out, dt = self.sample_batch(cfg, sub)
+            out, dt = self.sample_batch(cfg, sub, n=min(remaining,
+                                                        self.batch))
             outs.append(out)
             times.append(dt)
+            sizes.append(out.shape[0])
+            remaining -= out.shape[0]
         samples = jnp.concatenate(outs)[:n_samples]
-        # first batch includes compile; steady state excludes it
-        steady = times[1:] if len(times) > 1 else times
+        # first batch includes compile; steady state excludes it when
+        # possible. Throughput uses the ACTUAL per-batch sizes — bucketed
+        # tail batches produce fewer samples than self.batch.
+        sl = slice(1, None) if len(times) > 1 else slice(None)
         return samples, {
-            "batches": n_batches,
+            "batches": len(times),
             "first_batch_s": times[0],
-            "steady_batch_s": float(np.mean(steady)),
-            "samples_per_s": self.batch / float(np.mean(steady)),
+            "steady_batch_s": float(np.mean(times[sl])),
+            "samples_per_s": float(sum(sizes[sl])) / float(sum(times[sl])),
             "net_evals_per_sample": cfg.S,
+            "compiled_programs": len(self._compiled),
+            "dtype": jnp.dtype(self.dtype).name,
+            "donated": self.donate,
         }
