@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python -m benchmarks.run                  # full paper suite
   PYTHONPATH=src python -m benchmarks.run --budget quick
-  PYTHONPATH=src python -m benchmarks.run --suite sampler  # hot-path bench
+  PYTHONPATH=src python -m benchmarks.run --suite sampler    # hot-path bench
+  PYTHONPATH=src python -m benchmarks.run --suite scheduler  # serving bench
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
 """
@@ -27,7 +28,9 @@ PAPER_MODULES = [
 SUITES = {
     "paper": PAPER_MODULES,
     "sampler": ["benchmarks.sampler_overhead"],
-    "all": PAPER_MODULES + ["benchmarks.sampler_overhead"],
+    "scheduler": ["benchmarks.scheduler_throughput"],
+    "all": PAPER_MODULES + ["benchmarks.sampler_overhead",
+                            "benchmarks.scheduler_throughput"],
 }
 
 

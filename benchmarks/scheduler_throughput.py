@@ -1,0 +1,256 @@
+"""Continuous-batching vs lockstep DDIM serving under a Poisson trace.
+
+Replays ONE seeded arrival trace — Poisson arrivals, per-request step
+budgets drawn from a mixed-S menu (the paper's quality/latency dial) —
+through both serving paths over the same eps model and kernels:
+
+  lockstep    serving.DiffusionSampler: FIFO head-of-queue grouping by
+              EQUAL S (fixed-shape batches must share one SamplerConfig),
+              whole batch runs its full S-step scan, new arrivals wait for
+              the drain.
+  continuous  serving.scheduler.ContinuousBatchingEngine: resident slots,
+              per-row-coefficient tick, mixed S in one batch, mid-flight
+              admission/retirement.
+
+The eps model is a WEIGHT-HEAVY MLP (fixed random weights): each network
+eval streams tens of MB of weights, so an eval costs roughly the same for
+1 sample or a full batch — the weight-bound regime of real serving, where
+batch occupancy is the whole game. A cheap elementwise eps would instead
+measure CPU FLOP scaling and hide exactly the economics the scheduler
+exists for (cf. BENCH_sampler.json's modeled-HBM rationale).
+
+Clocking: service durations are REAL measured wall times, while waiting
+for arrivals advances a VIRTUAL clock (event-driven replay) — the run
+finishes in compute time, not trace time, and latency is still
+arrival-to-completion. Both paths are warmed up (compiled) before replay.
+
+Emits samples/s and p50/p95 latency per path into BENCH_scheduler.json and
+the standard Row CSV.
+
+  PYTHONPATH=src python -m benchmarks.run --suite scheduler
+  PYTHONPATH=src python -m benchmarks.scheduler_throughput           # full
+  PYTHONPATH=src python -m benchmarks.scheduler_throughput --smoke   # tier-1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import ROOT, Row
+from repro.core import SamplerConfig, make_schedule
+
+SCH = make_schedule("linear", T=1000)
+
+
+def make_eps(dim: int, hidden: int, seed: int = 0):
+    """Weight-heavy MLP eps model (fixed random weights, stable dynamics).
+
+    eps_hat = analytic shrinkage term + a small learned-style residual, so
+    trajectories stay well-behaved while every eval streams 2*dim*hidden
+    fp32 weights (the batch dimension rides along nearly for free).
+    """
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    W1 = jax.random.normal(k1, (dim, hidden)) * (1.0 / np.sqrt(dim))
+    W2 = jax.random.normal(k2, (hidden, dim)) * (1.0 / np.sqrt(hidden))
+
+    def eps_fn(x, t):
+        a = SCH.alpha_bar[t].reshape((-1,) + (1,) * (x.ndim - 1))
+        base = x * jnp.sqrt(1 - a) / (1 - a + a * 0.25)
+        resid = jnp.tanh(x @ W1) @ W2
+        return base + 0.05 * jnp.sqrt(1 - a) * resid
+
+    return eps_fn
+
+
+def make_trace(n_requests, s_menu, rate_per_s, seed=0):
+    """Poisson arrivals (virtual seconds) with per-request S off the menu."""
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    s_choices = rng.choice(s_menu, size=n_requests)
+    return [dict(request_id=i, arrival=float(arrivals[i]),
+                 S=int(s_choices[i])) for i in range(n_requests)]
+
+
+def _percentiles(latencies):
+    a = np.asarray(latencies)
+    return dict(p50_s=float(np.percentile(a, 50)),
+                p95_s=float(np.percentile(a, 95)),
+                mean_s=float(a.mean()))
+
+
+def _ladder(slots: int):
+    return tuple(2 ** k for k in range(slots.bit_length())
+                 if 2 ** k <= slots) or (slots,)
+
+
+def run_lockstep(trace, eps_fn, dim, slots, seed=0):
+    """FIFO equal-S grouping through DiffusionSampler (the baseline)."""
+    from repro.serving import DiffusionSampler
+
+    svc = DiffusionSampler(SCH, eps_fn, (dim,), batch_size=slots,
+                           tile_resident=True, bucket_sizes=_ladder(slots))
+    rng = jax.random.PRNGKey(seed)
+    # warm-up: compile every (S, bucket) program the replay can hit
+    for S in sorted({r["S"] for r in trace}):
+        for b in svc.buckets:
+            rng, sub = jax.random.split(rng)
+            svc.sample_batch(SamplerConfig(S=S), sub, n=b)
+    clock, latencies, evals = 0.0, {}, 0
+    pending = sorted(trace, key=lambda r: r["arrival"])
+    while pending:
+        head = pending[0]
+        clock = max(clock, head["arrival"])
+        # lockstep constraint: a fixed-shape batch shares one SamplerConfig,
+        # so group the FIFO head with arrived same-S requests only
+        group = [head]
+        for r in pending[1:]:
+            if len(group) >= slots:
+                break
+            if r["arrival"] <= clock and r["S"] == head["S"]:
+                group.append(r)
+        ids = {g["request_id"] for g in group}
+        pending = [r for r in pending if r["request_id"] not in ids]
+        rng, sub = jax.random.split(rng)
+        _, dt = svc.sample_batch(SamplerConfig(S=head["S"]), sub,
+                                 n=len(group))
+        evals += head["S"]   # one weight-stream per step regardless of batch
+        clock += dt
+        for g in group:
+            latencies[g["request_id"]] = clock - g["arrival"]
+    done = len(latencies)
+    span = max(clock - min(r["arrival"] for r in trace), 1e-9)
+    return dict(path="lockstep", completed=done,
+                samples_per_s=done / span, net_evals=evals,
+                **_percentiles(list(latencies.values())))
+
+
+def run_continuous(trace, eps_fn, dim, slots, seed=0):
+    """The same trace through the continuous-batching scheduler."""
+    from repro.serving import DiffusionSampler, SampleRequest
+
+    svc = DiffusionSampler(SCH, eps_fn, (dim,), batch_size=slots)
+    eng = svc.continuous(slots=slots)
+    # warm-up: compile the tick once, then zero the counters
+    eng.submit(SampleRequest(request_id=-1, S=2, seed=seed), now=0.0)
+    eng.run()
+    eng.ticks = eng.slot_steps = eng.completed = 0
+    eng._tick_wall_s = 0.0
+    clock, latencies = 0.0, {}
+    pending = sorted(trace, key=lambda r: r["arrival"])
+    while pending or eng.active or len(eng.queue):
+        if not eng.active and not len(eng.queue) and pending:
+            clock = max(clock, pending[0]["arrival"])
+        while pending and pending[0]["arrival"] <= clock:
+            r = pending.pop(0)
+            eng.submit(SampleRequest(request_id=r["request_id"], S=r["S"],
+                                     seed=seed + r["request_id"]),
+                       now=r["arrival"])
+        t0 = time.perf_counter()
+        results = eng.tick(now=clock)
+        clock += time.perf_counter() - t0
+        for res in results:
+            latencies[res.request_id] = clock - res.submit_t
+    done = len(latencies)
+    span = max(clock - min(r["arrival"] for r in trace), 1e-9)
+    st = eng.stats()
+    return dict(path="continuous", completed=done,
+                samples_per_s=done / span, net_evals=st["ticks"],
+                occupancy=st["occupancy"],
+                tick_s=st["tick_wall_s"] / max(st["ticks"], 1),
+                compiled_ticks=st["compiled_ticks"],
+                **_percentiles(list(latencies.values())))
+
+
+def run_trace(n_requests, s_menu, slots, dim, hidden, rate_per_s=None,
+              seed=0):
+    eps_fn = make_eps(dim, hidden, seed=seed)
+    if rate_per_s is None:
+        # offered load: calibrate the Poisson rate against the measured
+        # tick cost so the system runs busy (~70% of continuous capacity)
+        probe = run_continuous(make_trace(4, s_menu, 1e9, seed=1), eps_fn,
+                               dim, slots, seed=1)
+        capacity = slots / (probe["tick_s"] * float(np.mean(s_menu)))
+        rate_per_s = 0.7 * capacity
+    trace = make_trace(n_requests, s_menu, rate_per_s, seed=seed)
+    lock = run_lockstep(trace, eps_fn, dim, slots, seed=seed)
+    cont = run_continuous(trace, eps_fn, dim, slots, seed=seed)
+    return trace, lock, cont, rate_per_s
+
+
+def run(budget: str = "full"):
+    # both budgets use the weight-heavy eps (weight-bound evals — see the
+    # module docstring); quick just replays a shorter trace
+    if budget == "quick":
+        n_requests, s_menu, slots = 24, (10, 20, 50), 8
+    else:
+        n_requests, s_menu, slots = 64, (10, 20, 50, 100), 8
+    dim, hidden = 2048, 4096
+    trace, lock, cont, rate = run_trace(n_requests, s_menu, slots, dim,
+                                        hidden)
+    payload = {
+        "bench": "scheduler_throughput",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "state_dim": dim,
+        "eps_hidden": hidden,
+        "eps_weight_mb": dim * hidden * 2 * 4 / 2 ** 20,
+        "slots": slots,
+        "n_requests": n_requests,
+        "s_menu": list(s_menu),
+        "poisson_rate_per_s": float(rate),
+        "note": ("virtual-clock Poisson replay; service durations are "
+                 "measured wall time, waiting advances a virtual clock. "
+                 "lockstep = FIFO equal-S fixed-shape batches "
+                 "(DiffusionSampler), continuous = step-multiplexed slots "
+                 "(serving/scheduler). Weight-heavy eps => evals are "
+                 "weight-bound and batch occupancy dominates, as on real "
+                 "hardware"),
+        "lockstep": lock,
+        "continuous": cont,
+    }
+    with open(os.path.join(ROOT, "BENCH_scheduler.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    rows = []
+    for r in (lock, cont):
+        rows.append(Row(
+            f"scheduler_throughput/{r['path']}/mixedS",
+            r["p50_s"] * 1e6,
+            f"samples_per_s={r['samples_per_s']:.3f};"
+            f"p95_latency_s={r['p95_s']:.3f};completed={r['completed']}"))
+    return rows
+
+
+def smoke() -> int:
+    """Tiny trace for scripts/tier1.sh: both paths run, outputs sane."""
+    trace, lock, cont, _ = run_trace(n_requests=10, s_menu=(3, 5, 8),
+                                     slots=4, dim=256, hidden=256,
+                                     rate_per_s=50.0, seed=0)
+    ok = (lock["completed"] == len(trace) == cont["completed"]
+          and np.isfinite(lock["p95_s"]) and np.isfinite(cont["p95_s"])
+          and cont["compiled_ticks"] == 1)
+    print(f"scheduler smoke: lockstep {lock['samples_per_s']:.2f}/s "
+          f"p95={lock['p95_s']:.3f}s | continuous "
+          f"{cont['samples_per_s']:.2f}/s p95={cont['p95_s']:.3f}s "
+          f"({'OK' if ok else 'FAIL'})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tier-1 trace; exits nonzero on failure")
+    ap.add_argument("--budget", choices=["quick", "full"], default="full")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    print("name,us_per_call,derived")
+    for row in run(args.budget):
+        print(row.csv())

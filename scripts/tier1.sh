@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the gate every PR must keep green (see ROADMAP.md).
-#   scripts/tier1.sh            # full suite
+#   scripts/tier1.sh            # full suite + scheduler serving smoke
 #   scripts/tier1.sh tests/test_kernels.py -k sampler   # pass-through args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+# serving-path smoke: a tiny Poisson trace through BOTH the lockstep and
+# the continuous-batching scheduler paths (ISSUE 2)
+python -m benchmarks.scheduler_throughput --smoke

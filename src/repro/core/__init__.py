@@ -2,7 +2,8 @@
 from .schedules import NoiseSchedule, make_schedule, make_tau
 from .diffusion import (q_sample, predict_x0, eps_from_x0, posterior_sigma,
                         sigma_hat, gamma_weights, simple_loss, training_loss)
-from .sampler import (SamplerConfig, trajectory_coefficients, sample,
+from .sampler import (SamplerConfig, StepStates, trajectory_coefficients,
+                      sample, sample_step, slot_tile_step, step_table,
                       ddim_sample, ddpm_sample)
 from .ode import encode, decode, probability_flow_sample, multistep_sample
 from .interpolate import slerp, slerp_grid
@@ -14,7 +15,8 @@ __all__ = [
     "NoiseSchedule", "make_schedule", "make_tau",
     "q_sample", "predict_x0", "eps_from_x0", "posterior_sigma", "sigma_hat",
     "gamma_weights", "simple_loss", "training_loss",
-    "SamplerConfig", "trajectory_coefficients", "sample", "ddim_sample",
+    "SamplerConfig", "StepStates", "trajectory_coefficients", "sample",
+    "sample_step", "slot_tile_step", "step_table", "ddim_sample",
     "ddpm_sample",
     "encode", "decode", "probability_flow_sample", "multistep_sample",
     "slerp", "slerp_grid", "discrete",

@@ -26,11 +26,20 @@ Two scan-body implementations:
     and the natural shape is restored ONCE at the end. Per-step PRNG seeds
     are drawn before the scan, so the deterministic (eta=0) program
     contains no random ops inside the loop at all.
+
+Besides the whole-trajectory scan there is a SINGLE-STEP API for the
+continuous-batching scheduler (serving/scheduler): ``step_table`` lays a
+request's trajectory out as host-side per-step rows, ``StepStates``
+carries one (t, coefficients, seed) row PER SLOT, and ``sample_step`` /
+``slot_tile_step`` advance a whole slot batch one step with every slot at
+its own position in its own trajectory (kernels/sampler_step per-row
+coefficient mode). eta=0 slot trajectories are bit-identical to the
+tile-resident scan at the same S.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +112,105 @@ def trajectory_coefficients(schedule: NoiseSchedule, cfg: SamplerConfig):
         c_dir=c_dir,
         c_noise=noise_scale,
     )
+
+
+class StepStates(NamedTuple):
+    """Per-slot step state for one scheduler tick (all arrays length B).
+
+    Slot b sits at its own position of its own trajectory: ``t[b]`` is the
+    current timestep fed to the eps model and the five coefficient vectors
+    are that position's Eq. 12 row (one row of ``step_table``). ``seed`` is
+    the per-slot per-tick noise seed (stochastic engines only). A NamedTuple
+    so it flows through jax.jit as a pytree — changing slot CONTENTS never
+    changes the tick's trace.
+    """
+
+    t: jnp.ndarray
+    c_x0: jnp.ndarray
+    c_dir: jnp.ndarray
+    c_noise: jnp.ndarray
+    sqrt_a_t: jnp.ndarray
+    sqrt_1m_a_t: jnp.ndarray
+    seed: Optional[jnp.ndarray] = None
+
+    def coef_matrix(self) -> jnp.ndarray:
+        """(B, 5) float32 rows in the kernel's column order."""
+        return jnp.stack([self.c_x0, self.c_dir, self.c_noise,
+                          self.sqrt_a_t, self.sqrt_1m_a_t],
+                         axis=1).astype(jnp.float32)
+
+
+def step_table(schedule: NoiseSchedule, cfg: SamplerConfig):
+    """Host-side per-request step table for the single-step scheduler path.
+
+    ``trajectory_coefficients`` reversed into SAMPLING order and pulled to
+    numpy: row k holds the (t, c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t)
+    the k-th tick of a request consumes (k=0 is t=tau_S, k=S-1 ends at
+    x_0). The scheduler gathers one row per resident slot per tick.
+    """
+    coefs = trajectory_coefficients(schedule, cfg)
+    return {k: np.ascontiguousarray(np.asarray(v)[::-1])
+            for k, v in coefs.items()}
+
+
+def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
+                   clip_x0=None, stochastic: bool = False,
+                   want_x0: bool = False, hw_prng: bool = False,
+                   interpret: bool = True):
+    """One scheduler tick over the slot-tile view — the jit-once tick body.
+
+    ``x2`` is the (B * rows_per_slot, C) slot-tile layout owned by the
+    engine (kernels/sampler_step/ops.to_slot_tile_layout); ``shape`` is the
+    per-slot natural sample shape. eps models declaring
+    ``slot_tile_aware = True`` receive (x2, t (B,)) directly; otherwise an
+    adapter restores the natural (B, *shape) view around the eps call.
+    Returns the advanced view (plus the x0-preview view when ``want_x0``).
+    """
+    from repro.kernels.sampler_step import ops as tile_ops
+
+    B = states.t.shape[0]
+    rps = x2.shape[0] // B
+    if getattr(eps_fn, "slot_tile_aware", False):
+        eps2 = eps_fn(x2, states.t)
+    else:
+        n = int(np.prod(shape))
+        x_nat = tile_ops.from_slot_tile_layout(x2, n, (B,) + tuple(shape))
+        eps2, _ = tile_ops.to_slot_tile_layout(eps_fn(x_nat, states.t))
+    row_coefs = tile_ops.expand_slot_coefs(states.coef_matrix(), rps)
+    row_seeds = (tile_ops.derive_row_seeds(states.seed, rps)
+                 if stochastic else None)
+    return tile_ops.sampler_step_rows(
+        x2, eps2, row_coefs, row_seeds, clip=clip_x0, stochastic=stochastic,
+        want_x0=want_x0, hw_prng=hw_prng, interpret=interpret)
+
+
+def sample_step(schedule: NoiseSchedule, eps_fn, x: jnp.ndarray,
+                states: StepStates, *, clip_x0=None,
+                stochastic: bool = False, want_x0: bool = False,
+                interpret: Optional[bool] = None):
+    """Advance a slot batch ONE step, each row at its own trajectory position.
+
+    The natural-shape convenience wrapper around ``slot_tile_step`` (one
+    layout conversion in, one out per call). The engine itself keeps the
+    state tile-resident across a slot's whole lifetime and only converts at
+    admission/retirement; use this entry for standalone/step-debug use.
+    ``schedule`` is unused (coefficients arrive pre-gathered in ``states``)
+    but kept for signature symmetry with ``sample``.
+    """
+    del schedule
+    from repro.kernels.sampler_step import ops as tile_ops
+
+    if interpret is None:
+        interpret = tile_ops.default_interpret()
+    x2, n = tile_ops.to_slot_tile_layout(x)
+    out = slot_tile_step(eps_fn, x2, states, x.shape[1:], clip_x0=clip_x0,
+                         stochastic=stochastic, want_x0=want_x0,
+                         hw_prng=tile_ops.default_hw_prng(interpret),
+                         interpret=interpret)
+    if want_x0:
+        return tuple(tile_ops.from_slot_tile_layout(o, n, x.shape)
+                     for o in out)
+    return tile_ops.from_slot_tile_layout(out, n, x.shape)
 
 
 def _tile_resident_sample(schedule, eps_fn, x_T, cfg, rng,

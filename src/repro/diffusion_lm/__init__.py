@@ -1,6 +1,8 @@
 from .model import (DiffusionLMConfig, init_params, eps_forward, make_eps_fn,
+                    make_tile_eps_fn,
                     embed_tokens, round_to_tokens, training_loss,
                     generate)
 
 __all__ = ["DiffusionLMConfig", "init_params", "eps_forward", "make_eps_fn",
+           "make_tile_eps_fn",
            "embed_tokens", "round_to_tokens", "training_loss", "generate"]

@@ -146,6 +146,44 @@ def make_eps_fn(params: Params, cfg: DiffusionLMConfig, remat: bool = False):
     return eps_fn
 
 
+def make_tile_eps_fn(params: Params, cfg: DiffusionLMConfig, batch: int,
+                     seq_len: int, remat: bool = False):
+    """Tile-aware eps model: consumes the (R, 256) tile view directly.
+
+    ROADMAP "Next candidates": marking the diffusion-LM eps model
+    ``tile_aware = True`` deletes the last per-step eps repack from the
+    tile-resident scan — and the per-tick repack from the
+    continuous-batching scheduler (``slot_tile_aware``). Valid when the
+    per-sample latent size ``seq_len * latent_dim`` is a multiple of the
+    8x256 tile granule: then BOTH layouts (the scan's global flatten and
+    the scheduler's per-slot rows) are pure reshapes of the natural
+    (batch, seq_len, latent_dim) view, so the loop body traces no
+    pad/slice of the state at all.
+
+    ``t`` may be a scalar (the tile-resident scan) or a (batch,) vector
+    (the scheduler: every slot at its own timestep).
+    """
+    from repro.kernels.sampler_step.kernel import SUBLANE, TILE_C
+
+    n = seq_len * cfg.latent_dim
+    granule = SUBLANE * TILE_C
+    if n % granule:
+        raise ValueError(
+            f"tile-aware diffusion-LM needs seq_len*latent_dim divisible by "
+            f"{granule}, got {seq_len}*{cfg.latent_dim}={n}; use "
+            f"make_eps_fn (adapter path) for unaligned shapes")
+    shape = (batch, seq_len, cfg.latent_dim)
+
+    def eps_fn(x2, t):
+        t = jnp.broadcast_to(jnp.asarray(t, jnp.int32).reshape(-1), (batch,))
+        e = eps_forward(params, cfg, x2.reshape(shape), t, remat=remat)
+        return e.reshape(x2.shape)
+
+    eps_fn.tile_aware = True        # tile-resident scan (core/sampler)
+    eps_fn.slot_tile_aware = True   # scheduler slot layout (serving)
+    return eps_fn
+
+
 def embed_tokens(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
     """Tokens -> unit-scale latents (x0 of the diffusion)."""
     e = params["embed"][tokens]
@@ -180,11 +218,25 @@ def training_loss(params: Params, cfg: DiffusionLMConfig,
 
 def generate(params: Params, cfg: DiffusionLMConfig, schedule: NoiseSchedule,
              rng: jax.Array, batch: int, seq_len: int,
-             sampler: Optional[SamplerConfig] = None) -> jnp.ndarray:
-    """Sample token sequences with the (accelerated) DDIM process."""
+             sampler: Optional[SamplerConfig] = None,
+             tile_resident: bool = False) -> jnp.ndarray:
+    """Sample token sequences with the (accelerated) DDIM process.
+
+    ``tile_resident=True`` runs the scan in the Pallas tile layout with the
+    tile-aware eps model (conversion-free loop body) when the latent size
+    aligns to the tile granule, falling back to the adapter path otherwise.
+    """
     sampler = sampler or SamplerConfig(S=50, eta=0.0)
     k_init, k_samp = jax.random.split(rng)
     x_T = jax.random.normal(k_init, (batch, seq_len, cfg.latent_dim))
-    eps_fn = make_eps_fn(params, cfg)
-    x0 = sample(schedule, eps_fn, x_T, sampler, rng=k_samp)
+    if tile_resident:
+        try:
+            eps_fn = make_tile_eps_fn(params, cfg, batch, seq_len)
+        except ValueError:   # unaligned latent: adapter path still works
+            eps_fn = make_eps_fn(params, cfg)
+        x0 = sample(schedule, eps_fn, x_T, sampler, rng=k_samp,
+                    tile_resident=True)
+    else:
+        eps_fn = make_eps_fn(params, cfg)
+        x0 = sample(schedule, eps_fn, x_T, sampler, rng=k_samp)
     return round_to_tokens(params, x0)

@@ -20,7 +20,12 @@ Kernel inventory
                    counter-based software path under the interpreter), with
                    a noise-free deterministic specialization for eta=0
                    (fused_sampler_step one-shot / sampler_step_tiles
-                   scan-body entries)
+                   scan-body entries). Two coefficient modes: scalar
+                   per-call (the lockstep scan) and PER-ROW
+                   (sampler_step_rows — every tile row gathers its own
+                   c_x0/c_dir/c_noise/sqrt_a/sqrt_1m_a and PRNG seed, the
+                   step-multiplexed mode the continuous-batching scheduler
+                   ticks with; optional x0-preview second output)
 
 Tile-resident layout contract (sampler hot path)
 ------------------------------------------------
@@ -42,9 +47,14 @@ dropping the separate jax.random.normal pass.
 from .ddim_step.ops import fused_ddim_step
 from .flash_attention.ops import gqa_flash, mha_flash
 from .rmsnorm.ops import rms_norm as rms_norm_kernel
-from .sampler_step.ops import (fused_sampler_step, from_tile_layout,
-                               sampler_step_tiles, to_tile_layout)
+from .sampler_step.ops import (derive_row_seeds, expand_slot_coefs,
+                               from_slot_tile_layout, from_tile_layout,
+                               fused_sampler_step, sampler_step_rows,
+                               sampler_step_tiles, slot_rows,
+                               to_slot_tile_layout, to_tile_layout)
 
-__all__ = ["fused_ddim_step", "fused_sampler_step", "from_tile_layout",
-           "gqa_flash", "mha_flash", "rms_norm_kernel",
-           "sampler_step_tiles", "to_tile_layout"]
+__all__ = ["derive_row_seeds", "expand_slot_coefs", "from_slot_tile_layout",
+           "from_tile_layout", "fused_ddim_step", "fused_sampler_step",
+           "gqa_flash", "mha_flash", "rms_norm_kernel", "sampler_step_rows",
+           "sampler_step_tiles", "slot_rows", "to_slot_tile_layout",
+           "to_tile_layout"]

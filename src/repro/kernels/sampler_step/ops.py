@@ -12,9 +12,23 @@ Layout contract (who owns the (R, C) view):
     view-restoring adapter), unless they declare ``tile_aware = True`` and
     accept the (R, C) view directly (then the body is conversion-free).
 
+Slot-tile layout (the scheduler variant):
+  * ``to_slot_tile_layout(x) -> (x2, n)`` lays a (B, *shape) slot batch out
+    as (B * slot_rows(shape), TILE_C) with each slot's flattened state
+    zero-padded to its own whole-row granule, so every tile row belongs to
+    exactly ONE slot. Per-row coefficients (``sampler_step_rows``) then let
+    one kernel launch advance B requests each at its own trajectory
+    position. The continuous-batching engine owns this view for a slot's
+    whole residency: x_T is written at admission, every tick runs in the
+    layout, and the natural shape is read back once at retirement. When a
+    slot's flat size is already row-aligned the layout coincides with the
+    scan layout (pure reshape), so eta=0 results are bit-identical to the
+    tile-resident scan.
+
 ``fused_sampler_step`` is the shape-flexible one-shot entry (used by the
 allclose test sweeps); ``sampler_step_tiles`` is the scan-body entry that
-stays in the tile layout.
+stays in the tile layout; ``sampler_step_rows`` is the per-row scheduler
+tick entry.
 """
 from __future__ import annotations
 
@@ -22,8 +36,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .kernel import SUBLANE, TILE_C, TILE_R, sampler_step_2d
+from .kernel import (COEF_COLS, SUBLANE, TILE_C, TILE_R, _fmix32,
+                     sampler_step_2d, sampler_step_rows_2d)
 
 
 def default_interpret() -> bool:
@@ -61,6 +77,73 @@ def from_tile_layout(a2: jnp.ndarray, n: int, shape) -> jnp.ndarray:
     if a2.size == n:
         return a2.reshape(shape)
     return jnp.ravel(a2)[:n].reshape(shape)
+
+
+def slot_rows(sample_shape) -> int:
+    """Rows one slot occupies in the slot-tile layout (8-sublane granule)."""
+    n = int(np.prod(sample_shape))
+    r = -(-n // TILE_C)
+    return -(-r // SUBLANE) * SUBLANE
+
+
+def to_slot_tile_layout(x: jnp.ndarray):
+    """(B, *shape) slot batch -> ((B * slot_rows, TILE_C) view, n).
+
+    Each slot's state is flattened and zero-padded INDEPENDENTLY to a whole
+    number of rows, so row r belongs to slot r // slot_rows(shape) and the
+    per-row coefficient kernel can mix trajectory positions freely.
+    ``n = prod(shape)`` is the per-slot live-element count.
+    """
+    B, shape = x.shape[0], x.shape[1:]
+    n = int(np.prod(shape))
+    rps = slot_rows(shape)
+    flat = x.reshape(B, n)
+    pad = rps * TILE_C - n
+    if pad:  # static, so aligned slots trace no pad op at all
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat.reshape(B * rps, TILE_C), n
+
+
+def from_slot_tile_layout(x2: jnp.ndarray, n: int, batch_shape):
+    """Restore the natural (B, *shape) view from the slot-tile layout."""
+    B = batch_shape[0]
+    flat = x2.reshape(B, -1)
+    if flat.shape[1] != n:
+        flat = flat[:, :n]
+    return flat.reshape(batch_shape)
+
+
+def expand_slot_coefs(slot_coefs: jnp.ndarray, rows_per_slot: int):
+    """(B, 5) per-slot Eq. 12 coefficients -> (B*rows, COEF_COLS) per-row."""
+    c = jnp.asarray(slot_coefs, jnp.float32)
+    c = jnp.pad(c, ((0, 0), (0, COEF_COLS - c.shape[1])))
+    return jnp.repeat(c, rows_per_slot, axis=0)
+
+
+def derive_row_seeds(slot_seeds: jnp.ndarray, rows_per_slot: int):
+    """(B,) per-slot tick seeds -> (B*rows,) per-row stream seeds.
+
+    Stream identity is (slot seed, row-within-slot) — full-avalanche mixed —
+    so on the software-PRNG path a request's noise depends only on its own
+    seed and its position inside its own sample, never on which slot the
+    scheduler placed it in. (The compiled-TPU hardware PRNG seeds per tile
+    and does not carry this invariance — see kernel._row_tile_noise.)
+    """
+    s = jnp.asarray(slot_seeds).astype(jnp.uint32)[:, None]
+    r = jnp.arange(rows_per_slot, dtype=jnp.uint32)[None, :]
+    return _fmix32(s ^ (r * np.uint32(0x9E3779B9))).reshape(-1).astype(
+        jnp.int32)
+
+
+def sampler_step_rows(x2: jnp.ndarray, eps2: jnp.ndarray,
+                      row_coefs: jnp.ndarray, row_seeds=None, *, clip=None,
+                      stochastic: bool = False, want_x0: bool = False,
+                      hw_prng: bool = False, interpret: bool = True):
+    """Scheduler-tick entry: per-row coefficients, (R, C) in -> (R, C) out
+    (plus the x0 preview when want_x0), zero layout conversions."""
+    return sampler_step_rows_2d(x2, eps2, row_coefs, row_seeds, clip=clip,
+                                stochastic=stochastic, want_x0=want_x0,
+                                hw_prng=hw_prng, interpret=interpret)
 
 
 def sampler_step_tiles(x2: jnp.ndarray, eps2: jnp.ndarray,

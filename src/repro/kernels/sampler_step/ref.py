@@ -8,9 +8,11 @@ to the natural shape, exactly as the interpret-mode kernel produces it.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from .kernel import TILE_C, bits_to_normal, sw_random_bits, tile_rows
+from .kernel import (TILE_C, _GOLDEN, _fmix32, _salt, bits_to_normal,
+                     sw_random_bits, tile_rows)
 from .ops import from_tile_layout, to_tile_layout
 
 
@@ -28,6 +30,44 @@ def sampler_noise_tiles(seed, R: int, C: int) -> jnp.ndarray:
             row.append(bits_to_normal(b1, b2))
         rows.append(jnp.concatenate(row, axis=1))
     return jnp.concatenate(rows, axis=0)
+
+
+def sampler_rows_noise(row_seeds, C: int) -> jnp.ndarray:
+    """The (R, C) normal field the per-row software-PRNG kernel draws.
+
+    Per-row streams are a pure function of (row seed, global lane) — no
+    tile-id dependence — so the oracle needs no per-tile assembly at all.
+    """
+    s = jnp.asarray(row_seeds).astype(jnp.uint32)
+    R = s.shape[0]
+    c = jax.lax.broadcasted_iota(jnp.uint32, (R, C), 1)
+    k1 = _fmix32(s ^ _salt(1))[:, None]
+    k2 = _fmix32(s ^ _salt(2))[:, None]
+    b1 = _fmix32((c ^ k1) * _GOLDEN + k1)
+    b2 = _fmix32((c ^ k2) * _GOLDEN + k2)
+    return bits_to_normal(b1, b2)
+
+
+def sampler_step_rows_ref(x2: jnp.ndarray, eps2: jnp.ndarray, row_coefs,
+                          row_seeds=None, *, clip=None,
+                          stochastic: bool = False, want_x0: bool = False):
+    """Per-row-coefficient oracle over the (R, C) slot-tile view."""
+    x32 = x2.astype(jnp.float32)
+    e32 = eps2.astype(jnp.float32)
+    c = jnp.asarray(row_coefs, jnp.float32)
+    c_x0, c_dir, c_noise = c[:, 0:1], c[:, 1:2], c[:, 2:3]
+    sqrt_a_t, sqrt_1m_a_t = c[:, 3:4], c[:, 4:5]
+    x0 = (x32 - sqrt_1m_a_t * e32) / sqrt_a_t
+    if clip is not None:
+        x0 = jnp.clip(x0, -clip, clip)
+        e32 = (x32 - sqrt_a_t * x0) / sqrt_1m_a_t
+    out = c_x0 * x0 + c_dir * e32
+    if stochastic:
+        out = out + c_noise * sampler_rows_noise(row_seeds, x2.shape[1])
+    out = out.astype(x2.dtype)
+    if want_x0:
+        return out, x0.astype(x2.dtype)
+    return out
 
 
 def sampler_step_ref(x: jnp.ndarray, eps: jnp.ndarray, c_x0, c_dir, c_noise,

@@ -1,10 +1,18 @@
 """Serving driver: batched AR generation over any assigned architecture
-(reduced configs on CPU), or batched DDIM sampling from a U-Net checkpoint.
+(reduced configs on CPU), or DDIM sampling from a U-Net checkpoint — in
+lockstep batches or through the continuous-batching scheduler.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --batch 4 --new-tokens 16
   PYTHONPATH=src python -m repro.launch.serve --arch unet \
       --ckpt results/unet/ckpt_00000300.npz --S 20 --eta 0.0
+  PYTHONPATH=src python -m repro.launch.serve --arch unet --scheduler \
+      --slots 4 --s-mix 10,20,50 --n-samples 12
+
+``--scheduler`` serves a mixed-step-budget request stream through
+serving/scheduler: each request samples at its OWN S (--s-mix cycles),
+slots refill mid-flight, and per-request latency is reported alongside
+engine occupancy/throughput stats (docs/serving.md).
 """
 from __future__ import annotations
 
@@ -17,7 +25,8 @@ import numpy as np
 from repro import configs
 from repro.core import SamplerConfig, make_schedule
 from repro.models import get_api, unet
-from repro.serving import ARGenerator, DiffusionSampler, GenRequest
+from repro.serving import (ARGenerator, DiffusionSampler, GenRequest,
+                           SampleRequest)
 from repro.training import checkpoint
 
 
@@ -64,6 +73,8 @@ def serve_unet(args):
     svc = DiffusionSampler(schedule, eps_fn,
                            (args.image_size, args.image_size, 3),
                            batch_size=args.batch)
+    if args.scheduler:
+        return serve_unet_continuous(args, svc)
     cfg = SamplerConfig(S=args.S, eta=args.eta)
     samples, stats = svc.serve(args.n_samples, cfg, seed=args.seed)
     print(f"sampled {samples.shape} in {stats['batches']} batches; "
@@ -71,6 +82,31 @@ def serve_unet(args):
           f"({stats['samples_per_s']:.2f} samples/s, S={args.S})")
     if args.out:
         np.save(args.out, np.asarray(samples))
+        print(f"saved -> {args.out}")
+
+
+def serve_unet_continuous(args, svc: DiffusionSampler):
+    """Mixed-S request stream through the continuous-batching scheduler."""
+    s_mix = [int(s) for s in args.s_mix.split(",")]
+    stochastic = args.eta > 0.0
+    eng = svc.continuous(slots=args.slots, stochastic=stochastic)
+    reqs = [SampleRequest(request_id=i, S=s_mix[i % len(s_mix)],
+                          eta=args.eta, seed=args.seed + i)
+            for i in range(args.n_samples)]
+    results = eng.serve(reqs)
+    for r in sorted(results, key=lambda r: r.request_id):
+        print(f"req{r.request_id}: S={r.S} wait={r.queue_wait_s*1e3:.1f}ms "
+              f"service={r.service_s*1e3:.1f}ms "
+              f"latency={r.latency_s*1e3:.1f}ms")
+    st = eng.stats()
+    print(f"scheduler: {st['completed']} done in {st['ticks']} ticks "
+          f"(occupancy={st['occupancy']:.2f}, "
+          f"{st['steps_per_s']:.1f} slot-steps/s, "
+          f"compiled_ticks={st['compiled_ticks']})")
+    if args.out:
+        done = [r for r in sorted(results, key=lambda r: r.request_id)
+                if r.x0 is not None]
+        np.save(args.out, np.stack([r.x0 for r in done]))
         print(f"saved -> {args.out}")
 
 
@@ -88,6 +124,12 @@ def main():
     ap.add_argument("--T", type=int, default=1000)
     ap.add_argument("--S", type=int, default=20)
     ap.add_argument("--eta", type=float, default=0.0)
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the continuous-batching scheduler")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="resident scheduler slots (--scheduler)")
+    ap.add_argument("--s-mix", default="10,20,50",
+                    help="comma list of per-request step budgets to cycle")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()

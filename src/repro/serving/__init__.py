@@ -1,3 +1,7 @@
 from .engine import ARGenerator, DiffusionSampler, GenRequest, GenResult
+from .scheduler import (AdmissionQueue, ContinuousBatchingEngine,
+                        SampleRequest, SampleResult)
 
-__all__ = ["ARGenerator", "DiffusionSampler", "GenRequest", "GenResult"]
+__all__ = ["ARGenerator", "AdmissionQueue", "ContinuousBatchingEngine",
+           "DiffusionSampler", "GenRequest", "GenResult", "SampleRequest",
+           "SampleResult"]

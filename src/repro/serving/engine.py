@@ -6,9 +6,14 @@ Two services:
   * DiffusionSampler — batched DDIM sampling service for eps-models (U-Net
     or diffusion-LM): requests are grouped into fixed-shape batches, each
     batch is one jitted S-step lax.scan (the paper's accelerated sampler),
-    so steady-state cost per sample is S/batch network evals.
+    so steady-state cost per sample is S/batch network evals. This is the
+    LOCKSTEP path; ``DiffusionSampler.continuous()`` builds the
+    step-heterogeneous continuous-batching scheduler (serving/scheduler)
+    over the same model for mixed-S traffic.
 
-Both pad ragged request batches to the compiled shapes (standard bucketing).
+Both pad ragged request batches to the compiled shapes (standard bucketing);
+ragged lockstep loads split into bucket-ladder chunks (``_chunk_plan``)
+rather than padding the whole remainder to the next rung.
 
 Performance policy (threaded through both services):
   * buffer donation — the jitted sampler donates x_T and the AR decode step
@@ -194,6 +199,23 @@ class DiffusionSampler:
                 return b
         return self.buckets[-1]
 
+    def _chunk_plan(self, n: int):
+        """Split a load into bucket-ladder chunks (ragged-tail fix).
+
+        Greedy largest-bucket-that-fits; the final sub-bucket tail rounds
+        up to the smallest covering rung only. Previously the whole
+        remaining load was padded to the next rung — n just above a bucket
+        boundary (e.g. 17 on a (4, 8, 16) ladder) compiled and ran a
+        whole oversized batch (32) instead of 16 + 4.
+        """
+        plan = []
+        while n > 0:
+            fits = [b for b in self.buckets if b <= n]
+            b = max(fits) if fits else self._bucket_for(n)
+            plan.append(b)
+            n -= b
+        return plan
+
     def _get_fn(self, cfg: SamplerConfig, batch: int) -> Callable:
         # key on the FULL config (frozen dataclass => hashable) + shape:
         # configs differing only in e.g. clip_x0 must not share a program
@@ -220,22 +242,38 @@ class DiffusionSampler:
 
     def serve(self, n_samples: int, cfg: SamplerConfig,
               seed: int = 0) -> Tuple[jnp.ndarray, Dict]:
-        """Produce n_samples, batching as needed; returns samples + stats."""
+        """Produce n_samples in lockstep batches; returns samples + stats.
+
+        Ragged loads follow ``_chunk_plan``: bucket-ladder chunks instead
+        of padding the whole remainder up to the next rung. (This is the
+        fixed-shape LOCKSTEP path — every sample in a batch shares one
+        SamplerConfig and runs the whole scan together. ``continuous()``
+        builds the step-heterogeneous scheduler on the same model/config.)
+        """
+        if n_samples <= 0:
+            empty = jnp.zeros((0,) + self.shape, self.dtype)
+            return empty, {"batches": 0, "first_batch_s": 0.0,
+                           "steady_batch_s": 0.0, "samples_per_s": 0.0,
+                           "net_evals_per_sample": cfg.S,
+                           "compiled_programs": len(self._compiled),
+                           "dtype": jnp.dtype(self.dtype).name,
+                           "donated": self.donate}
         outs, times, sizes = [], [], []
         rng = jax.random.PRNGKey(seed)
-        remaining = n_samples
-        while remaining > 0:
+        delivered = 0
+        for bucket in self._chunk_plan(n_samples):
             rng, sub = jax.random.split(rng)
-            out, dt = self.sample_batch(cfg, sub, n=min(remaining,
-                                                        self.batch))
+            out, dt = self.sample_batch(cfg, sub, n=bucket)
             outs.append(out)
             times.append(dt)
-            sizes.append(out.shape[0])
-            remaining -= out.shape[0]
+            # throughput counts DELIVERED samples only — the final chunk's
+            # bucket padding (e.g. 1 live sample in a 4-bucket) is compute
+            # the caller never sees
+            sizes.append(min(out.shape[0], n_samples - delivered))
+            delivered += sizes[-1]
         samples = jnp.concatenate(outs)[:n_samples]
         # first batch includes compile; steady state excludes it when
-        # possible. Throughput uses the ACTUAL per-batch sizes — bucketed
-        # tail batches produce fewer samples than self.batch.
+        # possible
         sl = slice(1, None) if len(times) > 1 else slice(None)
         return samples, {
             "batches": len(times),
@@ -247,3 +285,20 @@ class DiffusionSampler:
             "dtype": jnp.dtype(self.dtype).name,
             "donated": self.donate,
         }
+
+    def continuous(self, slots: Optional[int] = None, **kw):
+        """Build the continuous-batching engine over this service's model.
+
+        The step-heterogeneous serving surface (serving/scheduler): same
+        schedule/eps/shape/dtype, but requests carry their OWN S, eta, tau
+        spacing and seed, are admitted mid-flight into resident slots, and
+        never wait on a batchmate's longer trajectory. Keyword args pass
+        through to ContinuousBatchingEngine (stochastic, clip_x0, preview,
+        max_queue, ...).
+        """
+        from .scheduler import ContinuousBatchingEngine
+        return ContinuousBatchingEngine(
+            self.schedule, self.eps_fn, self.shape,
+            slots=slots or self.batch, dtype=self.dtype,
+            donate=kw.pop("donate", self.donate),
+            interpret=kw.pop("interpret", self.interpret), **kw)

@@ -1,0 +1,12 @@
+"""Step-multiplexed continuous-batching scheduler for DDIM serving.
+
+See engine.py for the design: resident slots, one jitted per-row-coefficient
+tick, mid-flight admission/retirement, per-request deadlines and x0-preview
+streaming. docs/serving.md is the narrative description.
+"""
+from .engine import ContinuousBatchingEngine
+from .queue import AdmissionQueue
+from .request import SampleRequest, SampleResult
+
+__all__ = ["AdmissionQueue", "ContinuousBatchingEngine", "SampleRequest",
+           "SampleResult"]

@@ -1,0 +1,367 @@
+"""Continuous batching across diffusion timesteps (step-multiplexed slots).
+
+DDIM's accelerated sampler makes the per-request step count S a first-class
+quality/latency dial (paper Eq. 12 / §4.2), which makes STEP-HETEROGENEOUS
+batching the serving primitive: a request wanting S=20 must not wait on a
+batchmate running S=100, and new arrivals must not wait for a whole batch
+scan to drain.
+
+The engine keeps B resident SLOTS. Each slot holds one request at its own
+position in its own trajectory — its own S, eta, tau spacing, sigma-hat
+variant and noise stream. One engine TICK advances every resident slot one
+step with a single jitted step function built on the per-row-coefficient
+kernel (kernels/sampler_step.sampler_step_rows): each tile row gathers its
+slot's Eq. 12 coefficients and PRNG seed, so arbitrary trajectory mixes run
+in one kernel launch. Finished slots are retired and refilled from the
+admission queue MID-FLIGHT — no lockstep drain, and no recompilation: slot
+contents only change array values, never the tick's trace (asserted in
+tests/test_scheduler.py).
+
+State residency: the slot batch lives in the padded (B * rows_per_slot, C)
+slot-tile layout for a request's whole residency — x_T is written into the
+slot's rows at admission, every tick runs tile-resident, and the natural
+sample shape is read back once at retirement (the PR-1 layout contract
+extended across requests).
+
+Per-request extras: absolute deadlines (expired requests are dropped at
+admission, finished-late ones flagged), progressive x0-preview streaming
+(the kernel's second output, delivered through ``on_preview`` callbacks
+every ``preview_every`` ticks), and queue-wait/service/latency accounting
+per request plus engine-level throughput/occupancy stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import NoiseSchedule, SamplerConfig, StepStates
+from repro.core.sampler import slot_tile_step, step_table
+# the kernel's murmur3 finalizer is plain operator arithmetic — it mixes
+# host-side numpy uint32 arrays just as well, so the per-tick seed stream
+# can never drift from the kernel/oracle definition
+from repro.kernels.sampler_step.kernel import _GOLDEN, _fmix32
+
+from .queue import AdmissionQueue
+from .request import SampleRequest, SampleResult
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side bookkeeping for one resident request."""
+
+    req: SampleRequest
+    table: Dict[str, np.ndarray]   # per-step coefficient rows, sampling order
+    k: int                         # next step index to run (0..S-1)
+    admit_t: float
+    previews: int = 0
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous-batching server for DDIM-family sampling.
+
+    One engine == one compiled tick program per (slots, sample_shape,
+    dtype, stochastic, clip_x0, preview) configuration. Run several engines
+    for a slot-count bucket ladder; within an engine, admission, retirement
+    and arbitrary per-request (S, eta, tau) mixes never retrace.
+
+    Args:
+      schedule: the T-step noise schedule the eps model was trained with.
+      eps_fn: eps_theta(x_t, t), t an int32 (B,) vector (every slot at its
+        own timestep). Models may declare ``slot_tile_aware = True`` to
+        consume the (R, C) slot-tile view directly and skip the per-tick
+        eps repack (see diffusion_lm.make_tile_eps_fn).
+      sample_shape: per-request sample shape.
+      slots: number of resident requests B advanced per tick.
+      stochastic: compile the in-kernel-noise tick. A deterministic engine
+        (the default) serves only eta=0/non-sigma-hat requests and its tick
+        provably contains no PRNG ops; a stochastic engine serves ANY eta
+        mix (deterministic rows ride along with c_noise = 0).
+      clip_x0: engine-level |x0| clip applied to every request (a
+        compile-time kernel specialization, so it is a slot-pool property
+        rather than a per-request field).
+      preview: compile the x0-preview tick variant (kernel emits predicted
+        x0 as a second output; requests opt in via ``preview_every``).
+        Preview ticks use the explicit-x0 arithmetic (the clip path), which
+        costs eta=0 bit-exactness against the scan — see kernel docs.
+      max_queue: admission-queue depth bound (None = unbounded).
+      donate: donate the slot state into the tick (default: on TPU/GPU).
+      interpret: Pallas interpret mode; None = compiled on TPU only.
+    """
+
+    def __init__(self, schedule: NoiseSchedule, eps_fn: Callable,
+                 sample_shape: Tuple[int, ...], slots: int,
+                 dtype=jnp.float32, *, stochastic: bool = False,
+                 clip_x0: Optional[float] = None, preview: bool = False,
+                 max_queue: Optional[int] = None,
+                 donate: Optional[bool] = None,
+                 interpret: Optional[bool] = None):
+        from repro.kernels.sampler_step import ops as tile_ops
+
+        self.schedule = schedule
+        self.eps_fn = eps_fn
+        self.shape = tuple(sample_shape)
+        self.slots = int(slots)
+        self.dtype = dtype
+        self.stochastic = stochastic
+        self.clip_x0 = clip_x0
+        self.preview = preview
+        if interpret is None:
+            interpret = tile_ops.default_interpret()
+        self.interpret = interpret
+        self.hw_prng = tile_ops.default_hw_prng(interpret)
+        if donate is None:  # XLA:CPU can't donate — avoid the warning spam
+            donate = jax.default_backend() in ("tpu", "gpu")
+        self.donate = donate
+
+        self._n = int(np.prod(self.shape))
+        self._rps = tile_ops.slot_rows(self.shape)
+        self._tile_c = tile_ops.TILE_C
+        self._x2 = jnp.zeros((self.slots * self._rps, self._tile_c), dtype)
+        self._slots: List[Optional[_Slot]] = [None] * self.slots
+        self._free: List[int] = list(range(self.slots))[::-1]
+        self.queue = AdmissionQueue(max_queue)
+        self._tables: Dict[SamplerConfig, Dict[str, np.ndarray]] = {}
+        self._traces = 0
+        # inactive-slot filler row: an EXACT identity update on the no-clip
+        # path (a = c_x0/sqrt_a = 1, b = c_dir - a*sqrt_1m_a = 0 => x' = x),
+        # so idle slots never drift; the clip path divides by sqrt_1m_a, so
+        # there use 1.0 — idle slots then hold clip(x - eps), finite and
+        # bounded by the clip. Idle rows are never read back either way.
+        self._idle_row = dict(t=1, c_x0=1.0, c_dir=0.0, c_noise=0.0,
+                              sqrt_a_t=1.0,
+                              sqrt_1m_a_t=1.0 if clip_x0 is not None
+                              else 0.0)
+        # counters
+        self.ticks = 0
+        self.slot_steps = 0          # active slot-steps actually advanced
+        self.completed = 0
+        self.dropped = 0
+        self.previews_sent = 0
+        self._tick_wall_s = 0.0
+
+        self._tick_fn = self._make_tick()
+        self._write_fn = self._make_write()
+        self._xT_fn = self._make_xT()
+
+    # ------------------------------------------------------- jitted pieces
+    def _make_tick(self):
+        shape = self.shape
+
+        def tick(x2, states):
+            self._traces += 1   # host side effect: fires once per trace
+            return slot_tile_step(
+                self.eps_fn, x2, states, shape, clip_x0=self.clip_x0,
+                stochastic=self.stochastic, want_x0=self.preview,
+                hw_prng=self.hw_prng, interpret=self.interpret)
+
+        kw = dict(donate_argnums=(0,)) if self.donate else {}
+        return jax.jit(tick, **kw)
+
+    def _make_write(self):
+        def write(x2, xT2, row0):
+            return jax.lax.dynamic_update_slice(x2, xT2, (row0, 0))
+
+        kw = dict(donate_argnums=(0,)) if self.donate else {}
+        return jax.jit(write, **kw)
+
+    def _make_xT(self):
+        from repro.kernels.sampler_step import ops as tile_ops
+
+        def draw(seed):
+            x = jax.random.normal(jax.random.PRNGKey(seed),
+                                  (1,) + self.shape, self.dtype)
+            return tile_ops.to_slot_tile_layout(x)[0]
+
+        return jax.jit(draw)
+
+    # ------------------------------------------------------------ plumbing
+    def _table_for(self, req: SampleRequest) -> Dict[str, np.ndarray]:
+        cfg = req.sampler_config(self.clip_x0)
+        if cfg not in self._tables:
+            self._tables[cfg] = step_table(self.schedule, cfg)
+        return self._tables[cfg]
+
+    def submit(self, req: SampleRequest,
+               now: Optional[float] = None) -> bool:
+        """Enqueue a request; False means rejected (queue back-pressure)."""
+        if req.stochastic and not self.stochastic:
+            raise ValueError(
+                f"request {req.request_id}: eta={req.eta}/sigma_hat needs a "
+                "stochastic=True engine (deterministic tick has no PRNG)")
+        if not 1 <= req.S <= self.schedule.T:
+            raise ValueError(f"request {req.request_id}: S={req.S} outside "
+                             f"[1, T={self.schedule.T}]")
+        now = time.perf_counter() if now is None else now
+        return self.queue.submit(req, now)
+
+    @property
+    def active(self) -> int:
+        return self.slots - len(self._free)
+
+    def _drop(self, req: SampleRequest, now: float,
+              missed: bool = True) -> SampleResult:
+        self.dropped += 1
+        return SampleResult(request_id=req.request_id, x0=None, S=req.S,
+                            eta=req.eta, submit_t=req.submit_t, admit_t=None,
+                            finish_t=now, deadline_missed=missed,
+                            dropped=True)
+
+    def _admit(self, now: float, results: List[SampleResult]) -> None:
+        while self._free and len(self.queue):
+            req, missed = self.queue.pop(now)
+            results.extend(self._drop(m, now) for m in missed)
+            if req is None:
+                break
+            b = self._free.pop()
+            self._slots[b] = _Slot(req=req, table=self._table_for(req),
+                                   k=0, admit_t=now)
+            self._x2 = self._write_fn(self._x2, self._xT_fn(req.seed),
+                                      b * self._rps)
+
+    def _states(self) -> StepStates:
+        B = self.slots
+        t = np.full((B,), self._idle_row["t"], np.int32)
+        cols = {k: np.full((B,), v, np.float32)
+                for k, v in self._idle_row.items() if k != "t"}
+        seeds = np.zeros((B,), np.uint32)
+        ks = np.zeros((B,), np.uint32)
+        for b, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            tab, k = slot.table, slot.k
+            t[b] = tab["t"][k]
+            for name in cols:
+                cols[name][b] = tab[name][k]
+            seeds[b] = np.uint32(slot.req.seed & 0xFFFFFFFF)
+            ks[b] = np.uint32(k)
+        seed = None
+        if self.stochastic:
+            # per-slot per-tick stream seed: full-avalanche mix of the
+            # request seed and the step index (placement-invariant)
+            seed = jnp.asarray(
+                _fmix32(seeds ^ (ks * _GOLDEN)).astype(np.int32))
+        return StepStates(t=jnp.asarray(t),
+                          c_x0=jnp.asarray(cols["c_x0"]),
+                          c_dir=jnp.asarray(cols["c_dir"]),
+                          c_noise=jnp.asarray(cols["c_noise"]),
+                          sqrt_a_t=jnp.asarray(cols["sqrt_a_t"]),
+                          sqrt_1m_a_t=jnp.asarray(cols["sqrt_1m_a_t"]),
+                          seed=seed)
+
+    def _read_slot(self, b: int) -> np.ndarray:
+        rows = self._x2[b * self._rps:(b + 1) * self._rps]
+        if self.dtype == jnp.bfloat16:   # numpy has no bf16
+            rows = rows.astype(jnp.float32)
+        return np.asarray(rows).ravel()[:self._n].reshape(self.shape)
+
+    def _deliver_previews(self, x0_2) -> None:
+        for b, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            req, done = slot.req, slot.k + 1
+            if (req.preview_every > 0 and req.on_preview is not None
+                    and done < req.S and done % req.preview_every == 0):
+                rows = x0_2[b * self._rps:(b + 1) * self._rps]
+                x0 = np.asarray(rows).ravel()[:self._n].reshape(self.shape)
+                req.on_preview(req.request_id, done, x0)
+                slot.previews += 1
+                self.previews_sent += 1
+
+    # ----------------------------------------------------------- the loop
+    def tick(self, now: Optional[float] = None) -> List[SampleResult]:
+        """One engine tick: admit, advance every resident slot, retire.
+
+        ``now`` drives all timestamps/deadlines (virtual-clock replay); in
+        wall-clock mode (now=None) retirement re-stamps AFTER the step so
+        finish_t/deadline checks include the compute that finished it.
+        """
+        wall = now is None
+        now = time.perf_counter() if wall else now
+        results: List[SampleResult] = []
+        self._admit(now, results)
+        if self.active == 0:
+            return results
+        states = self._states()
+        t0 = time.perf_counter()
+        out = self._tick_fn(self._x2, states)
+        self._x2, x0_2 = out if self.preview else (out, None)
+        jax.block_until_ready(self._x2)
+        t1 = time.perf_counter()
+        self._tick_wall_s += t1 - t0
+        if wall:
+            now = t1
+        self.ticks += 1
+        self.slot_steps += self.active
+        if x0_2 is not None:
+            self._deliver_previews(x0_2)
+        for b, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            slot.k += 1
+            if slot.k >= slot.req.S:
+                req = slot.req
+                missed = (req.deadline is not None and now > req.deadline)
+                results.append(SampleResult(
+                    request_id=req.request_id, x0=self._read_slot(b),
+                    S=req.S, eta=req.eta, submit_t=req.submit_t,
+                    admit_t=slot.admit_t, finish_t=now,
+                    previews=slot.previews, deadline_missed=missed))
+                self.completed += 1
+                self._slots[b] = None
+                self._free.append(b)
+        return results
+
+    def run(self, max_ticks: Optional[int] = None,
+            now_fn: Optional[Callable[[], float]] = None
+            ) -> List[SampleResult]:
+        """Tick until the queue and every slot drain (or max_ticks)."""
+        results: List[SampleResult] = []
+        n = 0
+        while len(self.queue) or self.active:
+            if max_ticks is not None and n >= max_ticks:
+                break
+            results.extend(self.tick(now_fn() if now_fn else None))
+            n += 1
+        return results
+
+    def serve(self, requests: Sequence[SampleRequest],
+              now: Optional[float] = None) -> List[SampleResult]:
+        """Submit a request list and drain it — the one-call entry.
+
+        Back-pressure rejections (queue depth bound) come back as dropped
+        results, so every submitted request_id has exactly one result.
+        """
+        results: List[SampleResult] = []
+        for r in requests:
+            if not self.submit(r, now=now):
+                t = time.perf_counter() if now is None else now
+                r.submit_t = t if r.submit_t is None else r.submit_t
+                results.append(self._drop(r, t, missed=False))
+        results.extend(self.run())
+        return results
+
+    def stats(self) -> Dict:
+        denom = max(self.ticks * self.slots, 1)
+        return {
+            "slots": self.slots,
+            "ticks": self.ticks,
+            "slot_steps": self.slot_steps,
+            "occupancy": self.slot_steps / denom,
+            "completed": self.completed,
+            "dropped": self.dropped,
+            "previews_sent": self.previews_sent,
+            "queued": len(self.queue),
+            "queue_rejected": self.queue.rejected,
+            "tick_wall_s": self._tick_wall_s,
+            "steps_per_s": self.slot_steps / max(self._tick_wall_s, 1e-9),
+            "compiled_ticks": self._traces,
+            "stochastic": self.stochastic,
+            "preview": self.preview,
+            "dtype": jnp.dtype(self.dtype).name,
+            "donated": self.donate,
+        }

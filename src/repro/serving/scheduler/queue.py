@@ -1,0 +1,55 @@
+"""Admission queue for the continuous-batching scheduler.
+
+Earliest-deadline-first ordering (requests without a deadline sort last,
+FIFO among themselves), an optional depth bound for back-pressure, and
+expiry at pop time: a request whose deadline has already passed is never
+admitted to a slot — it is returned to the engine as a dropped miss so a
+doomed job cannot waste S network evaluations under overload.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from typing import List, Optional, Tuple
+
+from .request import SampleRequest
+
+
+class AdmissionQueue:
+    """EDF-ordered admission queue with optional depth bound."""
+
+    def __init__(self, max_depth: Optional[int] = None):
+        self.max_depth = max_depth
+        self._heap: List[Tuple[float, int, SampleRequest]] = []
+        self._seq = itertools.count()
+        self.submitted = 0
+        self.rejected = 0
+        self.expired = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def submit(self, req: SampleRequest, now: float) -> bool:
+        """Enqueue; False means rejected for depth (back-pressure)."""
+        if self.max_depth is not None and len(self._heap) >= self.max_depth:
+            self.rejected += 1
+            return False
+        req.submit_t = now if req.submit_t is None else req.submit_t
+        key = req.deadline if req.deadline is not None else math.inf
+        heapq.heappush(self._heap, (key, next(self._seq), req))
+        self.submitted += 1
+        return True
+
+    def pop(self, now: float
+            ) -> Tuple[Optional[SampleRequest], List[SampleRequest]]:
+        """Next admissible request + any requests that expired un-served."""
+        missed: List[SampleRequest] = []
+        while self._heap:
+            _, _, req = heapq.heappop(self._heap)
+            if req.deadline is not None and req.deadline < now:
+                missed.append(req)
+                self.expired += 1
+                continue
+            return req, missed
+        return None, missed

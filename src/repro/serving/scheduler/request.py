@@ -1,0 +1,75 @@
+"""Request/result records for the continuous-batching scheduler.
+
+A :class:`SampleRequest` is one sampling job with its OWN quality/latency
+dial: per-request step budget S, eta, tau spacing and sigma-hat variant
+(paper §4.1-4.2 — "trade off computation for sample quality"), plus serving
+metadata (seed, deadline, preview cadence). The scheduler multiplexes
+requests with arbitrary mixes of these through one resident slot batch.
+
+Timestamps are in the CALLER's clock (whatever ``now`` the engine is driven
+with — wall time by default, a virtual clock in trace-replay benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import SamplerConfig
+
+
+@dataclasses.dataclass
+class SampleRequest:
+    """One sampling job for the continuous-batching engine."""
+
+    request_id: int
+    S: int = 50                        # per-request step budget (dim tau)
+    eta: float = 0.0                   # 0 = DDIM, 1 = DDPM (Eq. 16)
+    tau_kind: str = "linear"           # per-request sub-sequence spacing
+    sigma_hat: bool = False            # over-dispersed DDPM variant
+    seed: int = 0                      # x_T + noise-stream seed
+    deadline: Optional[float] = None   # absolute completion deadline
+    preview_every: int = 0             # stream x0-previews every k ticks
+    on_preview: Optional[Callable] = None  # f(request_id, step_k, x0: np)
+    submit_t: Optional[float] = None   # stamped by the admission queue
+
+    @property
+    def stochastic(self) -> bool:
+        return self.eta > 0.0 or self.sigma_hat
+
+    def sampler_config(self, clip_x0: Optional[float] = None
+                       ) -> SamplerConfig:
+        """The equivalent whole-trajectory config (engine-level clip_x0)."""
+        return SamplerConfig(S=self.S, eta=self.eta, tau_kind=self.tau_kind,
+                             sigma_hat=self.sigma_hat, clip_x0=clip_x0)
+
+
+@dataclasses.dataclass
+class SampleResult:
+    """Completed (or dropped) request with latency accounting."""
+
+    request_id: int
+    x0: Optional[np.ndarray]           # None iff dropped before running
+    S: int
+    eta: float
+    submit_t: float
+    admit_t: Optional[float]           # None iff never admitted
+    finish_t: float
+    previews: int = 0
+    deadline_missed: bool = False      # finished (or dropped) past deadline
+    dropped: bool = False              # never ran: expired in the queue
+
+    @property
+    def queue_wait_s(self) -> float:
+        start = self.admit_t if self.admit_t is not None else self.finish_t
+        return start - self.submit_t
+
+    @property
+    def service_s(self) -> float:
+        return (self.finish_t - self.admit_t
+                if self.admit_t is not None else 0.0)
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_t - self.submit_t
