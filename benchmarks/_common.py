@@ -29,15 +29,21 @@ class Row:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
 
 
-def timed(fn: Callable, *args, repeats: int = 3) -> float:
-    """Median wall-clock seconds (post-compile)."""
+def timed(fn: Callable, *args, repeats: int = 3,
+          stat: str = "median") -> float:
+    """Wall-clock seconds (post-compile); ``stat`` 'median' or 'min'.
+
+    'min' (best-of-N) is the noise-robust estimator for regression gates
+    on shared machines — load spikes only ever inflate a sample, so the
+    minimum tracks the true cost.
+    """
     fn(*args)  # compile
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return float(np.min(ts) if stat == "min" else np.median(ts))
 
 
 # ------------------------------------------------- trained-model caching

@@ -1,12 +1,13 @@
 """Beyond-paper samplers benchmark.
 
-1. Adams-Bashforth multistep DDIM (the paper's Discussion §7 suggests it;
-   we implement and measure): same model-eval count as Euler DDIM, higher-
-   order accuracy -> better quality at very small S.
+1. Adams-Bashforth multistep DDIM (the paper's Discussion §7 suggests it):
+   a ``SamplerPlan(order=k)`` — same model-eval count as Euler DDIM,
+   higher-order accuracy -> better quality at very small S.
 2. Probability-flow Euler (paper Eq. 15): the paper predicts it degrades at
    small S relative to DDIM's d-sigma stepping; we confirm.
-3. Fused Pallas DDIM-step kernel: identical samples (allclose) to the jnp
-   path — correctness gate for the TPU kernel.
+3. Backend equivalence: the same plan on the 'tile_resident' Pallas backend
+   and the 'rows' scheduler-tick backend against the 'jnp' reference —
+   correctness gate for the TPU kernels.
 """
 from __future__ import annotations
 
@@ -15,10 +16,9 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.core import (SamplerConfig, ddim_sample, multistep_sample,
-                        probability_flow_sample, sample)
+from repro.core import probability_flow_sample
 from repro.eval import mmd_rbf
-from repro.kernels import fused_ddim_step
+from repro.sampling import SamplerPlan
 
 from ._common import Row, get_gmm_model
 
@@ -28,15 +28,16 @@ def run(budget: str = "full") -> List[Row]:
     ref = jnp.asarray(data.sample(jax.random.PRNGKey(99), 4000))
     xT = jax.random.normal(jax.random.PRNGKey(7), (4000, 2))
     # ground truth: exhaustive DDIM
-    exact = ddim_sample(schedule, eps_fn, xT, S=1000)
+    exact = SamplerPlan.build(schedule, tau=1000).run(eps_fn, xT)
     rows: List[Row] = []
     for S in ([5, 10, 20] if budget == "full" else [10]):
-        e1 = ddim_sample(schedule, eps_fn, xT, S=S)
+        e1 = SamplerPlan.build(schedule, tau=S).run(eps_fn, xT)
         rows.append(Row(f"beyond/euler_S{S}", 0.0,
                         f"mmd2={mmd_rbf(e1, ref):.5f};"
                         f"ode_err={float(jnp.mean((e1-exact)**2)):.5f}"))
         for order in (2, 3):
-            eo = multistep_sample(schedule, eps_fn, xT, S=S, order=order)
+            eo = SamplerPlan.build(schedule, tau=S, order=order).run(
+                eps_fn, xT)
             rows.append(Row(f"beyond/ab{order}_S{S}", 0.0,
                             f"mmd2={mmd_rbf(eo, ref):.5f};"
                             f"ode_err={float(jnp.mean((eo-exact)**2)):.5f}"))
@@ -44,10 +45,12 @@ def run(budget: str = "full") -> List[Row]:
         rows.append(Row(f"beyond/pf_euler_S{S}", 0.0,
                         f"mmd2={mmd_rbf(pf, ref):.5f};"
                         f"ode_err={float(jnp.mean((pf-exact)**2)):.5f}"))
-    # kernel drop-in equivalence
-    a = ddim_sample(schedule, eps_fn, xT[:512], S=20)
-    b = sample(schedule, eps_fn, xT[:512], SamplerConfig(S=20),
-               step_impl=fused_ddim_step)
-    rows.append(Row("beyond/pallas_dropin", 0.0,
-                    f"max_abs_delta={float(jnp.abs(a-b).max()):.2e}"))
+    # backend equivalence: one plan, three executors
+    plan = SamplerPlan.build(schedule, tau=20)
+    a = plan.run(eps_fn, xT[:512], backend="jnp")
+    b = plan.run(eps_fn, xT[:512], backend="tile_resident")
+    c = plan.run(eps_fn, xT[:512], backend="rows")
+    rows.append(Row("beyond/backend_equiv", 0.0,
+                    f"max_abs_delta_tile={float(jnp.abs(a-b).max()):.2e};"
+                    f"max_abs_delta_rows={float(jnp.abs(a-c).max()):.2e}"))
     return rows

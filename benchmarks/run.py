@@ -4,6 +4,14 @@
   PYTHONPATH=src python -m benchmarks.run --budget quick
   PYTHONPATH=src python -m benchmarks.run --suite sampler    # hot-path bench
   PYTHONPATH=src python -m benchmarks.run --suite scheduler  # serving bench
+  PYTHONPATH=src python -m benchmarks.run --suite sampler --check  # CI gate
+
+``--check`` (sampler suite) runs the sampler microbench WITHOUT rewriting
+the committed BENCH_sampler.json and exits non-zero on ANY growth of the
+modeled HBM-bytes-per-step or a >25% regression of a kernel path's
+wall-clock relative to the same run's 'jnp' reference (machine speed
+cancels in the ratio) — wired into scripts/tier1.sh so hot-path
+regressions can't land silently.
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
 """
@@ -41,7 +49,24 @@ def main() -> None:
                     help="module group to run (sampler = hot-path microbench)")
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
+    ap.add_argument("--check", action="store_true",
+                    help="sampler suite only: compare a fresh run against "
+                    "the committed BENCH_sampler.json (no rewrite); fail "
+                    "on >25%% wall-clock or any modeled-HBM regression")
     args = ap.parse_args()
+
+    if args.check:
+        if args.suite != "sampler":
+            ap.error("--check is defined for --suite sampler")
+        from benchmarks import sampler_overhead
+        failures = sampler_overhead.check(args.budget)
+        if failures:
+            for f in failures:
+                print(f"CHECK FAIL: {f}", file=sys.stderr)
+            sys.exit(1)
+        print("sampler benchmark check OK (within 25% of committed "
+              "BENCH_sampler.json)")
+        return
 
     print("name,us_per_call,derived")
     failed = []

@@ -1,13 +1,18 @@
-"""Sampler hot-path overhead microbench (ISSUE 1 tentpole evidence).
+"""Sampler hot-path overhead microbench (ISSUE 1 tentpole evidence,
+re-based on the unified SamplerPlan backends in ISSUE 3).
 
-Measures the per-step cost of the S-step generative loop for three scan
-bodies, holding the eps-model constant (a cheap analytic Gaussian model, so
-the numbers isolate SAMPLER overhead, not network time):
+Measures the per-step cost of the S-step generative loop for four
+executors of the SAME SamplerPlan, holding the eps-model constant (a cheap
+analytic Gaussian model, so the numbers isolate SAMPLER overhead, not
+network time):
 
-  jnp            pure-jnp StepImpl (separate normal + update passes)
-  fused_step     legacy kernels/ddim_step (per-step pad -> kernel -> unpad)
-  tile_resident  kernels/sampler_step (state stays in the (R, C) tile
-                 layout for the whole scan; noise drawn in-kernel)
+  jnp            plan.run(backend='jnp') — reference scan
+  fused_step     DEPRECATED legacy StepImpl path (per-step pad -> the
+                 sampler_step kernel via the ddim_step shim -> unpad)
+  tile_resident  plan.run(backend='tile_resident') — state stays in the
+                 (R, C) tile layout for the whole scan; noise in-kernel
+  rows           plan.run(backend='rows') — the per-row scheduler-tick
+                 kernel driven in lockstep (slot-tile layout resident)
 
 Reports wall-clock per-step ms (post-compile median) and a MODELED
 HBM-bytes-per-step figure: the count of state-sized array reads+writes the
@@ -16,6 +21,9 @@ scan body performs outside the eps model, times the element bytes. On CPU
 model is the hardware-relevant number and is what the kernel eliminates.
 
 Writes BENCH_sampler.json at the repo root and emits the standard Row CSV.
+``benchmarks.run --suite sampler --check`` re-runs the suite WITHOUT
+rewriting the file and fails on >25% regression against the committed
+baseline (see run.py).
 
   PYTHONPATH=src python -m benchmarks.run --suite sampler
   PYTHONPATH=src python -m benchmarks.sampler_overhead          # standalone
@@ -24,14 +32,16 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks._common import ROOT, Row, timed
 from repro.core import SamplerConfig, make_schedule, sample
-from repro.core.sampler import _jnp_step
-from repro.kernels import fused_ddim_step
+from repro.sampling import SamplerPlan
+
+BENCH_PATH = os.path.join(ROOT, "BENCH_sampler.json")
 
 # 65536 elements == exactly one (256, 256) tile: every path moves the same
 # live data, so modeled traffic is directly comparable
@@ -41,15 +51,17 @@ SCH = make_schedule("linear", T=1000)
 # state-sized HBM touches per scan step, by path (excluding the eps model):
 #   jnp eta>0:   normal write + update(x,eps,noise reads + x_prev write) = 5
 #   jnp eta=0:   update(x,eps reads + write) = 3  (noise pass skipped)
-#   fused eta>0: normal 1W + pack x/eps/noise 3R+3W + kernel 3R+1W
-#                + unpack 1R+1W = 13
-#   fused eta=0: zeros 1W + pack 3R+3W + kernel 3R+1W + unpack 1R+1W = 13
-#                (legacy kernel still materializes a zero noise tensor)
+#   fused eta=0: pack x 1R1W + pack eps 1R1W + kernel 2R1W + unpack 1R1W = 9
+#   fused eta>0: + normal 1W + out+noise add 2R1W = 13
 #   tile eta>=0: kernel x,eps reads + x_prev write = 3 (noise in-kernel,
 #                no layout traffic; eps pack-free for tile-aware models)
+#   rows eta>=0: per-row kernel x,eps reads + x_prev write = 3 (the
+#                (R, 8) coefficient rows are noise-level traffic)
 _TOUCHES = {"jnp": {0.0: 3, 1.0: 5},
-            "fused_step": {0.0: 13, 1.0: 13},
-            "tile_resident": {0.0: 3, 1.0: 3}}
+            "fused_step": {0.0: 9, 1.0: 13},
+            "tile_resident": {0.0: 3, 1.0: 3},
+            "rows": {0.0: 3, 1.0: 3}}
+PATHS = ("jnp", "fused_step", "tile_resident", "rows")
 
 
 def _eps_nat(x, t):
@@ -59,27 +71,37 @@ def _eps_nat(x, t):
 
 def _eps_tile(x2, t):
     a = SCH.alpha_bar[t]
+    if a.ndim:   # rows backend: (B,) slot timesteps -> per-row broadcast
+        a = jnp.repeat(a, x2.shape[0] // a.shape[0])[:, None]
     return x2 * jnp.sqrt(1 - a) / (1 - a + a * 0.25)
 
 
 _eps_tile.tile_aware = True
+_eps_tile.slot_tile_aware = True
 
 
-def _make_fn(path: str, cfg: SamplerConfig):
-    if path == "jnp":
+def _make_fn(path: str, S: int, eta: float):
+    plan = SamplerPlan.build(SCH, tau=S, sigma=eta)
+    if path == "fused_step":
+        from repro.kernels import fused_ddim_step
+        cfg = SamplerConfig(S=S, eta=eta)
+
         def fn(x, r):
-            return sample(SCH, _eps_nat, x, cfg, rng=r, step_impl=_jnp_step)
-    elif path == "fused_step":
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", DeprecationWarning)
+                return sample(SCH, _eps_nat, x, cfg, rng=r,
+                              step_impl=fused_ddim_step)
+    elif path == "jnp":
         def fn(x, r):
-            return sample(SCH, _eps_nat, x, cfg, rng=r,
-                          step_impl=fused_ddim_step)
+            return plan.run(_eps_nat, x, r, backend="jnp")
     else:
-        def fn(x, r):
-            return sample(SCH, _eps_tile, x, cfg, rng=r, tile_resident=True)
+        def fn(x, r, _backend=path):
+            return plan.run(_eps_tile, x, r, backend=_backend)
     return jax.jit(fn)
 
 
-def run(budget: str = "full"):
+def collect(budget: str = "full"):
+    """Run the suite; returns (csv rows, result dicts). Writes nothing."""
     s_list = [10, 50] if budget == "quick" else [10, 20, 50, 100]
     x = jax.random.normal(jax.random.PRNGKey(0), (BATCH, DIM))
     rng = jax.random.PRNGKey(1)
@@ -87,9 +109,11 @@ def run(budget: str = "full"):
     rows, results = [], []
     for eta in (0.0, 1.0):
         for S in s_list:
-            cfg = SamplerConfig(S=S, eta=eta)
-            for path in ("jnp", "fused_step", "tile_resident"):
-                dt = timed(_make_fn(path, cfg), x, rng)
+            for path in PATHS:
+                # best-of-5: the committed wall numbers feed the --check
+                # regression gate, so use the load-spike-robust estimator
+                dt = timed(_make_fn(path, S, eta), x, rng, repeats=5,
+                           stat="min")
                 per_step_ms = dt * 1e3 / S
                 hbm = _TOUCHES[path][eta] * elem_bytes
                 rows.append(Row(
@@ -100,6 +124,11 @@ def run(budget: str = "full"):
                                     total_ms=dt * 1e3,
                                     per_step_ms=per_step_ms,
                                     modeled_hbm_bytes_per_step=hbm))
+    return rows, results
+
+
+def run(budget: str = "full"):
+    rows, results = collect(budget)
     from repro.kernels.sampler_step.ops import default_interpret
     payload = {
         "bench": "sampler_overhead",
@@ -108,17 +137,72 @@ def run(budget: str = "full"):
         "pallas_interpret": default_interpret(),
         "shape": [BATCH, DIM],
         "dtype": "float32",
-        "state_bytes": elem_bytes,
+        "state_bytes": BATCH * DIM * 4,
         "note": ("modeled_hbm_bytes_per_step counts state-sized array "
                  "reads+writes in the scan body outside the eps model; "
                  "wall-clock on CPU interpret mode tracks dispatch "
-                 "overhead, not HBM"),
+                 "overhead, not HBM. Paths are SamplerPlan backends plus "
+                 "the deprecated fused_step shim."),
         "results": results,
     }
-    with open(os.path.join(ROOT, "BENCH_sampler.json"), "w") as f:
+    with open(BENCH_PATH, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     return rows
+
+
+def check(budget: str = "quick", threshold: float = 0.25):
+    """Compare a fresh run against the committed BENCH_sampler.json.
+
+    Returns a list of failure strings (empty = pass). Two gates:
+      * modeled HBM bytes per step must not exceed the committed model for
+        any (path, eta, S) case — this is deterministic, any growth is a
+        real hot-path regression;
+      * wall-clock, compared in MACHINE-INDEPENDENT units: each kernel
+        path's aggregate cost (sum over compared cases, each a best-of-5
+        post-compile minimum) RELATIVE to the same run's 'jnp' reference
+        aggregate. A slower/faster machine scales all paths together and
+        cancels in the ratio; a code regression in one path's scan body
+        does not. Fails when a path's relative cost grows more than
+        ``threshold`` over the committed ratio.
+    """
+    with open(BENCH_PATH) as f:
+        committed = json.load(f)["results"]
+    base = {(r["path"], r["eta"], r["S"]): r for r in committed}
+    _, fresh = collect(budget)
+    failures = []
+    wall_new = {p: 0.0 for p in PATHS}
+    wall_old = {p: 0.0 for p in PATHS}
+    compared = 0
+    for r in fresh:
+        key = (r["path"], r["eta"], r["S"])
+        if key not in base:
+            continue
+        compared += 1
+        b = base[key]
+        if r["modeled_hbm_bytes_per_step"] > b["modeled_hbm_bytes_per_step"]:
+            failures.append(
+                f"{key}: modeled HBM/step grew "
+                f"{b['modeled_hbm_bytes_per_step']} -> "
+                f"{r['modeled_hbm_bytes_per_step']} bytes")
+        wall_new[r["path"]] += r["total_ms"]
+        wall_old[r["path"]] += b["total_ms"]
+    if compared == 0 or wall_new["jnp"] <= 0.0 or wall_old["jnp"] <= 0.0:
+        failures.append("no overlapping cases between fresh run and "
+                        "committed BENCH_sampler.json")
+        return failures
+    for path in PATHS:
+        if path == "jnp":
+            continue   # the normalizer: its own drift cancels by design
+        rel_new = wall_new[path] / wall_new["jnp"]
+        rel_old = wall_old[path] / wall_old["jnp"]
+        if rel_new > rel_old * (1.0 + threshold):
+            failures.append(
+                f"{path}: wall-clock relative to jnp regressed "
+                f"{rel_old:.2f}x -> {rel_new:.2f}x "
+                f"(+{(rel_new / rel_old - 1) * 100:.0f}% > "
+                f"{threshold * 100:.0f}% threshold)")
+    return failures
 
 
 if __name__ == "__main__":

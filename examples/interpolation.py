@@ -4,9 +4,11 @@ DDIM's deterministic generative process makes x_T a semantic latent code:
 slerp between two latents produces a smooth path in sample space. DDPM's
 stochastic process destroys this (same latents -> diverse outputs).
 
-We train the 2D-GMM eps-model (fast), slerp between latents that decode to
-two different modes, and report (a) path smoothness (mean consecutive-sample
-distance / max) and (b) DDIM determinism vs DDPM dispersion at fixed x_T.
+We train the 2D-GMM eps-model (fast), build ONE deterministic
+``SamplerPlan`` and use it in both directions — ``plan.encode`` maps data
+to latents, ``plan.run`` decodes the slerp path — then report (a) path
+smoothness (mean consecutive-sample distance / max) and (b) DDIM
+determinism vs DDPM dispersion at fixed x_T.
 
   PYTHONPATH=src python examples/interpolation.py
 """
@@ -18,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (SamplerConfig, ddim_sample, make_schedule, sample,
-                        slerp, training_loss)
+from repro.core import make_schedule, slerp, training_loss
 from repro.data import GaussianMixture2D
+from repro.sampling import SamplerPlan
 from repro.training import (AdamWConfig, init_train_state,
                             make_diffusion_train_step, warmup_cosine)
 from quickstart import init_mlp, mlp_eps  # same toy model
@@ -44,20 +46,19 @@ def main(args):
         state, _ = step_fn(state, next(gen))
     eps_fn = lambda x, t: mlp_eps(state.params, x, t, T)
 
-    # two latents decoding to different modes
-    k = jax.random.PRNGKey(5)
+    # one plan, both directions: encode to latents, decode the slerp path
+    plan = SamplerPlan.build(schedule, tau=args.S)
     x0a = jnp.asarray([[4.0, 0.0]])
     x1a = jnp.asarray([[-4.0, 0.0]])
-    from repro.core import encode
-    zA = encode(schedule, eps_fn, x0a, S=args.S)
-    zB = encode(schedule, eps_fn, x1a, S=args.S)
+    zA = plan.encode(eps_fn, x0a)
+    zB = plan.encode(eps_fn, x1a)
 
     alphas = jnp.linspace(0, 1, args.n_interp)
     zs = slerp(zA[0], zB[0], alphas)
-    decoded = ddim_sample(schedule, eps_fn, zs, S=args.S)
+    decoded = plan.run(eps_fn, zs, backend="tile_resident")
     d = np.asarray(decoded)
     steps = np.linalg.norm(np.diff(d, axis=0), axis=-1)
-    print("slerp path (DDIM):")
+    print(f"slerp path ({plan}):")
     for a, pt in zip(np.asarray(alphas), d):
         print(f"  alpha={a:.2f} -> ({pt[0]:+.2f}, {pt[1]:+.2f})")
     print(f"endpoints hit: A->{d[0]} B->{d[-1]}")
@@ -65,10 +66,12 @@ def main(args):
           f"(ratio {steps.max()/max(steps.mean(),1e-9):.1f})")
 
     # determinism (§5.2): DDIM same x_T -> identical; DDPM -> dispersed
+    k = jax.random.PRNGKey(5)
     xT = jax.random.normal(k, (1, 2)).repeat(64, axis=0)
-    dd = ddim_sample(schedule, eps_fn, xT, S=50)
-    dp = sample(schedule, eps_fn, xT, SamplerConfig(S=50, eta=1.0),
-                rng=jax.random.PRNGKey(6))
+    ddim50 = SamplerPlan.build(schedule, tau=50)
+    ddpm50 = SamplerPlan.build(schedule, tau=50, sigma=1.0)
+    dd = ddim50.run(eps_fn, xT)
+    dp = ddpm50.run(eps_fn, xT, jax.random.PRNGKey(6))
     print(f"\nsame x_T, 64 runs: DDIM spread={float(jnp.std(dd, 0).max()):.4f}"
           f" DDPM spread={float(jnp.std(dp, 0).max()):.4f}")
 

@@ -2,14 +2,18 @@
 
 Trains a diffusion eps-model from scratch on synthetic data with the DDPM
 objective (paper Eq. 5, gamma=1), then samples from the SAME trained model
-with the whole generalized family (paper §4): DDIM (eta=0), eta=0.5, DDPM
-(eta=1), and sigma-hat, at several trajectory lengths S — reproducing the
-Table-1 structure. Also demonstrates the fused Pallas DDIM-step kernel as a
-drop-in (identical samples).
+with the whole generalized family (paper §4) through the declarative
+``repro.sampling.SamplerPlan`` front door: DDIM (eta=0), eta=0.5, DDPM
+(eta=1), sigma-hat, a quadratic-tau plan and a 2nd-order multistep plan,
+at several trajectory lengths S — reproducing the Table-1 structure.
+Finally demonstrates that ONE plan drives every backend: the 'jnp'
+reference scan, the 'tile_resident' Pallas hot path and the per-row
+'rows' scheduler tick produce bit-identical DDIM samples.
 
 Run (CPU, ~3 min):
   PYTHONPATH=src python examples/quickstart.py                 # 2D GMM
   PYTHONPATH=src python examples/quickstart.py --preset images # toy U-Net
+  PYTHONPATH=src python examples/quickstart.py --smoke         # CI smoke
 """
 from __future__ import annotations
 
@@ -21,13 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import (SamplerConfig, ddim_sample, make_schedule, sample,
-                        training_loss)
+from repro.core import make_schedule, training_loss
 from repro.data import GaussianMixture2D, SyntheticImages
 from repro.eval import fid_proxy, mmd_rbf, mode_coverage
-from repro.kernels import fused_ddim_step
 from repro.models import unet
 from repro.models.common import KeyGen, dense_init
+from repro.sampling import SamplerPlan, SigmaSpec, TauSpec
 from repro.training import (AdamWConfig, init_train_state,
                             make_diffusion_train_step, warmup_cosine)
 
@@ -54,6 +57,19 @@ def mlp_eps(params, x, t, T, time_dim=64):
     return h @ params["w3"]
 
 
+def _family(schedule, S):
+    """The spec gallery for one step budget S (Table-1 rows + extensions)."""
+    return [
+        ("DDIM e=0.0", SamplerPlan.build(schedule, tau=S)),
+        ("eta=0.5", SamplerPlan.build(schedule, tau=S, sigma=0.5)),
+        ("DDPM e=1.0", SamplerPlan.build(schedule, tau=S, sigma=1.0)),
+        ("sigma-hat", SamplerPlan.build(schedule, tau=S,
+                                        sigma=SigmaSpec.ddpm(sigma_hat=True))),
+        ("quad-tau", SamplerPlan.build(schedule, tau=TauSpec.quadratic(S))),
+        ("AB-2", SamplerPlan.build(schedule, tau=S, order=2)),
+    ]
+
+
 def run_gmm(args):
     T = args.T
     schedule = make_schedule("linear", T=T)
@@ -76,38 +92,33 @@ def run_gmm(args):
     print(f"trained in {time.time()-t0:.1f}s")
 
     eps_fn = lambda x, t: mlp_eps(state.params, x, t, T)
-    ref = np.asarray(data.sample(jax.random.PRNGKey(99), 4000))
-    xT = jax.random.normal(jax.random.PRNGKey(7), (4000, 2))
+    n = args.n_samples
+    ref = np.asarray(data.sample(jax.random.PRNGKey(99), n))
+    xT = jax.random.normal(jax.random.PRNGKey(7), (n, 2))
     print(f"\n{'sampler':>14s} {'S':>5s} {'MMD^2':>9s} {'modes':>6s} "
           f"{'precision':>9s}")
     for S in args.steps_list:
-        for name, cfg in [
-            ("DDIM e=0.0", SamplerConfig(S=S, eta=0.0)),
-            ("eta=0.5", SamplerConfig(S=S, eta=0.5)),
-            ("DDPM e=1.0", SamplerConfig(S=S, eta=1.0)),
-            ("sigma-hat", SamplerConfig(S=S, eta=1.0, sigma_hat=True)),
-        ]:
-            out = sample(schedule, eps_fn, xT, cfg,
-                         rng=jax.random.PRNGKey(3))
+        for name, plan in _family(schedule, S):
+            out = plan.run(eps_fn, xT, jax.random.PRNGKey(3))
             m2 = mmd_rbf(out, jnp.asarray(ref))
             modes, prec = mode_coverage(np.asarray(out), data.modes())
             print(f"{name:>14s} {S:5d} {m2:9.5f} {modes:6d} {prec:9.3f}",
                   flush=True)
 
-    # the fused Pallas kernel is a drop-in: identical DDIM trajectory
-    a = ddim_sample(schedule, eps_fn, xT[:256], S=20)
-    b = sample(schedule, eps_fn, xT[:256], SamplerConfig(S=20),
-               step_impl=fused_ddim_step)
-    print(f"\nPallas fused step max|delta| vs jnp path: "
-          f"{float(jnp.abs(a-b).max()):.2e}")
-
-    # the tile-resident hot path goes further: one layout conversion for
-    # the WHOLE S-step scan, clipping + noise fused into the kernel
-    # (benchmarks/sampler_overhead.py quantifies the saved HBM traffic)
-    c = sample(schedule, eps_fn, xT[:256], SamplerConfig(S=20),
-               tile_resident=True)
-    print(f"tile-resident sampler max|delta| vs jnp path: "
-          f"{float(jnp.abs(a-c).max()):.2e}")
+    # ONE plan drives every backend: the reference scan, the tile-resident
+    # Pallas hot path, and the per-row scheduler tick. The step arithmetic
+    # is bit-identical across backends (asserted with layout-invariant
+    # models in tests/test_sampler_plan.py); through a real MLP the only
+    # residual is CPU matmul reduction order under different layouts.
+    plan = SamplerPlan.build(schedule, tau=min(args.steps_list))
+    outs = {b: plan.run(eps_fn, xT[:256], backend=b)
+            for b in ("jnp", "tile_resident", "rows")}
+    d_tile = float(jnp.abs(outs["jnp"] - outs["tile_resident"]).max())
+    d_rows = float(jnp.abs(outs["jnp"] - outs["rows"]).max())
+    print(f"\n{plan}")
+    print(f"backend max|delta| vs jnp: tile_resident={d_tile:.1e} "
+          f"rows={d_rows:.1e}")
+    assert d_tile < 1e-4 and d_rows < 1e-4, "backend equivalence violated"
 
 
 def run_images(args):
@@ -139,10 +150,11 @@ def run_images(args):
     xT = jax.random.normal(jax.random.PRNGKey(7), (128, 16, 16, 3))
     print(f"\n{'sampler':>14s} {'S':>5s} {'FID-proxy':>10s}")
     for S in args.steps_list:
-        for name, cfg in [("DDIM e=0.0", SamplerConfig(S=S, eta=0.0)),
-                          ("DDPM e=1.0", SamplerConfig(S=S, eta=1.0))]:
-            out = sample(schedule, eps_fn, xT, cfg,
-                         rng=jax.random.PRNGKey(3))
+        for name, plan in [
+                ("DDIM e=0.0", SamplerPlan.build(schedule, tau=S)),
+                ("DDPM e=1.0", SamplerPlan.build(schedule, tau=S,
+                                                 sigma=1.0))]:
+            out = plan.run(eps_fn, xT, jax.random.PRNGKey(3))
             print(f"{name:>14s} {S:5d} {fid_proxy(out, ref):10.3f}",
                   flush=True)
 
@@ -153,9 +165,18 @@ if __name__ == "__main__":
     ap.add_argument("--steps", type=int, default=2000)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--T", type=int, default=1000)
+    ap.add_argument("--n-samples", type=int, default=4000)
     ap.add_argument("--steps-list", type=int, nargs="+",
                     default=[10, 50])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI smoke: tiny training run + S=5 sweep "
+                    "(wired into scripts/tier1.sh so the example cannot "
+                    "silently rot)")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps = 60
+        args.steps_list = [5]
+        args.n_samples = 512
     if args.preset == "gmm":
         run_gmm(args)
     else:

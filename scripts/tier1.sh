@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the gate every PR must keep green (see ROADMAP.md).
-#   scripts/tier1.sh            # full suite + scheduler serving smoke
+#   scripts/tier1.sh            # full suite + serving + example + bench gates
 #   scripts/tier1.sh tests/test_kernels.py -k sampler   # pass-through args
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -9,3 +9,11 @@ python -m pytest -x -q "$@"
 # serving-path smoke: a tiny Poisson trace through BOTH the lockstep and
 # the continuous-batching scheduler paths (ISSUE 2)
 python -m benchmarks.scheduler_throughput --smoke
+# example smoke: quickstart trains a tiny model and runs the SamplerPlan
+# spec gallery + backend-equivalence assertion (ISSUE 3 — examples can't
+# silently rot against the front-door API)
+python examples/quickstart.py --smoke
+# hot-path regression gate: fresh sampler microbench vs the committed
+# BENCH_sampler.json — fails on any modeled-HBM growth or >25% wall-clock
+# growth relative to the same run's jnp reference (machine-independent)
+python -m benchmarks.run --suite sampler --check --budget quick

@@ -1,4 +1,10 @@
-"""Core DDIM library — the paper's contribution as composable JAX modules."""
+"""Core DDIM library — the paper's contribution as composable JAX modules.
+
+Sampling front door: ``repro.sampling.SamplerPlan`` (declarative tau /
+sigma / x0 / solver-order specs compiled once and run on any backend).
+The entries here are the stable functional surface over it; ddim_sample /
+ddpm_sample / multistep_sample are deprecated shims.
+"""
 from .schedules import NoiseSchedule, make_schedule, make_tau
 from .diffusion import (q_sample, predict_x0, eps_from_x0, posterior_sigma,
                         sigma_hat, gamma_weights, simple_loss, training_loss)

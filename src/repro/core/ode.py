@@ -3,13 +3,21 @@ multistep solvers.
 
 With x_bar = x/sqrt(a) and sigma = sqrt((1-a)/a), DDIM is Euler on
 ``d x_bar = eps_theta(x) d sigma`` (Eq. 14). Integrating forward in t encodes
-x0 -> x_T (a latent the deterministic sampler reconstructs from — Table 2);
-the paper's Discussion suggests multistep methods (Adams–Bashforth), which we
-implement here beyond the paper's own experiments.
+x0 -> x_T (a latent the deterministic sampler reconstructs from — Table 2).
+
+The implementations live in ``repro.sampling``: ``SamplerPlan.encode`` is
+the forward direction on ANY plan trajectory (uniform/quadratic/learned
+tau, Euler or Adams–Bashforth order), and a ``SamplerPlan(order=k)`` run is
+the multistep sampler — the AB weights are baked into the plan's per-step
+coefficient table, so the same program serves every backend and the
+continuous-batching scheduler can mix solver orders across slots. This
+module keeps the stable functional entries (``encode``/``decode``), the
+probability-flow Euler discretization (a genuinely different scheme,
+paper Eq. 15), and the DEPRECATED ``multistep_sample`` wrapper.
 """
 from __future__ import annotations
 
-from typing import Optional
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -24,38 +32,30 @@ def _sig(schedule: NoiseSchedule, t: jnp.ndarray) -> jnp.ndarray:
     return jnp.sqrt((1.0 - a) / a)
 
 
+def _plan(schedule: NoiseSchedule, S: int, tau_kind: str, order: int = 1):
+    from repro.sampling import SamplerPlan, TauSpec
+    kind = "uniform" if tau_kind == "linear" else tau_kind
+    return SamplerPlan.build(schedule, tau=TauSpec(kind=kind, S=S),
+                             order=order)
+
+
 def encode(schedule: NoiseSchedule, eps_fn: EpsFn, x0: jnp.ndarray,
            S: int = 100, tau_kind: str = "linear") -> jnp.ndarray:
     """Run Eq. 13 forward in t: x0 -> x_T (deterministic latent).
 
-    The reverse of DDIM sampling with the same trajectory tau; Euler steps in
-    sigma with eps evaluated at the left (lower-noise) endpoint.
+    The reverse of DDIM sampling with the same trajectory tau; Euler steps
+    in sigma with eps evaluated at the left (lower-noise) endpoint.
+    Functional entry over ``SamplerPlan.encode`` — build a plan directly
+    for quadratic/learned tau or multistep encoding.
     """
-    tau = make_tau(schedule.T, S, tau_kind)
-    t_from = jnp.asarray(np.concatenate([[0], tau[:-1]]), dtype=jnp.int32)
-    t_to = jnp.asarray(tau, dtype=jnp.int32)
-    batch = x0.shape[0]
-
-    def body(x, ts):
-        tf, tt = ts
-        a_f, a_t = schedule.alpha_bar[tf], schedule.alpha_bar[tt]
-        # eps is evaluated at max(tf, 1): the model grid starts at t=1.
-        t_eval = jnp.full((batch,), jnp.maximum(tf, 1), dtype=jnp.int32)
-        eps = eps_fn(x, t_eval)
-        xbar = x / jnp.sqrt(a_f)
-        xbar = xbar + (_sig(schedule, tt) - _sig(schedule, tf)) * eps
-        return xbar * jnp.sqrt(a_t), None
-
-    x_T, _ = jax.lax.scan(body, x0, (t_from, t_to))
-    return x_T
+    return _plan(schedule, S, tau_kind).encode(eps_fn, x0)
 
 
 def decode(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
            S: int = 100, tau_kind: str = "linear") -> jnp.ndarray:
-    """Deterministic reconstruction — DDIM sampling (kept here for symmetry
-    with :func:`encode`; identical to sampler.ddim_sample)."""
-    from .sampler import ddim_sample
-    return ddim_sample(schedule, eps_fn, x_T, S=S, tau_kind=tau_kind)
+    """Deterministic reconstruction — the eta=0 plan run (kept here for
+    symmetry with :func:`encode`)."""
+    return _plan(schedule, S, tau_kind).run(eps_fn, x_T)
 
 
 def probability_flow_sample(schedule: NoiseSchedule, eps_fn: EpsFn,
@@ -66,6 +66,7 @@ def probability_flow_sample(schedule: NoiseSchedule, eps_fn: EpsFn,
     Equivalent to DDIM in the continuum limit (Proposition 1), but takes
     Euler steps w.r.t. dt (via the 1/2 d(sigma^2) form) rather than d sigma —
     the paper notes this degrades at small S, which our benchmark confirms.
+    (Not a plan backend: it discretizes a different form on purpose.)
     """
     tau = make_tau(schedule.T, S, tau_kind)
     t_cur = jnp.asarray(tau[::-1].copy(), dtype=jnp.int32)
@@ -89,42 +90,15 @@ def probability_flow_sample(schedule: NoiseSchedule, eps_fn: EpsFn,
 def multistep_sample(schedule: NoiseSchedule, eps_fn: EpsFn,
                      x_T: jnp.ndarray, S: int = 25, order: int = 2,
                      tau_kind: str = "linear") -> jnp.ndarray:
-    """Adams–Bashforth multistep DDIM (beyond-paper; paper Discussion §7).
+    """DEPRECATED: use ``SamplerPlan.build(schedule, tau=S, order=order)``.
 
-    In x_bar/sigma coordinates the RHS is just eps, so AB-k reuses the last k
-    eps evaluations: same model-eval count as DDIM but O(h^k) local error,
-    improving quality at very small S.
+    Adams–Bashforth multistep DDIM (beyond-paper; paper Discussion §7):
+    in x_bar/sigma coordinates the RHS is just eps, so AB-k reuses the
+    last k eps evaluations — same model-eval count as DDIM but O(h^k)
+    local error. Now a solver-order-k plan; kept as a thin shim.
     """
-    if order not in (1, 2, 3, 4):
-        raise ValueError("order must be in 1..4")
-    # AB-k coefficients, padded to `order` so every branch has equal shape.
-    all_coefs = [[1.0], [1.5, -0.5], [23 / 12, -16 / 12, 5 / 12],
-                 [55 / 24, -59 / 24, 37 / 24, -9 / 24]]
-    ab_coefs = [c + [0.0] * (order - len(c)) for c in all_coefs[:order]]
-    tau = make_tau(schedule.T, S, tau_kind)
-    t_cur = jnp.asarray(tau[::-1].copy(), dtype=jnp.int32)
-    t_prev = jnp.asarray(np.concatenate([[0], tau[:-1]])[::-1].copy(),
-                         dtype=jnp.int32)
-    batch = x_T.shape[0]
-
-    def body(carry, ts):
-        x, hist, n_valid = carry            # hist: (order, *x.shape)
-        tc, tp = ts
-        a_t, a_s = schedule.alpha_bar[tc], schedule.alpha_bar[tp]
-        eps = eps_fn(x, jnp.full((batch,), tc, dtype=jnp.int32))
-        hist = jnp.concatenate([eps[None], hist[:-1]], axis=0)
-        n_valid = jnp.minimum(n_valid + 1, order)
-        # effective order limited by available history (Euler warm-up)
-        eff = jax.lax.switch(
-            n_valid - 1,
-            [lambda h=h: sum(c * hist[j]
-                             for j, c in enumerate(ab_coefs[h]))
-             for h in range(order)])
-        dsig = _sig(schedule, tp) - _sig(schedule, tc)
-        xbar = x / jnp.sqrt(a_t) + dsig * eff
-        return (xbar * jnp.sqrt(a_s), hist, n_valid), None
-
-    hist0 = jnp.zeros((order,) + x_T.shape, dtype=x_T.dtype)
-    (x0, _, _), _ = jax.lax.scan(
-        body, (x_T, hist0, jnp.asarray(0, jnp.int32)), (t_cur, t_prev))
-    return x0
+    warnings.warn(
+        "multistep_sample is deprecated: use repro.sampling.SamplerPlan."
+        "build(schedule, tau=S, order=order).run(eps_fn, x_T)",
+        DeprecationWarning, stacklevel=2)
+    return _plan(schedule, S, tau_kind, order=order).run(eps_fn, x_T)

@@ -11,51 +11,48 @@ eta=1 -> DDPM, and the over-dispersed sigma-hat variant of Ho et al.'s
 CIFAR10 runs. The trajectory runs over a sub-sequence tau (§4.2) so S << T
 network evaluations produce a sample.
 
-The full S-step loop is one ``jax.lax.scan`` — a single XLA program, the TPU
-analogue of CUDA-graph capture (no host round-trips between steps).
+THE FRONT DOOR for all of this is now ``repro.sampling.SamplerPlan``: a
+declarative (TauSpec, SigmaSpec, X0Policy, solver order) bundle compiled
+once into the canonical per-step coefficient table and executed on any
+backend (``plan.run(..., backend='jnp'|'tile_resident'|'rows')``, plus
+``plan.encode`` for the ODE inversion).  This module keeps:
 
-Two scan-body implementations:
-
-  * the pure-jnp ``StepImpl`` path (default) — the oracle. A drop-in fused
-    kernel (kernels/ddim_step) can replace the update, but the state still
-    enters/exits the kernel's padded tile layout every step.
-  * the tile-resident path (``tile_resident=True``) — the production hot
-    path. x_T is converted to the padded (R, C) tile layout ONCE, the whole
-    scan carries that layout (kernels/sampler_step fuses x0-prediction,
-    optional clipping, the Eq. 12 update, and in-kernel noise generation),
-    and the natural shape is restored ONCE at the end. Per-step PRNG seeds
-    are drawn before the scan, so the deterministic (eta=0) program
-    contains no random ops inside the loop at all.
-
-Besides the whole-trajectory scan there is a SINGLE-STEP API for the
-continuous-batching scheduler (serving/scheduler): ``step_table`` lays a
-request's trajectory out as host-side per-step rows, ``StepStates``
-carries one (t, coefficients, seed) row PER SLOT, and ``sample_step`` /
-``slot_tile_step`` advance a whole slot batch one step with every slot at
-its own position in its own trajectory (kernels/sampler_step per-row
-coefficient mode). eta=0 slot trajectories are bit-identical to the
-tile-resident scan at the same S.
+  * ``SamplerConfig`` + ``sample()`` — the stable convenience entry,
+    now a thin adapter that builds a plan and dispatches a backend
+    ('tile_resident' flag -> the Pallas tile-resident scan);
+  * ``trajectory_coefficients`` / ``step_table`` — coefficient views read
+    from the SAME compiled plan (one coefficient program repo-wide);
+  * the SINGLE-STEP API for the continuous-batching scheduler
+    (``StepStates`` / ``sample_step`` / ``slot_tile_step``), extended with
+    optional per-slot Adams–Bashforth solver state so the scheduler can
+    mix solver orders across resident slots;
+  * DEPRECATED wrappers ``ddim_sample`` / ``ddpm_sample`` (and the
+    injectable ``step_impl`` scan) — thin shims over plans that emit
+    DeprecationWarning; no non-test call site uses them anymore.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .diffusion import EpsFn, _bcast, predict_x0
-from .schedules import NoiseSchedule, make_tau
+from . import solver
+from .diffusion import EpsFn, predict_x0
+from .schedules import NoiseSchedule
 
 # A fused update implementation: (x, eps, noise, c_x0, c_dir, c_noise,
-# sqrt_a_t, sqrt_1m_a_t) -> x_prev. Injectable so the Pallas kernel
-# (kernels/ddim_step) can replace the pure-jnp path without a circular import.
+# sqrt_a_t, sqrt_1m_a_t) -> x_prev. Injectable so the legacy Pallas kernel
+# (kernels/ddim_step) can replace the pure-jnp path without a circular
+# import. DEPRECATED: build a SamplerPlan and pick a backend instead.
 StepImpl = Callable[..., jnp.ndarray]
 
 
 def _jnp_step(x, eps, noise, c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t):
-    """Reference fused Eq.12 update (pure jnp).
+    """Reference fused Eq.12 update (pure jnp) for the legacy StepImpl path.
 
     ``noise`` is None on the deterministic (eta=0, no sigma-hat) path —
     the noise term is skipped entirely rather than multiplied by zero.
@@ -69,7 +66,10 @@ def _jnp_step(x, eps, noise, c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t):
 
 @dataclasses.dataclass(frozen=True)
 class SamplerConfig:
-    """How to produce samples from a trained eps-model (paper §5 knobs)."""
+    """How to produce samples from a trained eps-model (paper §5 knobs).
+
+    The scalar-knob subset of the full plan surface; ``to_plan`` lifts it.
+    """
 
     S: int = 50                       # dim(tau): number of sampler steps
     eta: float = 0.0                  # 0 = DDIM, 1 = DDPM (Eq. 16)
@@ -81,37 +81,20 @@ class SamplerConfig:
         if self.sigma_hat and self.eta != 1.0:
             raise ValueError("sigma_hat is a DDPM (eta=1) variant")
 
+    def to_plan(self, schedule: NoiseSchedule, order: int = 1):
+        """The equivalent compiled SamplerPlan."""
+        from repro.sampling import SamplerPlan
+        return SamplerPlan.from_config(schedule, self, order=order)
+
 
 def trajectory_coefficients(schedule: NoiseSchedule, cfg: SamplerConfig):
-    """Precompute per-step scalar coefficients for the Eq. 12 update.
+    """Per-step scalar coefficients for the Eq. 12 update (legacy view).
 
-    Returns dict of (S,) arrays: t (current step), and the five coefficients
-    consumed by the fused step. Computed in float64-free numpy->jnp once, so
-    the scan body is pure FMA work.
+    Returns dict of (S,) arrays in TRAJECTORY order (increasing t): t and
+    the five coefficients consumed by the fused step. Read from the
+    compiled SamplerPlan so the whole repo shares one coefficient program.
     """
-    tau = make_tau(schedule.T, cfg.S, cfg.tau_kind)          # increasing, len S
-    t_cur = jnp.asarray(tau, dtype=jnp.int32)
-    t_prev = jnp.asarray(np.concatenate([[0], tau[:-1]]), dtype=jnp.int32)
-
-    a_t = schedule.alpha_bar[t_cur]
-    a_s = schedule.alpha_bar[t_prev]
-    sigma = cfg.eta * jnp.sqrt((1.0 - a_s) / (1.0 - a_t)) * jnp.sqrt(
-        1.0 - a_t / a_s)
-    if cfg.sigma_hat:
-        noise_scale = jnp.sqrt(1.0 - a_t / a_s)   # hat-sigma: bigger noise
-    else:
-        noise_scale = sigma
-    # last step (t -> 0): the generative process draws x0 with std sigma_1
-    # (Eq. 10 case t=1); the direction term vanishes since a_0 = 1.
-    c_dir = jnp.sqrt(jnp.clip(1.0 - a_s - sigma ** 2, 0.0, None))
-    return dict(
-        t=t_cur,
-        sqrt_a_t=jnp.sqrt(a_t),
-        sqrt_1m_a_t=jnp.sqrt(1.0 - a_t),
-        c_x0=jnp.sqrt(a_s),
-        c_dir=c_dir,
-        c_noise=noise_scale,
-    )
+    return cfg.to_plan(schedule).coefficients()
 
 
 class StepStates(NamedTuple):
@@ -119,10 +102,12 @@ class StepStates(NamedTuple):
 
     Slot b sits at its own position of its own trajectory: ``t[b]`` is the
     current timestep fed to the eps model and the five coefficient vectors
-    are that position's Eq. 12 row (one row of ``step_table``). ``seed`` is
-    the per-slot per-tick noise seed (stochastic engines only). A NamedTuple
-    so it flows through jax.jit as a pytree — changing slot CONTENTS never
-    changes the tick's trace.
+    are that position's Eq. 12 row (one row of the slot plan's table).
+    ``seed`` is the per-slot per-tick noise seed (stochastic engines only);
+    ``solver_w`` is the per-slot (B, max_order) Adams–Bashforth weight row
+    (multistep-capable engines only — None keeps the order-1 tick's pytree
+    unchanged). A NamedTuple so it flows through jax.jit as a pytree —
+    changing slot CONTENTS never changes the tick's trace.
     """
 
     t: jnp.ndarray
@@ -132,6 +117,7 @@ class StepStates(NamedTuple):
     sqrt_a_t: jnp.ndarray
     sqrt_1m_a_t: jnp.ndarray
     seed: Optional[jnp.ndarray] = None
+    solver_w: Optional[jnp.ndarray] = None
 
     def coef_matrix(self) -> jnp.ndarray:
         """(B, 5) float32 rows in the kernel's column order."""
@@ -143,20 +129,19 @@ class StepStates(NamedTuple):
 def step_table(schedule: NoiseSchedule, cfg: SamplerConfig):
     """Host-side per-request step table for the single-step scheduler path.
 
-    ``trajectory_coefficients`` reversed into SAMPLING order and pulled to
-    numpy: row k holds the (t, c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t)
-    the k-th tick of a request consumes (k=0 is t=tau_S, k=S-1 ends at
-    x_0). The scheduler gathers one row per resident slot per tick.
+    The compiled plan's table in SAMPLING order: row k holds the
+    (t, c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t) the k-th tick of a
+    request consumes (k=0 is t=tau_S, k=S-1 ends at x_0), plus the
+    (S, order) ``solver_w`` Adams–Bashforth weights. The scheduler gathers
+    one row per resident slot per tick.
     """
-    coefs = trajectory_coefficients(schedule, cfg)
-    return {k: np.ascontiguousarray(np.asarray(v)[::-1])
-            for k, v in coefs.items()}
+    return cfg.to_plan(schedule).steps()
 
 
 def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
-                   clip_x0=None, stochastic: bool = False,
-                   want_x0: bool = False, hw_prng: bool = False,
-                   interpret: bool = True):
+                   hist2: Optional[jnp.ndarray] = None, clip_x0=None,
+                   stochastic: bool = False, want_x0: bool = False,
+                   hw_prng: bool = False, interpret: bool = True):
     """One scheduler tick over the slot-tile view — the jit-once tick body.
 
     ``x2`` is the (B * rows_per_slot, C) slot-tile layout owned by the
@@ -164,7 +149,14 @@ def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
     per-slot natural sample shape. eps models declaring
     ``slot_tile_aware = True`` receive (x2, t (B,)) directly; otherwise an
     adapter restores the natural (B, *shape) view around the eps call.
-    Returns the advanced view (plus the x0-preview view when ``want_x0``).
+
+    Multistep engines pass ``hist2`` — the (max_order-1, R, C) float32
+    stack of previous eps evaluations, newest first — and per-slot
+    ``states.solver_w`` weights; each slot's effective eps becomes its own
+    Adams–Bashforth combination (order-1 slots carry weight rows [1, 0...]
+    and ride along unchanged). Returns the advanced view (plus the
+    x0-preview view when ``want_x0``); with ``hist2`` the return is
+    ``(step_out, new_hist2)``.
     """
     from repro.kernels.sampler_step import ops as tile_ops
 
@@ -176,12 +168,27 @@ def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
         n = int(np.prod(shape))
         x_nat = tile_ops.from_slot_tile_layout(x2, n, (B,) + tuple(shape))
         eps2, _ = tile_ops.to_slot_tile_layout(eps_fn(x_nat, states.t))
+    new_hist2 = None
+    if hist2 is not None:
+        # per-slot Adams–Bashforth combine: each row's effective eps is a
+        # weighted sum of the current eval and the slot's history (pure
+        # FMA work — slot mixes change VALUES only, never the trace);
+        # the weight stack is (order, rows, 1) so every slot applies its
+        # own row through the one shared combine implementation
+        order = states.solver_w.shape[1]
+        w_stack = jnp.repeat(states.solver_w.astype(jnp.float32), rps,
+                             axis=0).T[:, :, None]
+        eps2, new_hist2 = solver.mix_history(eps2.astype(jnp.float32),
+                                             hist2, w_stack, order)
     row_coefs = tile_ops.expand_slot_coefs(states.coef_matrix(), rps)
     row_seeds = (tile_ops.derive_row_seeds(states.seed, rps)
                  if stochastic else None)
-    return tile_ops.sampler_step_rows(
+    out = tile_ops.sampler_step_rows(
         x2, eps2, row_coefs, row_seeds, clip=clip_x0, stochastic=stochastic,
         want_x0=want_x0, hw_prng=hw_prng, interpret=interpret)
+    if hist2 is not None:
+        return out, new_hist2
+    return out
 
 
 def sample_step(schedule: NoiseSchedule, eps_fn, x: jnp.ndarray,
@@ -191,8 +198,9 @@ def sample_step(schedule: NoiseSchedule, eps_fn, x: jnp.ndarray,
     """Advance a slot batch ONE step, each row at its own trajectory position.
 
     The natural-shape convenience wrapper around ``slot_tile_step`` (one
-    layout conversion in, one out per call). The engine itself keeps the
-    state tile-resident across a slot's whole lifetime and only converts at
+    layout conversion in, one out per call; order-1 steps only — the
+    engine owns solver history). The engine itself keeps the state
+    tile-resident across a slot's whole lifetime and only converts at
     admission/retirement; use this entry for standalone/step-debug use.
     ``schedule`` is unused (coefficients arrive pre-gathered in ``states``)
     but kept for signature symmetry with ``sample``.
@@ -213,93 +221,15 @@ def sample_step(schedule: NoiseSchedule, eps_fn, x: jnp.ndarray,
     return tile_ops.from_slot_tile_layout(out, n, x.shape)
 
 
-def _tile_resident_sample(schedule, eps_fn, x_T, cfg, rng,
-                          return_trajectory, interpret):
-    """S-step scan carried entirely in the kernel's padded (R, C) layout.
+def _legacy_step_impl_sample(schedule, eps_fn, x_T, cfg, rng, step_impl,
+                             return_trajectory):
+    """The injectable-StepImpl scan (deprecated migration baseline).
 
-    One layout conversion on entry, one on exit (the layout contract —
-    kernels/sampler_step/ops.py). The fused kernel does x0-prediction,
-    optional clipping + eps re-derivation, the Eq. 12 update and (for
-    stochastic processes) in-kernel noise generation, so the scan body
-    touches HBM once per input and once for the output.
-    """
-    from repro.kernels.sampler_step import ops as tile_ops
-
-    if interpret is None:  # interpreter everywhere except a real TPU
-        interpret = tile_ops.default_interpret()
-    stochastic = cfg.eta > 0.0 or cfg.sigma_hat
-    coefs = trajectory_coefficients(schedule, cfg)
-    rev = jax.tree.map(lambda a: a[::-1], coefs)
-    batch, shape = x_T.shape[0], x_T.shape
-    hw_prng = tile_ops.default_hw_prng(interpret)
-    # all randomness outside the scan: per-step int32 seeds, one per tile
-    # family; the deterministic program never touches the PRNG at all
-    seeds = (jax.random.randint(rng, (cfg.S,), 0, np.iinfo(np.int32).max,
-                                dtype=jnp.int32)
-             if stochastic else None)
-    tile_aware = getattr(eps_fn, "tile_aware", False)
-
-    x2, n = tile_ops.to_tile_layout(x_T)             # conversion #1 (entry)
-
-    def body(x2, per_step):
-        c, seed = per_step
-        cvec = jnp.stack([c["c_x0"], c["c_dir"], c["c_noise"],
-                          c["sqrt_a_t"], c["sqrt_1m_a_t"]])
-        if tile_aware:
-            eps2 = eps_fn(x2, c["t"])                # native (R, C) model
-        else:
-            x_view = tile_ops.from_tile_layout(x2, n, shape)
-            t = jnp.full((batch,), c["t"], dtype=jnp.int32)
-            eps2, _ = tile_ops.to_tile_layout(eps_fn(x_view, t))
-        x2_prev = tile_ops.sampler_step_tiles(
-            x2, eps2, cvec, seed, clip=cfg.clip_x0, stochastic=stochastic,
-            hw_prng=hw_prng, interpret=interpret)
-        return x2_prev, (x2_prev if return_trajectory else None)
-
-    x2_0, traj2 = jax.lax.scan(body, x2, (rev, seeds))
-    x0 = tile_ops.from_tile_layout(x2_0, n, shape)   # conversion #2 (exit)
-    if return_trajectory:
-        traj = jax.vmap(lambda a: tile_ops.from_tile_layout(a, n, shape))(
-            traj2)
-        return x0, jnp.concatenate([x_T[None], traj], axis=0)
-    return x0
-
-
-def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
-           cfg: SamplerConfig, rng: Optional[jax.Array] = None,
-           step_impl: StepImpl = _jnp_step,
-           return_trajectory: bool = False,
-           tile_resident: bool = False,
-           interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Run the generalized generative process from x_T to x_0.
-
-    Args:
-      schedule: noise schedule the model was trained with (T steps).
-      eps_fn: eps_theta(x_t, t) with t an int32 (batch,) array. On the
-        tile-resident path a model may declare ``eps_fn.tile_aware = True``
-        to receive the (R, C) tile view and a scalar t directly (elementwise
-        models); otherwise a view-restoring adapter shows it the natural
-        shape.
-      x_T: initial latent, N(0, I) for generation or an encoding (ode.encode).
-      cfg: sampler configuration (S, eta, tau spacing, ...).
-      rng: PRNG key; required iff the process is stochastic (eta>0/sigma_hat).
-      step_impl: fused update implementation (default pure-jnp; the Pallas
-        kernel from repro.kernels.ddim_step is a drop-in). Ignored when
-        tile_resident.
-      return_trajectory: also return the (S+1, ...) stack of iterates.
-      tile_resident: run the scan in the Pallas tile layout end-to-end
-        (kernels/sampler_step) — the production hot path.
-      interpret: Pallas interpret mode; None (default) resolves to
-        "everywhere except a real TPU". Only used when tile_resident.
+    Pays a per-step layout conversion when the StepImpl is a Pallas
+    kernel wrapper — exactly the traffic the tile-resident backend
+    removes; kept so the regression contrast stays testable.
     """
     stochastic = cfg.eta > 0.0 or cfg.sigma_hat
-    if stochastic and rng is None:
-        raise ValueError("stochastic sampler (eta>0 or sigma_hat) needs rng")
-    if rng is None:
-        rng = jax.random.PRNGKey(0)  # unused: deterministic path draws none
-    if tile_resident:
-        return _tile_resident_sample(schedule, eps_fn, x_T, cfg, rng,
-                                     return_trajectory, interpret)
     coefs = trajectory_coefficients(schedule, cfg)
     batch = x_T.shape[0]
 
@@ -330,10 +260,69 @@ def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
     return x0
 
 
+def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
+           cfg: SamplerConfig, rng: Optional[jax.Array] = None,
+           step_impl: StepImpl = _jnp_step,
+           return_trajectory: bool = False,
+           tile_resident: bool = False,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Run the generalized generative process from x_T to x_0.
+
+    A thin adapter over ``repro.sampling.SamplerPlan``: builds the plan for
+    ``cfg`` and runs the 'jnp' backend (or 'tile_resident' when asked).
+    For trajectories the scalar knobs cannot express — learned tau,
+    per-step eta schedules, explicit sigmas, multistep solver orders —
+    build the plan directly.
+
+    Args:
+      schedule: noise schedule the model was trained with (T steps).
+      eps_fn: eps_theta(x_t, t) with t an int32 (batch,) array. On the
+        tile-resident path a model may declare ``eps_fn.tile_aware = True``
+        to receive the (R, C) tile view and a scalar t directly (elementwise
+        models); otherwise a view-restoring adapter shows it the natural
+        shape.
+      x_T: initial latent, N(0, I) for generation or an encoding
+        (SamplerPlan.encode / ode.encode).
+      cfg: sampler configuration (S, eta, tau spacing, ...).
+      rng: PRNG key; required iff the process is stochastic (eta>0/sigma_hat).
+      step_impl: DEPRECATED injectable fused-update implementation; passing
+        anything but the default runs the legacy per-step scan and warns.
+        Ignored when tile_resident.
+      return_trajectory: also return the (S+1, ...) stack of iterates.
+      tile_resident: run the scan in the Pallas tile layout end-to-end
+        (kernels/sampler_step) — the production hot path.
+      interpret: Pallas interpret mode; None (default) resolves to
+        "everywhere except a real TPU". Only used when tile_resident.
+    """
+    stochastic = cfg.eta > 0.0 or cfg.sigma_hat
+    if stochastic and rng is None:
+        raise ValueError("stochastic sampler (eta>0 or sigma_hat) needs rng")
+    if step_impl is not _jnp_step and not tile_resident:
+        warnings.warn(
+            "sample(step_impl=...) is deprecated: build a "
+            "repro.sampling.SamplerPlan and pick a backend "
+            "(run(..., backend='tile_resident') is the fused hot path)",
+            DeprecationWarning, stacklevel=2)
+        return _legacy_step_impl_sample(schedule, eps_fn, x_T, cfg, rng,
+                                        step_impl, return_trajectory)
+    plan = cfg.to_plan(schedule)
+    return plan.run(eps_fn, x_T, rng,
+                    backend="tile_resident" if tile_resident else "jnp",
+                    return_trajectory=return_trajectory,
+                    interpret=interpret)
+
+
 def ddim_sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
                 S: int = 50, tau_kind: str = "linear",
                 **kw) -> jnp.ndarray:
-    """Deterministic DDIM (eta = 0) — the paper's headline sampler."""
+    """DEPRECATED: use ``SamplerPlan.build(schedule, tau=S).run(...)``.
+
+    Deterministic DDIM (eta = 0) — the paper's headline sampler. Kept as a
+    thin shim over the plan API for old call sites and regression tests.
+    """
+    warnings.warn("ddim_sample is deprecated: use repro.sampling."
+                  "SamplerPlan.build(schedule, tau=S).run(eps_fn, x_T)",
+                  DeprecationWarning, stacklevel=2)
     return sample(schedule, eps_fn, x_T,
                   SamplerConfig(S=S, eta=0.0, tau_kind=tau_kind), **kw)
 
@@ -342,7 +331,15 @@ def ddpm_sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
                 rng: jax.Array, S: Optional[int] = None,
                 tau_kind: str = "linear", sigma_hat: bool = False,
                 **kw) -> jnp.ndarray:
-    """DDPM baseline (eta = 1), optionally the sigma-hat variant."""
+    """DEPRECATED: use ``SamplerPlan.build(schedule, tau=S, sigma=1.0)``.
+
+    DDPM baseline (eta = 1), optionally the sigma-hat variant. Kept as a
+    thin shim over the plan API for old call sites and regression tests.
+    """
+    warnings.warn(
+        "ddpm_sample is deprecated: use repro.sampling.SamplerPlan.build("
+        "schedule, tau=S, sigma=SigmaSpec.ddpm(...)).run(eps_fn, x_T, rng)",
+        DeprecationWarning, stacklevel=2)
     S = S if S is not None else schedule.T
     return sample(schedule, eps_fn, x_T,
                   SamplerConfig(S=S, eta=1.0, tau_kind=tau_kind,

@@ -1,0 +1,62 @@
+"""Adams–Bashforth multistep machinery shared by every sampler surface.
+
+The plan compiler (repro.sampling.plan), the three plan backends
+(repro.sampling.backends) and the continuous-batching scheduler tick
+(core/sampler.slot_tile_step) all consume these THREE primitives — the
+coefficient table, the warm-up weight matrix, and the history combine.
+There is deliberately exactly ONE combine implementation: the scheduler's
+"replays plan.run(backend='rows') bit-for-bit" guarantee rests on it.
+
+This module sits at the bottom of the dependency graph (numpy/jnp only),
+so both `repro.core` and `repro.sampling` import it downward — no
+package cycle, no private cross-package reach.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Adams–Bashforth weights by effective order (paper Discussion §7 /
+# Liu et al.'s PLMS use the same table); row h = the order-(h+1) method.
+AB_COEFS = (
+    (1.0,),
+    (1.5, -0.5),
+    (23.0 / 12.0, -16.0 / 12.0, 5.0 / 12.0),
+    (55.0 / 24.0, -59.0 / 24.0, 37.0 / 24.0, -9.0 / 24.0),
+)
+MAX_ORDER = len(AB_COEFS)
+
+
+def warmup_weights(S: int, order: int) -> np.ndarray:
+    """(S, order) AB weights with Euler warm-up baked in.
+
+    Step k (execution order, either integration direction) uses at most
+    k+1 history entries, so no consumer branches at runtime — a freshly
+    admitted scheduler slot reads a predecessor's stale history only
+    through columns this matrix zeroes.
+    """
+    w = np.zeros((S, order), np.float64)
+    for k in range(S):
+        row = AB_COEFS[min(k + 1, order) - 1]
+        w[k, :len(row)] = row
+    return w
+
+
+def mix_history(eps32, hist, w, order: int):
+    """The AB combine: (effective eps, updated history).
+
+    ``w[j]`` is the step's j-th weight — warm-up zeros included — and may
+    be a scalar (the lockstep backends) or a (rows, 1) column (the
+    scheduler tick passes an (order, rows, 1) stack so every slot applies
+    its own weight row); either broadcasts over ``eps32``/``hist``
+    entries.  History holds the PREVIOUS order-1 eps evaluations, newest
+    first, in float32.
+    """
+    if order == 1:
+        return eps32, hist
+    eff = w[0] * eps32
+    for j in range(1, order):
+        eff = eff + w[j] * hist[j - 1]
+    new_hist = (jnp.concatenate([eps32[None], hist[:-1]], axis=0)
+                if order > 2 else eps32[None])
+    return eff, new_hist

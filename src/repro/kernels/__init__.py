@@ -11,9 +11,12 @@ Kernel inventory
 ----------------
   flash_attention  streaming-softmax MHA/GQA attention (mha_flash, gqa_flash)
   rmsnorm          row-wise RMS normalization (rms_norm_kernel)
-  ddim_step        LEGACY fused Eq. 12 update only; the wrapper re-enters
-                   the tile layout every call (fused_ddim_step) — kept as a
-                   StepImpl drop-in and migration baseline
+  ddim_step        RETIRED (ISSUE 3): fused_ddim_step is now a deprecated
+                   StepImpl shim that routes through the sampler_step
+                   kernel (warns on use; still re-enters the tile layout
+                   every call). kernel.py/ref.py stay as the regression
+                   oracle pair — the SamplerPlan 'tile_resident' backend
+                   is the supported path
   sampler_step     the production sampler-step body: x0-prediction,
                    optional x0-clipping + eps re-derivation, Eq. 12 update
                    and in-kernel PRNG noise (hardware PRNG on TPU,

@@ -1,46 +1,62 @@
-"""Jit'd wrapper: arbitrary-shape DDIM update -> padded 2D tiles -> kernel.
+"""RETIRED legacy hot path: the StepImpl shim now routes through the
+production ``kernels/sampler_step`` kernel.
 
-`fused_ddim_step` is signature-compatible with sampler.StepImpl, so
-``sample(..., step_impl=fused_ddim_step)`` swaps the pure-jnp update for the
-Pallas kernel (examples/quickstart.py demonstrates; kernel validated in
-interpret mode on CPU, compiled mode on real TPUs).
+``fused_ddim_step`` keeps its StepImpl signature so old call sites
+(``sample(..., step_impl=fused_ddim_step)``) still run, but the update
+itself executes in the canonical fused sampler-step kernel (deterministic
+specialization; externally-drawn noise is applied outside, preserving the
+legacy noise semantics). Direct use emits a DeprecationWarning — build a
+``repro.sampling.SamplerPlan`` and run the 'tile_resident' backend
+instead, which keeps the state in the tile layout for the WHOLE scan
+rather than re-entering it every step.
+
+``kernel.py``/``ref.py`` are kept untouched as the regression oracle pair
+(tests/test_kernels.py pins the shim against ``ddim_step_ref``).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-
-from .kernel import TILE_C, TILE_R, ddim_step_2d
-
-
-def _to_tiles(a: jnp.ndarray):
-    n = a.size
-    C = TILE_C
-    R = -(-n // C)
-    R_pad = -(-R // TILE_R) * TILE_R
-    flat = jnp.ravel(a)
-    flat = jnp.pad(flat, (0, R_pad * C - n))
-    return flat.reshape(R_pad, C), n
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _shim(x: jnp.ndarray, eps: jnp.ndarray, noise, c_x0, c_dir,
+          c_noise, sqrt_a_t, sqrt_1m_a_t, interpret: bool = True
+          ) -> jnp.ndarray:
+    from repro.kernels.sampler_step.ops import (from_tile_layout,
+                                                sampler_step_tiles,
+                                                to_tile_layout)
+    # the deterministic sampler_step kernel computes the Eq. 12 update;
+    # c_noise is zeroed in-kernel and the caller's externally-drawn noise
+    # (the legacy contract) is applied outside
+    coefs = jnp.stack([jnp.asarray(c, jnp.float32) for c in
+                       (c_x0, c_dir, 0.0, sqrt_a_t, sqrt_1m_a_t)])
+    x2, n = to_tile_layout(x)
+    e2, _ = to_tile_layout(eps)
+    out2 = sampler_step_tiles(x2, e2, coefs, None, clip=None,
+                              stochastic=False, interpret=interpret)
+    out = from_tile_layout(out2, n, x.shape)
+    if noise is not None:
+        out = out + jnp.asarray(c_noise, out.dtype) * noise
+    return out
+
+
 def fused_ddim_step(x: jnp.ndarray, eps: jnp.ndarray, noise, c_x0, c_dir,
                     c_noise, sqrt_a_t, sqrt_1m_a_t,
                     interpret: bool = True) -> jnp.ndarray:
-    """Drop-in StepImpl backed by the Pallas kernel.
+    """DEPRECATED drop-in StepImpl, now backed by kernels/sampler_step.
 
-    ``noise`` may be None (deterministic path): c_noise is zeroed so the
-    padding tiles contribute nothing either way.
+    ``noise`` may be None (deterministic path): the noise term is skipped
+    entirely. Each call still pays the pad -> kernel -> unpad round trip —
+    use a SamplerPlan 'tile_resident' run for the conversion-free scan.
     """
-    if noise is None:
-        noise, c_noise = jnp.zeros_like(x), 0.0
-    coefs = jnp.stack([jnp.asarray(c, jnp.float32) for c in
-                       (c_x0, c_dir, c_noise, sqrt_a_t, sqrt_1m_a_t)])
-    x2, n = _to_tiles(x)
-    e2, _ = _to_tiles(eps)
-    n2, _ = _to_tiles(noise)
-    out = ddim_step_2d(x2, e2, n2, coefs, interpret=interpret)
-    return jnp.ravel(out)[:n].reshape(x.shape)
+    warnings.warn(
+        "kernels.ddim_step.fused_ddim_step is deprecated: build a "
+        "repro.sampling.SamplerPlan and run backend='tile_resident' "
+        "(kernels/sampler_step) instead",
+        DeprecationWarning, stacklevel=2)
+    return _shim(x, eps, noise, c_x0, c_dir, c_noise, sqrt_a_t,
+                 sqrt_1m_a_t, interpret=interpret)

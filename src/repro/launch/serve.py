@@ -23,8 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.core import SamplerConfig, make_schedule
+from repro.core import make_schedule
 from repro.models import get_api, unet
+from repro.sampling import SamplerPlan, SigmaSpec, TauSpec
 from repro.serving import (ARGenerator, DiffusionSampler, GenRequest,
                            SampleRequest)
 from repro.training import checkpoint
@@ -75,34 +76,61 @@ def serve_unet(args):
                            batch_size=args.batch)
     if args.scheduler:
         return serve_unet_continuous(args, svc)
-    cfg = SamplerConfig(S=args.S, eta=args.eta)
-    samples, stats = svc.serve(args.n_samples, cfg, seed=args.seed)
+    plan = SamplerPlan.build(
+        schedule, tau=(TauSpec.quadratic(args.S) if args.tau == "quadratic"
+                       else TauSpec.uniform(args.S)),
+        sigma=args.eta, order=args.order)
+    samples, stats = svc.serve(args.n_samples, plan, seed=args.seed)
     print(f"sampled {samples.shape} in {stats['batches']} batches; "
           f"steady={stats['steady_batch_s']:.2f}s/batch "
-          f"({stats['samples_per_s']:.2f} samples/s, S={args.S})")
+          f"({stats['samples_per_s']:.2f} samples/s, {plan})")
     if args.out:
         np.save(args.out, np.asarray(samples))
         print(f"saved -> {args.out}")
 
 
 def serve_unet_continuous(args, svc: DiffusionSampler):
-    """Mixed-S request stream through the continuous-batching scheduler."""
+    """Mixed-PLAN request stream through the continuous-batching scheduler.
+
+    Each request carries its own frozen SamplerPlan: the S mix cycles,
+    tau spacing alternates uniform/quadratic, and (with --order > 1) every
+    third request upgrades to the multistep solver — all multiplexed
+    through ONE compiled tick.
+    """
     s_mix = [int(s) for s in args.s_mix.split(",")]
     stochastic = args.eta > 0.0
-    eng = svc.continuous(slots=args.slots, stochastic=stochastic)
-    reqs = [SampleRequest(request_id=i, S=s_mix[i % len(s_mix)],
-                          eta=args.eta, seed=args.seed + i)
+    schedule = svc.schedule
+    eng = svc.continuous(slots=args.slots, stochastic=stochastic,
+                         max_order=args.order)
+
+    def plan_for(i: int) -> SamplerPlan:
+        S = s_mix[i % len(s_mix)]
+        tau = (TauSpec.quadratic(S) if (args.tau == "quadratic"
+                                        or (args.tau == "mix" and i % 2))
+               else TauSpec.uniform(S))
+        order = args.order if (args.order > 1 and i % 3 == 0
+                               and args.eta == 0.0) else 1
+        return SamplerPlan.build(schedule, tau=tau,
+                                 sigma=SigmaSpec.from_eta(args.eta),
+                                 order=order)
+
+    reqs = [SampleRequest(request_id=i, plan=plan_for(i),
+                          seed=args.seed + i)
             for i in range(args.n_samples)]
     results = eng.serve(reqs)
-    for r in sorted(results, key=lambda r: r.request_id):
-        print(f"req{r.request_id}: S={r.S} wait={r.queue_wait_s*1e3:.1f}ms "
+    by_id = {r.request_id: r for r in results}
+    for i in sorted(by_id):
+        r = by_id[i]
+        print(f"req{r.request_id}: {reqs[i].plan} "
+              f"wait={r.queue_wait_s*1e3:.1f}ms "
               f"service={r.service_s*1e3:.1f}ms "
               f"latency={r.latency_s*1e3:.1f}ms")
     st = eng.stats()
     print(f"scheduler: {st['completed']} done in {st['ticks']} ticks "
           f"(occupancy={st['occupancy']:.2f}, "
           f"{st['steps_per_s']:.1f} slot-steps/s, "
-          f"compiled_ticks={st['compiled_ticks']})")
+          f"compiled_ticks={st['compiled_ticks']}, "
+          f"max_order={st['max_order']})")
     if args.out:
         done = [r for r in sorted(results, key=lambda r: r.request_id)
                 if r.x0 is not None]
@@ -124,6 +152,13 @@ def main():
     ap.add_argument("--T", type=int, default=1000)
     ap.add_argument("--S", type=int, default=20)
     ap.add_argument("--eta", type=float, default=0.0)
+    ap.add_argument("--tau", choices=["uniform", "quadratic", "mix"],
+                    default="uniform",
+                    help="tau spacing; 'mix' alternates per request "
+                    "(--scheduler)")
+    ap.add_argument("--order", type=int, default=1,
+                    help="Adams-Bashforth solver order (1..4); with "
+                    "--scheduler every 3rd request upgrades to it")
     ap.add_argument("--scheduler", action="store_true",
                     help="serve through the continuous-batching scheduler")
     ap.add_argument("--slots", type=int, default=4,
@@ -133,6 +168,11 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.order > 1 and args.eta > 0.0 and not args.scheduler:
+        # multistep integrates the deterministic ODE view; the scheduler
+        # path downgrades per request, the lockstep path must reject
+        ap.error("--order > 1 requires --eta 0 (multistep plans are "
+                 "deterministic); drop --order or use --eta 0")
     if args.arch == "unet":
         serve_unet(args)
     else:

@@ -1,0 +1,26 @@
+"""`repro.sampling` — the unified declarative sampler front door.
+
+The whole DDIM family (paper Eq. 12/16, §4) is one parameterization; this
+package makes that literal:
+
+    from repro.sampling import SamplerPlan, TauSpec, SigmaSpec, X0Policy
+
+    plan = SamplerPlan.build(schedule, tau=50)                 # DDIM, S=50
+    plan = SamplerPlan.build(schedule, tau=TauSpec.quadratic(20),
+                             sigma=SigmaSpec.from_eta(0.5), x0=1.0)
+    plan = SamplerPlan.build(schedule, tau=TauSpec.explicit([5, 40, 300]),
+                             sigma=SigmaSpec.explicit([0.0, 0.1, 0.0]))
+    plan = SamplerPlan.build(schedule, tau=25, order=2)        # AB-2 PLMS
+
+    x0 = plan.run(eps_fn, x_T, rng, backend="tile_resident")
+    z  = plan.encode(eps_fn, x0)                               # ODE inverse
+
+One plan compiles once into the canonical per-step coefficient table and
+drives every backend ('jnp', 'tile_resident', 'rows'), the scheduler's
+per-slot tick (``plan.steps()``), and the ODE inversion direction.  Plans
+are frozen and hashable — jit caches key on them directly.
+"""
+from .plan import MAX_ORDER, SamplerPlan
+from .specs import SigmaSpec, TauSpec, X0Policy
+
+__all__ = ["MAX_ORDER", "SamplerPlan", "SigmaSpec", "TauSpec", "X0Policy"]

@@ -1,0 +1,245 @@
+"""The three executors behind ``SamplerPlan.run`` (+ the encode direction).
+
+All backends consume the SAME compiled coefficient table and share the
+same per-step arithmetic, so a deterministic plan produces bit-identical
+outputs on every backend:
+
+  run_jnp            reference lax.scan over the natural shape.  Its step
+                     update is a bit-for-bit mirror of the Pallas kernel
+                     body (fp32 internal math, the same algebraic two-FMA
+                     form at eta=0) — the oracle AND the contract.
+  run_tile_resident  the production hot path: one conversion into the
+                     padded (R, C) tile layout, the whole S-step scan
+                     carried there (kernels/sampler_step scalar mode).
+  run_rows           the per-row slot-tick kernel driven in lockstep over
+                     the slot-tile layout — the exact step program the
+                     continuous-batching scheduler multiplexes, so a
+                     scheduled request replays a plan.run(backend='rows')
+                     trajectory bit-for-bit at eta=0.
+
+Solver order k > 1 (Adams–Bashforth over the eps history, paper
+Discussion §7) threads an (order-1, ...) float32 history through the scan
+on every backend; the plan bakes Euler warm-up into per-step weights so
+no backend branches at runtime.
+
+Randomness policy: all PRNG use stays OUTSIDE the scan.  The jnp backend
+pre-splits per-step keys; the kernel backends pre-draw per-step int32
+seeds and generate noise in-kernel.  Deterministic plans trace no PRNG
+ops at all (asserted in tests/test_sampler_plan.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solver import mix_history, warmup_weights
+
+
+def kernel_update(x32, eps32, c_x0, c_dir, sqrt_a_t, sqrt_1m_a_t, clip):
+    """Bit-for-bit mirror of ``kernels/sampler_step/kernel._update``.
+
+    Keep the two in lockstep: the eta=0 cross-backend bit-identity
+    guarantee rests on this function performing the exact same float32
+    operation sequence as the kernel body.
+    """
+    if clip is not None:
+        x0 = (x32 - sqrt_1m_a_t * eps32) / sqrt_a_t
+        x0 = jnp.clip(x0, -clip, clip)
+        eps_eff = (x32 - sqrt_a_t * x0) / sqrt_1m_a_t
+        return c_x0 * x0 + c_dir * eps_eff
+    # no clip: algebraic fusion down to two FMAs per element
+    a = c_x0 / sqrt_a_t
+    b = c_dir - a * sqrt_1m_a_t
+    return a * x32 + b * eps32
+
+
+def _hist0(order: int, shape):
+    if order == 1:
+        return None
+    return jnp.zeros((order - 1,) + tuple(shape), jnp.float32)
+
+
+def _xs(plan):
+    """The scan's per-step inputs: the table, already in sampling order."""
+    return {k: jnp.asarray(v) for k, v in plan.steps().items()}
+
+
+# ------------------------------------------------------------------- jnp
+def run_jnp(plan, eps_fn, x_T, rng, return_trajectory):
+    stochastic = plan.stochastic
+    clip = plan.x0.clip
+    order = plan.order
+    batch = x_T.shape[0]
+    keys = jax.random.split(rng, plan.S) if stochastic else None
+
+    def body(carry, per):
+        x, hist = carry
+        c, key = per
+        t = jnp.full((batch,), c["t"], jnp.int32)
+        eps = eps_fn(x, t)
+        e32 = eps.astype(jnp.float32)
+        e32, hist = mix_history(e32, hist, c["solver_w"], order)
+        out = kernel_update(x.astype(jnp.float32), e32, c["c_x0"],
+                            c["c_dir"], c["sqrt_a_t"], c["sqrt_1m_a_t"],
+                            clip)
+        if stochastic:
+            out = out + c["c_noise"] * jax.random.normal(key, x.shape,
+                                                         jnp.float32)
+        out = out.astype(x_T.dtype)
+        return (out, hist), (out if return_trajectory else None)
+
+    (x0, _), traj = jax.lax.scan(
+        body, (x_T, _hist0(order, x_T.shape)), (_xs(plan), keys))
+    if return_trajectory:
+        return x0, jnp.concatenate([x_T[None], traj], axis=0)
+    return x0
+
+
+# --------------------------------------------------------- tile_resident
+def run_tile_resident(plan, eps_fn, x_T, rng, return_trajectory,
+                      interpret: Optional[bool]):
+    from repro.kernels.sampler_step import ops as tile_ops
+
+    if interpret is None:
+        interpret = tile_ops.default_interpret()
+    stochastic = plan.stochastic
+    hw_prng = tile_ops.default_hw_prng(interpret)
+    order, clip = plan.order, plan.x0.clip
+    batch, shape = x_T.shape[0], x_T.shape
+    tile_aware = getattr(eps_fn, "tile_aware", False)
+    # all randomness outside the scan: per-step int32 seeds, noise drawn
+    # in-kernel; the deterministic program never touches the PRNG at all
+    seeds = (jax.random.randint(rng, (plan.S,), 0, np.iinfo(np.int32).max,
+                                dtype=jnp.int32)
+             if stochastic else None)
+
+    x2, n = tile_ops.to_tile_layout(x_T)             # conversion #1 (entry)
+
+    def body(carry, per):
+        x2, hist = carry
+        c, seed = per
+        cvec = jnp.stack([c["c_x0"], c["c_dir"], c["c_noise"],
+                          c["sqrt_a_t"], c["sqrt_1m_a_t"]])
+        if tile_aware:
+            eps2 = eps_fn(x2, c["t"])                # native (R, C) model
+        else:
+            x_view = tile_ops.from_tile_layout(x2, n, shape)
+            t = jnp.full((batch,), c["t"], dtype=jnp.int32)
+            eps2, _ = tile_ops.to_tile_layout(eps_fn(x_view, t))
+        if order > 1:
+            eps2, hist = mix_history(eps2.astype(jnp.float32), hist,
+                                      c["solver_w"], order)
+        x2_prev = tile_ops.sampler_step_tiles(
+            x2, eps2, cvec, seed, clip=clip, stochastic=stochastic,
+            hw_prng=hw_prng, interpret=interpret)
+        return (x2_prev, hist), (x2_prev if return_trajectory else None)
+
+    (x2_0, _), traj2 = jax.lax.scan(
+        body, (x2, _hist0(order, x2.shape)), (_xs(plan), seeds))
+    x0 = tile_ops.from_tile_layout(x2_0, n, shape)   # conversion #2 (exit)
+    if return_trajectory:
+        traj = jax.vmap(lambda a: tile_ops.from_tile_layout(a, n, shape))(
+            traj2)
+        return x0, jnp.concatenate([x_T[None], traj], axis=0)
+    return x0
+
+
+# ------------------------------------------------------------------ rows
+def run_rows(plan, eps_fn, x_T, rng, return_trajectory,
+             interpret: Optional[bool]):
+    from repro.kernels.sampler_step import ops as tile_ops
+
+    if interpret is None:
+        interpret = tile_ops.default_interpret()
+    stochastic = plan.stochastic
+    hw_prng = tile_ops.default_hw_prng(interpret)
+    order, clip = plan.order, plan.x0.clip
+    B, shape = x_T.shape[0], x_T.shape[1:]
+    slot_aware = getattr(eps_fn, "slot_tile_aware", False)
+    # per-step PER-SLOT tick seeds (the scheduler's seed granularity),
+    # drawn outside the scan; derive_row_seeds inside the body is pure
+    # integer mixing, not a PRNG op
+    seeds = (jax.random.randint(rng, (plan.S, B), 0,
+                                np.iinfo(np.int32).max, dtype=jnp.int32)
+             if stochastic else None)
+
+    x2, n = tile_ops.to_slot_tile_layout(x_T)
+    rps = x2.shape[0] // B
+
+    def body(carry, per):
+        x2, hist = carry
+        c, seed_b = per
+        t = jnp.full((B,), c["t"], dtype=jnp.int32)
+        if slot_aware:
+            eps2 = eps_fn(x2, t)
+        else:
+            x_nat = tile_ops.from_slot_tile_layout(x2, n, (B,) + tuple(shape))
+            eps2, _ = tile_ops.to_slot_tile_layout(eps_fn(x_nat, t))
+        if order > 1:
+            eps2, hist = mix_history(eps2.astype(jnp.float32), hist,
+                                      c["solver_w"], order)
+        cmat = jnp.tile(jnp.stack([c["c_x0"], c["c_dir"], c["c_noise"],
+                                   c["sqrt_a_t"], c["sqrt_1m_a_t"]])[None],
+                        (B, 1))
+        row_coefs = tile_ops.expand_slot_coefs(cmat, rps)
+        row_seeds = (tile_ops.derive_row_seeds(seed_b, rps)
+                     if stochastic else None)
+        out = tile_ops.sampler_step_rows(
+            x2, eps2, row_coefs, row_seeds, clip=clip,
+            stochastic=stochastic, hw_prng=hw_prng, interpret=interpret)
+        return (out, hist), (out if return_trajectory else None)
+
+    (x2_0, _), traj2 = jax.lax.scan(
+        body, (x2, _hist0(order, x2.shape)), (_xs(plan), seeds))
+    batch_shape = (B,) + tuple(shape)
+    x0 = tile_ops.from_slot_tile_layout(x2_0, n, batch_shape)
+    if return_trajectory:
+        traj = jax.vmap(
+            lambda a: tile_ops.from_slot_tile_layout(a, n, batch_shape))(
+            traj2)
+        return x0, jnp.concatenate([x_T[None], traj], axis=0)
+    return x0
+
+
+# ---------------------------------------------------------------- encode
+def encode_jnp(plan, eps_fn, x_0):
+    """Forward ODE integration x_0 -> x_T on the plan's own trajectory.
+
+    Euler (order=1) or Adams–Bashforth (the plan's order) steps in the
+    x_bar/sigma coordinates of Eq. 14, written in the same canonical
+    a*x + b*eps form the reverse direction uses:
+
+      x_next = sqrt(a_to)/sqrt(a_from) * x + sqrt(a_to) * dsigma * eps_eff
+    """
+    ab = np.asarray(plan.schedule.alpha_bar, np.float64)
+    t_traj = np.asarray(plan.steps()["t"][::-1], np.int64)  # increasing
+    t_from = np.concatenate([[0], t_traj[:-1]])
+    a_f, a_to = ab[t_from], ab[t_traj]
+    sig = lambda a: np.sqrt((1.0 - a) / a)
+    a_coef = np.sqrt(a_to / a_f)
+    b_coef = np.sqrt(a_to) * (sig(a_to) - sig(a_f))
+    order = plan.order
+    solver_w = warmup_weights(len(t_traj), order)
+    xs = {
+        # the model grid starts at t=1: evaluate the first step there
+        "t_eval": jnp.asarray(np.maximum(t_from, 1), jnp.int32),
+        "a": jnp.asarray(a_coef, jnp.float32),
+        "b": jnp.asarray(b_coef, jnp.float32),
+        "solver_w": jnp.asarray(solver_w, jnp.float32),
+    }
+    batch = x_0.shape[0]
+
+    def body(carry, c):
+        x, hist = carry
+        t = jnp.full((batch,), c["t_eval"], jnp.int32)
+        e32 = eps_fn(x, t).astype(jnp.float32)
+        e32, hist = mix_history(e32, hist, c["solver_w"], order)
+        out = (c["a"] * x.astype(jnp.float32) + c["b"] * e32).astype(
+            x_0.dtype)
+        return (out, hist), None
+
+    (x_T, _), _ = jax.lax.scan(body, (x_0, _hist0(order, x_0.shape)), xs)
+    return x_T

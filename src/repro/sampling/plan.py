@@ -1,0 +1,272 @@
+"""`SamplerPlan` — the declarative trajectory front door.
+
+One plan = (noise schedule, TauSpec, SigmaSpec, X0Policy, solver order),
+compiled ONCE into the canonical per-step coefficient table the kernels
+consume:
+
+  row k (sampling order, k=0 starts at t=tau_S):
+    t            timestep fed to the eps model
+    c_x0         sqrt(alpha_bar[prev])                "predicted x0" weight
+    c_dir        sqrt(1 - alpha_bar[prev] - sigma^2)  "direction to x_t"
+    c_noise      noise scale (sigma, or the sigma-hat variant)
+    sqrt_a_t     sqrt(alpha_bar[t])
+    sqrt_1m_a_t  sqrt(1 - alpha_bar[t])
+    solver_w     (order,) Adams–Bashforth weights over the eps history
+                 (Euler warm-up rows are baked in: step k uses at most
+                 k+1 history entries, so no runtime branching anywhere)
+
+Every execution surface consumes this one table:
+
+  plan.run(eps_fn, x_T, rng, backend=...)   backend in
+      'jnp'            reference lax.scan (kernel-matching arithmetic)
+      'tile_resident'  the Pallas tile-resident scan (production hot path)
+      'rows'           the per-row slot-tick kernel driven in lockstep —
+                       the exact program the continuous-batching scheduler
+                       multiplexes across requests
+  plan.encode(eps_fn, x0)                    the ODE inversion direction
+  plan.steps()                               numpy rows for the scheduler
+  plan.coefficients()                        legacy trajectory-order dict
+
+Deterministic plans (all c_noise == 0) compile to programs with NO PRNG
+ops on any backend, and their eta=0 outputs are bit-identical across the
+three backends (asserted in tests/test_sampler_plan.py).  Plans hash on
+their full contents (schedule digest included), so jit caches — e.g.
+``serving.DiffusionSampler`` — can key programs directly on the plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedules import NoiseSchedule
+from repro.core.solver import MAX_ORDER, warmup_weights
+
+from .specs import SigmaSpec, TauSpec, X0Policy
+
+_BACKENDS = ("jnp", "tile_resident", "rows")
+
+
+def _schedule_digest(schedule: NoiseSchedule) -> bytes:
+    return hashlib.sha1(
+        np.ascontiguousarray(np.asarray(schedule.alpha_bar)).tobytes()
+        + str(schedule.T).encode()).digest()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SamplerPlan:
+    """A compiled generalized-generative-process trajectory (Eq. 12/16)."""
+
+    schedule: NoiseSchedule
+    tau: TauSpec
+    sigma: SigmaSpec = SigmaSpec.ddim()
+    x0: X0Policy = X0Policy.none()
+    order: int = 1
+
+    def __post_init__(self):
+        if not 1 <= self.order <= MAX_ORDER:
+            raise ValueError(f"order must be in 1..{MAX_ORDER}, got "
+                             f"{self.order}")
+        table = self._compile()
+        if self.order > 1 and bool(np.any(table["c_noise"] > 0.0)):
+            raise ValueError(
+                "multistep (order > 1) plans must be deterministic — the "
+                "Adams–Bashforth path integrates the ODE view (Eq. 14), "
+                "which has no noise term; use order=1 for stochastic plans")
+        object.__setattr__(self, "_table", table)
+        object.__setattr__(self, "_key", (
+            _schedule_digest(self.schedule), self.tau, self.sigma, self.x0,
+            self.order))
+
+    # ----------------------------------------------------------- identity
+    def __hash__(self):
+        return hash(self._key)
+
+    def __eq__(self, other):
+        return (isinstance(other, SamplerPlan)
+                and self._key == other._key)
+
+    def __repr__(self):
+        return (f"SamplerPlan(S={self.S}, tau={self.tau.kind}, "
+                f"sigma={self.sigma.kind}"
+                + (f"(eta={self.sigma.eta:g})" if self.sigma.kind == "eta"
+                   else "")
+                + (f", clip={self.x0.clip:g}" if self.x0.clip is not None
+                   else "")
+                + (f", order={self.order}" if self.order > 1 else "")
+                + f", T={self.schedule.T})")
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def build(cls, schedule: NoiseSchedule,
+              tau: Union[TauSpec, int],
+              sigma: Union[SigmaSpec, float] = 0.0,
+              x0: Union[X0Policy, float, None] = None,
+              order: int = 1) -> "SamplerPlan":
+        """Ergonomic front door: ints/floats coerce to the obvious specs.
+
+        ``tau=50`` means 50 uniform steps; ``sigma=0.7`` means scalar
+        eta=0.7; ``x0=1.0`` means clip |x0| to 1.
+        """
+        if not isinstance(tau, TauSpec):
+            tau = TauSpec.uniform(int(tau))
+        if not isinstance(sigma, SigmaSpec):
+            sigma = SigmaSpec.from_eta(float(sigma))
+        if not isinstance(x0, X0Policy):
+            x0 = X0Policy(clip=None if x0 is None else float(x0))
+        return cls(schedule=schedule, tau=tau, sigma=sigma, x0=x0,
+                   order=order)
+
+    @classmethod
+    def from_config(cls, schedule: NoiseSchedule, cfg,
+                    order: int = 1) -> "SamplerPlan":
+        """Adapter from the legacy ``SamplerConfig`` knobs."""
+        tau_kind = "uniform" if cfg.tau_kind == "linear" else cfg.tau_kind
+        return cls(schedule=schedule,
+                   tau=TauSpec(kind=tau_kind, S=cfg.S),
+                   sigma=SigmaSpec.from_eta(cfg.eta, sigma_hat=cfg.sigma_hat),
+                   x0=X0Policy(clip=cfg.clip_x0),
+                   order=order)
+
+    # ------------------------------------------------------------- compile
+    def _compile(self) -> Dict[str, np.ndarray]:
+        """The per-step coefficient table, SAMPLING order, numpy float32.
+
+        Math runs in float64 from the schedule's alpha_bar and casts once;
+        this is the single coefficient program every entry point consumes
+        (the scheduler gathers rows of it per slot, the scan backends
+        reverse nothing — it is already in execution order).
+        """
+        ab = np.asarray(self.schedule.alpha_bar, np.float64)
+        tau = self.tau.resolve(self.schedule.T)            # increasing
+        t_prev = np.concatenate([[0], tau[:-1]])
+        a_t, a_s = ab[tau], ab[t_prev]
+        sigma, noise_scale = self.sigma.resolve(ab, tau)
+        c_dir = np.sqrt(np.clip(1.0 - a_s - sigma ** 2, 0.0, None))
+        rev = slice(None, None, -1)
+        f32 = lambda a: np.ascontiguousarray(a[rev], np.float32)
+        table = {
+            "t": np.ascontiguousarray(tau[rev]).astype(np.int32),
+            "c_x0": f32(np.sqrt(a_s)),
+            "c_dir": f32(c_dir),
+            "c_noise": f32(noise_scale),
+            "sqrt_a_t": f32(np.sqrt(a_t)),
+            "sqrt_1m_a_t": f32(np.sqrt(1.0 - a_t)),
+            "solver_w": np.ascontiguousarray(
+                warmup_weights(len(tau), self.order), np.float32),
+        }
+        for v in table.values():   # shared across every steps() consumer
+            v.setflags(write=False)
+        return table
+
+    # ---------------------------------------------------------- properties
+    @property
+    def S(self) -> int:
+        """Trajectory length == network evaluations per sample."""
+        return int(self._table["t"].shape[0])
+
+    @property
+    def stochastic(self) -> bool:
+        """True iff any step injects noise (needs an rng / PRNG seeds)."""
+        return bool(np.any(self._table["c_noise"] > 0.0))
+
+    @property
+    def deterministic(self) -> bool:
+        return not self.stochastic
+
+    @property
+    def clip_x0(self) -> Optional[float]:
+        return self.x0.clip
+
+    # -------------------------------------------------------------- views
+    def steps(self) -> Dict[str, np.ndarray]:
+        """Per-step numpy rows in SAMPLING order (k=0 runs first).
+
+        The continuous-batching scheduler gathers row ``k`` of this table
+        for a slot whose request has completed k steps.  ``solver_w`` is
+        the (S, order) Adams–Bashforth weight matrix (order columns).
+        The arrays are the plan's own compiled table, marked read-only —
+        equal-hashed plans share them across every cache.
+        """
+        return dict(self._table)
+
+    def coefficients(self) -> Dict[str, jnp.ndarray]:
+        """Legacy trajectory-order (increasing t) jnp dict.
+
+        The contract of ``core.trajectory_coefficients`` — kept so the
+        whole repo reads coefficients from one compiled program.
+        """
+        out = {}
+        for k, v in self._table.items():
+            if k == "solver_w":
+                continue
+            out[k] = jnp.asarray(np.ascontiguousarray(v[::-1]))
+        return out
+
+    # ---------------------------------------------------------- execution
+    def run(self, eps_fn, x_T: jnp.ndarray,
+            rng: Optional[jax.Array] = None, *,
+            backend: str = "jnp",
+            return_trajectory: bool = False,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+        """Execute the plan from x_T to x_0 on the chosen backend.
+
+        Args:
+          eps_fn: eps_theta(x_t, t), t an int32 (batch,) vector.  On the
+            'tile_resident' backend a model may declare
+            ``eps_fn.tile_aware = True`` (native (R, C) view); on 'rows',
+            ``eps_fn.slot_tile_aware = True`` (native slot-tile view).
+          x_T: (batch, *shape) initial latent — N(0, I) for generation, or
+            an encoding from :meth:`encode` for reconstruction.
+          rng: PRNG key; required iff the plan is stochastic.
+          backend: 'jnp' | 'tile_resident' | 'rows'.
+          return_trajectory: also return the (S+1, ...) iterate stack.
+          interpret: Pallas interpret mode for the kernel backends; None
+            resolves to "everywhere except a real TPU".
+        """
+        from . import backends
+        if backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; choose from "
+                             f"{_BACKENDS}")
+        if self.stochastic and rng is None:
+            raise ValueError("stochastic plan needs rng (sigma > 0 "
+                             "somewhere in the schedule)")
+        # deterministic plans never touch the PRNG: rng stays None and the
+        # traced program contains no random ops at all (jaxpr-asserted)
+        fn = {"jnp": backends.run_jnp,
+              "tile_resident": backends.run_tile_resident,
+              "rows": backends.run_rows}[backend]
+        if backend == "jnp":
+            return fn(self, eps_fn, x_T, rng, return_trajectory)
+        return fn(self, eps_fn, x_T, rng, return_trajectory, interpret)
+
+    def encode(self, eps_fn, x_0: jnp.ndarray, *,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+        """Integrate the ODE view FORWARD: x_0 -> x_T (paper §4.3, Eq. 13).
+
+        Uses the plan's own tau (so a quadratic or learned trajectory
+        encodes on the same grid it decodes on) and its solver order (AB-k
+        forward steps in sigma, Euler warm-up).  The sigma spec plays no
+        role — encoding is the deterministic ODE direction; a subsequent
+        deterministic ``run`` reconstructs x_0 (paper Table 2).
+        """
+        del interpret   # reserved: encode currently runs the jnp reference
+        from . import backends
+        return backends.encode_jnp(self, eps_fn, x_0)
+
+    # -------------------------------------------------------- serving glue
+    def step_rows(self, k: int) -> Dict[str, float]:
+        """Row k of the sampling-order table as python scalars (debug)."""
+        t = self._table
+        return {name: (int(v[k]) if name == "t" else
+                       (v[k].tolist() if name == "solver_w"
+                        else float(v[k])))
+                for name, v in t.items()}
+
+    def schedule_digest(self) -> bytes:
+        """Digest identifying the bound noise schedule (engine validation)."""
+        return self._key[0]

@@ -1,0 +1,227 @@
+"""Composable specs for the declarative sampler front door.
+
+The paper's generalized family (§4.1–4.2) is one parameterization: a
+trajectory sub-sequence tau, a sigma schedule (Eq. 16), and an x0 handling
+policy, all feeding the single Eq. 12 update.  These three specs make each
+of those choices an explicit, hashable value object:
+
+  * :class:`TauSpec`   — which timesteps the trajectory visits.  Uniform
+    and quadratic spacing reproduce the paper's Appendix D.2 choices;
+    ``explicit`` accepts any strictly-increasing subsequence, the hook for
+    LEARNED step budgets (Watson et al. 2021).
+  * :class:`SigmaSpec` — how much stochasticity each step injects.  A
+    scalar eta covers the DDIM(0)..DDPM(1) dial; a per-step eta schedule
+    and fully explicit per-step sigmas cover generalized schedules
+    (Lam et al. 2021) the scalar knob cannot express.
+  * :class:`X0Policy`  — what to do with the predicted x0 before the jump
+    (clip to a data bound and re-derive an equivalent eps, or nothing).
+
+A :class:`repro.sampling.SamplerPlan` binds the three to a noise schedule
+and compiles them once into the canonical per-step coefficient table every
+backend consumes.  All specs are frozen dataclasses with tuple payloads so
+plans can key jit caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TauSpec:
+    """Trajectory sub-sequence spec (paper §4.2 / App. D.2).
+
+    kind:
+      'uniform'    tau_i = floor(T/S * i)            (the paper's "linear")
+      'quadratic'  tau_i = floor(T/S^2 * i^2)        (CIFAR10 in the paper)
+      'explicit'   ``taus`` verbatim — any strictly increasing subsequence
+                   of [1, T]; the carrier for learned/nonuniform budgets.
+    """
+
+    kind: str = "uniform"
+    S: Optional[int] = None
+    taus: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.kind in ("uniform", "linear", "quadratic"):
+            if self.kind == "linear":       # accept the legacy spelling
+                object.__setattr__(self, "kind", "uniform")
+            if self.S is None or self.S < 1:
+                raise ValueError(f"TauSpec('{self.kind}') needs S >= 1")
+            if self.taus is not None:
+                raise ValueError("taus is only valid with kind='explicit'")
+        elif self.kind == "explicit":
+            if not self.taus:
+                raise ValueError("TauSpec('explicit') needs a non-empty taus")
+            taus = tuple(int(t) for t in self.taus)
+            if any(b <= a for a, b in zip(taus, taus[1:])):
+                raise ValueError(f"explicit taus must be strictly "
+                                 f"increasing, got {taus}")
+            if taus[0] < 1:
+                raise ValueError(f"explicit taus must start >= 1, got "
+                                 f"{taus[0]}")
+            object.__setattr__(self, "taus", taus)
+            object.__setattr__(self, "S", len(taus))
+        else:
+            raise ValueError(f"unknown tau kind: {self.kind!r}")
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def uniform(cls, S: int) -> "TauSpec":
+        return cls(kind="uniform", S=S)
+
+    @classmethod
+    def quadratic(cls, S: int) -> "TauSpec":
+        return cls(kind="quadratic", S=S)
+
+    @classmethod
+    def explicit(cls, taus: Sequence[int]) -> "TauSpec":
+        """An arbitrary (e.g. learned) strictly-increasing subsequence."""
+        return cls(kind="explicit", taus=tuple(int(t) for t in taus))
+
+    # ------------------------------------------------------------- resolve
+    def resolve(self, T: int) -> np.ndarray:
+        """The increasing (S,) int array of visited timesteps in [1, T]."""
+        from repro.core.schedules import make_tau
+        if self.kind == "explicit":
+            if self.taus[-1] > T:
+                raise ValueError(f"explicit tau {self.taus[-1]} exceeds "
+                                 f"T={T}")
+            return np.asarray(self.taus, dtype=np.int64)
+        if self.S > T:
+            raise ValueError(f"need S <= T, got S={self.S} T={T}")
+        kind = "linear" if self.kind == "uniform" else self.kind
+        return make_tau(T, self.S, kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class SigmaSpec:
+    """Per-step stochasticity spec (paper Eq. 16).
+
+    kind:
+      'eta'          sigma_k = eta * sqrt((1-a_s)/(1-a_t)) sqrt(1-a_t/a_s);
+                     eta=0 is DDIM, eta=1 is DDPM.  ``sigma_hat`` selects
+                     the over-dispersed App. D.3 noise scale (eta=1 only).
+      'eta_schedule' the same formula with a per-step eta (length S,
+                     ordered by increasing t — the trajectory order).
+      'explicit'     per-step sigmas verbatim (length S, trajectory order);
+                     validated against the Eq. 16 feasibility bound
+                     sigma_k^2 <= 1 - a_{s}.
+    """
+
+    kind: str = "eta"
+    eta: float = 0.0
+    etas: Optional[Tuple[float, ...]] = None
+    sigmas: Optional[Tuple[float, ...]] = None
+    sigma_hat: bool = False
+
+    def __post_init__(self):
+        if self.kind == "eta":
+            if self.eta < 0.0:
+                raise ValueError(f"eta must be >= 0, got {self.eta}")
+            if self.sigma_hat and self.eta != 1.0:
+                raise ValueError("sigma_hat is a DDPM (eta=1) variant")
+        elif self.kind == "eta_schedule":
+            if not self.etas:
+                raise ValueError("SigmaSpec('eta_schedule') needs etas")
+            etas = tuple(float(e) for e in self.etas)
+            if any(e < 0.0 for e in etas):
+                raise ValueError("per-step etas must be >= 0")
+            object.__setattr__(self, "etas", etas)
+            if self.sigma_hat:
+                raise ValueError("sigma_hat needs the scalar eta=1 spec")
+        elif self.kind == "explicit":
+            if self.sigmas is None:
+                raise ValueError("SigmaSpec('explicit') needs sigmas")
+            sig = tuple(float(s) for s in self.sigmas)
+            if any(s < 0.0 for s in sig):
+                raise ValueError("sigmas must be >= 0")
+            object.__setattr__(self, "sigmas", sig)
+            if self.sigma_hat:
+                raise ValueError("sigma_hat needs the scalar eta=1 spec")
+        else:
+            raise ValueError(f"unknown sigma kind: {self.kind!r}")
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def ddim(cls) -> "SigmaSpec":
+        """The deterministic implicit model (eta = 0)."""
+        return cls(kind="eta", eta=0.0)
+
+    @classmethod
+    def ddpm(cls, sigma_hat: bool = False) -> "SigmaSpec":
+        """The Markovian chain (eta = 1), optionally over-dispersed."""
+        return cls(kind="eta", eta=1.0, sigma_hat=sigma_hat)
+
+    @classmethod
+    def from_eta(cls, eta: float, sigma_hat: bool = False) -> "SigmaSpec":
+        return cls(kind="eta", eta=float(eta), sigma_hat=sigma_hat)
+
+    @classmethod
+    def schedule(cls, etas: Sequence[float]) -> "SigmaSpec":
+        """A per-step eta schedule (trajectory order, increasing t)."""
+        return cls(kind="eta_schedule", etas=tuple(float(e) for e in etas))
+
+    @classmethod
+    def explicit(cls, sigmas: Sequence[float]) -> "SigmaSpec":
+        """Per-step sigmas verbatim (trajectory order, increasing t)."""
+        return cls(kind="explicit", sigmas=tuple(float(s) for s in sigmas))
+
+    # ------------------------------------------------------------- resolve
+    def resolve(self, alpha_bar: np.ndarray, tau: np.ndarray):
+        """(sigma, noise_scale) float64 (S,) arrays, trajectory order.
+
+        ``sigma`` enters the direction coefficient sqrt(1 - a_s - sigma^2);
+        ``noise_scale`` multiplies the noise draw (they differ only for the
+        sigma-hat variant).
+        """
+        S = len(tau)
+        t_prev = np.concatenate([[0], tau[:-1]])
+        a_t = alpha_bar[tau]
+        a_s = alpha_bar[t_prev]
+        base = np.sqrt((1.0 - a_s) / (1.0 - a_t)) * np.sqrt(1.0 - a_t / a_s)
+        if self.kind == "eta":
+            sigma = self.eta * base
+        elif self.kind == "eta_schedule":
+            if len(self.etas) != S:
+                raise ValueError(f"eta schedule length {len(self.etas)} != "
+                                 f"S={S}")
+            sigma = np.asarray(self.etas, np.float64) * base
+        else:
+            if len(self.sigmas) != S:
+                raise ValueError(f"sigma list length {len(self.sigmas)} != "
+                                 f"S={S}")
+            sigma = np.asarray(self.sigmas, np.float64)
+            bad = sigma ** 2 > (1.0 - a_s) + 1e-12
+            if bad.any():
+                k = int(np.argmax(bad))
+                raise ValueError(
+                    f"sigma[{k}]={sigma[k]:.4g} violates the Eq. 16 bound "
+                    f"sigma^2 <= 1 - alpha_bar[prev] = {1.0 - a_s[k]:.4g}")
+        noise_scale = np.sqrt(1.0 - a_t / a_s) if self.sigma_hat else sigma
+        return sigma, noise_scale
+
+
+@dataclasses.dataclass(frozen=True)
+class X0Policy:
+    """What happens to the predicted x0 before the Eq. 12 jump.
+
+    ``clip``: bound |x0_hat| to a data range and re-derive the equivalent
+    eps (the common practice for image models); None leaves x0_hat alone.
+    """
+
+    clip: Optional[float] = None
+
+    def __post_init__(self):
+        if self.clip is not None and self.clip <= 0.0:
+            raise ValueError(f"clip must be positive, got {self.clip}")
+
+    @classmethod
+    def none(cls) -> "X0Policy":
+        return cls(clip=None)
+
+    @classmethod
+    def clipped(cls, bound: float = 1.0) -> "X0Policy":
+        return cls(clip=float(bound))

@@ -36,9 +36,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import NoiseSchedule, SamplerConfig, sample
+from repro.core import NoiseSchedule, SamplerConfig
 from repro.models import get_api
 from repro.models.common import ArchConfig
+from repro.sampling import SamplerPlan
 
 
 @dataclasses.dataclass
@@ -153,8 +154,9 @@ class ARGenerator:
 class DiffusionSampler:
     """Batched DDIM/DDPM sampling service (the paper's product surface).
 
-    One jitted program per (sampler config, batch shape); the request queue
-    is served in fixed-size batches. ``throughput(S)`` is linear in S
+    One jitted program per (frozen SamplerPlan, batch shape); the request
+    queue is served in fixed-size batches. Legacy SamplerConfig arguments
+    normalize to their equivalent plan. ``throughput(S)`` is linear in S
     (paper Fig. 4) — benchmarked in benchmarks/fig4_timing.py.
     """
 
@@ -216,40 +218,54 @@ class DiffusionSampler:
             n -= b
         return plan
 
-    def _get_fn(self, cfg: SamplerConfig, batch: int) -> Callable:
-        # key on the FULL config (frozen dataclass => hashable) + shape:
-        # configs differing only in e.g. clip_x0 must not share a program
-        key = (cfg, batch)
+    def _as_plan(self, plan_or_cfg) -> SamplerPlan:
+        """Normalize the request surface: SamplerPlan passes through,
+        legacy SamplerConfig compiles to its equivalent plan (memoized by
+        the plan's own hash in ``_compiled``)."""
+        if isinstance(plan_or_cfg, SamplerPlan):
+            return plan_or_cfg
+        return plan_or_cfg.to_plan(self.schedule)
+
+    def _get_fn(self, plan: SamplerPlan, batch: int) -> Callable:
+        # key on the FROZEN PLAN (hashes its full contents, schedule
+        # digest included) + shape: plans differing only in e.g. the x0
+        # policy or one explicit sigma must not share a program
+        key = (plan, batch)
         if key not in self._compiled:
+            backend = "tile_resident" if self.tile_resident else "jnp"
+
             def run(x_T, rng):
-                return sample(self.schedule, self.eps_fn, x_T, cfg, rng=rng,
-                              tile_resident=self.tile_resident,
-                              interpret=self.interpret)
+                return plan.run(self.eps_fn, x_T, rng, backend=backend,
+                                interpret=self.interpret)
             jit_kw = dict(donate_argnums=(0,)) if self.donate else {}
             self._compiled[key] = jax.jit(run, **jit_kw)
         return self._compiled[key]
 
-    def sample_batch(self, cfg: SamplerConfig, rng: jax.Array,
+    def sample_batch(self, cfg, rng: jax.Array,
                      n: Optional[int] = None) -> Tuple[jnp.ndarray, float]:
+        """One jitted batch for ``cfg`` (a SamplerPlan or SamplerConfig)."""
+        plan = self._as_plan(cfg)
         batch = self._bucket_for(n) if n is not None else self.batch
         k1, k2 = jax.random.split(rng)
         x_T = jax.random.normal(k1, (batch,) + self.shape, self.dtype)
-        fn = self._get_fn(cfg, batch)
+        fn = self._get_fn(plan, batch)
         t0 = time.perf_counter()
         out = fn(x_T, k2)
         out.block_until_ready()
         return out, time.perf_counter() - t0
 
-    def serve(self, n_samples: int, cfg: SamplerConfig,
+    def serve(self, n_samples: int, cfg,
               seed: int = 0) -> Tuple[jnp.ndarray, Dict]:
         """Produce n_samples in lockstep batches; returns samples + stats.
 
         Ragged loads follow ``_chunk_plan``: bucket-ladder chunks instead
         of padding the whole remainder up to the next rung. (This is the
         fixed-shape LOCKSTEP path — every sample in a batch shares one
-        SamplerConfig and runs the whole scan together. ``continuous()``
+        SamplerPlan and runs the whole scan together. ``continuous()``
         builds the step-heterogeneous scheduler on the same model/config.)
+        ``cfg`` may be a SamplerPlan or a legacy SamplerConfig.
         """
+        cfg = self._as_plan(cfg)
         if n_samples <= 0:
             empty = jnp.zeros((0,) + self.shape, self.dtype)
             return empty, {"batches": 0, "first_batch_s": 0.0,

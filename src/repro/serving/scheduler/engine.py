@@ -7,21 +7,28 @@ batchmate running S=100, and new arrivals must not wait for a whole batch
 scan to drain.
 
 The engine keeps B resident SLOTS. Each slot holds one request at its own
-position in its own trajectory — its own S, eta, tau spacing, sigma-hat
-variant and noise stream. One engine TICK advances every resident slot one
-step with a single jitted step function built on the per-row-coefficient
-kernel (kernels/sampler_step.sampler_step_rows): each tile row gathers its
-slot's Eq. 12 coefficients and PRNG seed, so arbitrary trajectory mixes run
-in one kernel launch. Finished slots are retired and refilled from the
-admission queue MID-FLIGHT — no lockstep drain, and no recompilation: slot
-contents only change array values, never the tick's trace (asserted in
-tests/test_scheduler.py).
+position in its own trajectory — described by its own frozen
+``repro.sampling.SamplerPlan``: tau spacing (uniform/quadratic/explicit-
+learned), sigma schedule (scalar eta, per-step eta, explicit sigmas),
+solver order, and noise stream. One engine TICK advances every resident
+slot one step with a single jitted step function built on the
+per-row-coefficient kernel (kernels/sampler_step.sampler_step_rows): each
+tile row gathers its slot's Eq. 12 coefficients, PRNG seed, and — on
+multistep-capable engines — its slot's Adams–Bashforth weight row over a
+shared eps-history stack, so arbitrary trajectory AND solver mixes run in
+one kernel launch. Finished slots are retired and refilled from the
+admission queue MID-FLIGHT — no lockstep drain, and no recompilation:
+slot contents only change array values, never the tick's trace (asserted
+in tests/test_scheduler.py and tests/test_sampler_plan.py).
 
 State residency: the slot batch lives in the padded (B * rows_per_slot, C)
 slot-tile layout for a request's whole residency — x_T is written into the
 slot's rows at admission, every tick runs tile-resident, and the natural
 sample shape is read back once at retirement (the PR-1 layout contract
-extended across requests).
+extended across requests). Multistep engines additionally carry a
+(max_order-1, R, C) float32 eps-history stack; warm-up is baked into each
+plan's per-step weight rows, so freshly admitted slots never read a
+predecessor's stale history (its weights are zero there).
 
 Per-request extras: absolute deadlines (expired requests are dropped at
 admission, finished-late ones flagged), progressive x0-preview streaming
@@ -39,8 +46,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import NoiseSchedule, SamplerConfig, StepStates
-from repro.core.sampler import slot_tile_step, step_table
+from repro.core import NoiseSchedule, StepStates
+from repro.core.sampler import slot_tile_step
+from repro.sampling import MAX_ORDER, SamplerPlan
 # the kernel's murmur3 finalizer is plain operator arithmetic — it mixes
 # host-side numpy uint32 arrays just as well, so the per-tick seed stream
 # can never drift from the kernel/oracle definition
@@ -65,12 +73,15 @@ class ContinuousBatchingEngine:
     """Slot-based continuous-batching server for DDIM-family sampling.
 
     One engine == one compiled tick program per (slots, sample_shape,
-    dtype, stochastic, clip_x0, preview) configuration. Run several engines
-    for a slot-count bucket ladder; within an engine, admission, retirement
-    and arbitrary per-request (S, eta, tau) mixes never retrace.
+    dtype, stochastic, clip_x0, preview, max_order) configuration. Run
+    several engines for a slot-count bucket ladder; within an engine,
+    admission, retirement and arbitrary per-request plan mixes (tau
+    spacing x sigma schedule x solver order) never retrace.
 
     Args:
       schedule: the T-step noise schedule the eps model was trained with.
+        Per-request plans must be built on this same schedule (validated
+        by digest at submit).
       eps_fn: eps_theta(x_t, t), t an int32 (B,) vector (every slot at its
         own timestep). Models may declare ``slot_tile_aware = True`` to
         consume the (R, C) slot-tile view directly and skip the per-tick
@@ -78,16 +89,22 @@ class ContinuousBatchingEngine:
       sample_shape: per-request sample shape.
       slots: number of resident requests B advanced per tick.
       stochastic: compile the in-kernel-noise tick. A deterministic engine
-        (the default) serves only eta=0/non-sigma-hat requests and its tick
-        provably contains no PRNG ops; a stochastic engine serves ANY eta
-        mix (deterministic rows ride along with c_noise = 0).
+        (the default) serves only noise-free plans and its tick provably
+        contains no PRNG ops; a stochastic engine serves ANY sigma mix
+        (deterministic rows ride along with c_noise = 0).
       clip_x0: engine-level |x0| clip applied to every request (a
         compile-time kernel specialization, so it is a slot-pool property
-        rather than a per-request field).
+        rather than a per-request field). Plan requests must carry the
+        matching X0Policy.
       preview: compile the x0-preview tick variant (kernel emits predicted
         x0 as a second output; requests opt in via ``preview_every``).
         Preview ticks use the explicit-x0 arithmetic (the clip path), which
         costs eta=0 bit-exactness against the scan — see kernel docs.
+      max_order: highest Adams–Bashforth solver order the tick supports
+        (1..4). max_order=1 compiles the history-free tick; higher values
+        carry a (max_order-1, R, C) eps-history stack and let slots mix
+        solver orders freely (order-1 slots ride along with weight rows
+        [1, 0, ...]).
       max_queue: admission-queue depth bound (None = unbounded).
       donate: donate the slot state into the tick (default: on TPU/GPU).
       interpret: Pallas interpret mode; None = compiled on TPU only.
@@ -97,11 +114,15 @@ class ContinuousBatchingEngine:
                  sample_shape: Tuple[int, ...], slots: int,
                  dtype=jnp.float32, *, stochastic: bool = False,
                  clip_x0: Optional[float] = None, preview: bool = False,
+                 max_order: int = 1,
                  max_queue: Optional[int] = None,
                  donate: Optional[bool] = None,
                  interpret: Optional[bool] = None):
         from repro.kernels.sampler_step import ops as tile_ops
 
+        if not 1 <= max_order <= MAX_ORDER:
+            raise ValueError(f"max_order must be in 1..{MAX_ORDER}, got "
+                             f"{max_order}")
         self.schedule = schedule
         self.eps_fn = eps_fn
         self.shape = tuple(sample_shape)
@@ -110,6 +131,7 @@ class ContinuousBatchingEngine:
         self.stochastic = stochastic
         self.clip_x0 = clip_x0
         self.preview = preview
+        self.max_order = int(max_order)
         if interpret is None:
             interpret = tile_ops.default_interpret()
         self.interpret = interpret
@@ -122,10 +144,15 @@ class ContinuousBatchingEngine:
         self._rps = tile_ops.slot_rows(self.shape)
         self._tile_c = tile_ops.TILE_C
         self._x2 = jnp.zeros((self.slots * self._rps, self._tile_c), dtype)
+        # shared eps-history stack for the multistep tick (fp32 policy)
+        self._hist2 = (jnp.zeros((self.max_order - 1,) + self._x2.shape,
+                                 jnp.float32)
+                       if self.max_order > 1 else None)
         self._slots: List[Optional[_Slot]] = [None] * self.slots
         self._free: List[int] = list(range(self.slots))[::-1]
         self.queue = AdmissionQueue(max_queue)
-        self._tables: Dict[SamplerConfig, Dict[str, np.ndarray]] = {}
+        self._tables: Dict[SamplerPlan, Dict[str, np.ndarray]] = {}
+        self._schedule_digest = None   # filled lazily from the first plan
         self._traces = 0
         # inactive-slot filler row: an EXACT identity update on the no-clip
         # path (a = c_x0/sqrt_a = 1, b = c_dir - a*sqrt_1m_a = 0 => x' = x),
@@ -152,14 +179,26 @@ class ContinuousBatchingEngine:
     def _make_tick(self):
         shape = self.shape
 
-        def tick(x2, states):
-            self._traces += 1   # host side effect: fires once per trace
-            return slot_tile_step(
-                self.eps_fn, x2, states, shape, clip_x0=self.clip_x0,
-                stochastic=self.stochastic, want_x0=self.preview,
-                hw_prng=self.hw_prng, interpret=self.interpret)
+        if self.max_order == 1:
+            def tick(x2, states):
+                self._traces += 1   # host side effect: fires once per trace
+                return slot_tile_step(
+                    self.eps_fn, x2, states, shape, clip_x0=self.clip_x0,
+                    stochastic=self.stochastic, want_x0=self.preview,
+                    hw_prng=self.hw_prng, interpret=self.interpret)
 
-        kw = dict(donate_argnums=(0,)) if self.donate else {}
+            kw = dict(donate_argnums=(0,)) if self.donate else {}
+            return jax.jit(tick, **kw)
+
+        def tick(x2, hist2, states):
+            self._traces += 1       # host side effect: fires once per trace
+            return slot_tile_step(
+                self.eps_fn, x2, states, shape, hist2=hist2,
+                clip_x0=self.clip_x0, stochastic=self.stochastic,
+                want_x0=self.preview, hw_prng=self.hw_prng,
+                interpret=self.interpret)
+
+        kw = dict(donate_argnums=(0, 1)) if self.donate else {}
         return jax.jit(tick, **kw)
 
     def _make_write(self):
@@ -181,21 +220,45 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------------------ plumbing
     def _table_for(self, req: SampleRequest) -> Dict[str, np.ndarray]:
-        cfg = req.sampler_config(self.clip_x0)
-        if cfg not in self._tables:
-            self._tables[cfg] = step_table(self.schedule, cfg)
-        return self._tables[cfg]
+        plan = req.resolved_plan(self.schedule, self.clip_x0)
+        if plan not in self._tables:
+            self._tables[plan] = plan.steps()
+        return self._tables[plan]
+
+    def _validate_plan(self, req: SampleRequest) -> None:
+        plan = req.plan
+        if plan is None:
+            return
+        if self._schedule_digest is None:
+            from repro.sampling.plan import _schedule_digest
+            self._schedule_digest = _schedule_digest(self.schedule)
+        if plan.schedule_digest() != self._schedule_digest:
+            raise ValueError(
+                f"request {req.request_id}: plan built on a different "
+                "noise schedule than this engine serves")
+        if plan.clip_x0 != self.clip_x0:
+            raise ValueError(
+                f"request {req.request_id}: plan clip_x0={plan.clip_x0} != "
+                f"engine clip_x0={self.clip_x0} (the clip is a compile-time "
+                "slot-pool property)")
+        if plan.order > self.max_order:
+            raise ValueError(
+                f"request {req.request_id}: plan order={plan.order} exceeds "
+                f"engine max_order={self.max_order} (build the engine with "
+                "max_order >= the largest solver order it must serve)")
 
     def submit(self, req: SampleRequest,
                now: Optional[float] = None) -> bool:
         """Enqueue a request; False means rejected (queue back-pressure)."""
         if req.stochastic and not self.stochastic:
             raise ValueError(
-                f"request {req.request_id}: eta={req.eta}/sigma_hat needs a "
-                "stochastic=True engine (deterministic tick has no PRNG)")
-        if not 1 <= req.S <= self.schedule.T:
-            raise ValueError(f"request {req.request_id}: S={req.S} outside "
-                             f"[1, T={self.schedule.T}]")
+                f"request {req.request_id}: a stochastic plan (sigma > 0 "
+                "somewhere) needs a stochastic=True engine (deterministic "
+                "tick has no PRNG)")
+        self._validate_plan(req)
+        if not 1 <= req.steps <= self.schedule.T:
+            raise ValueError(f"request {req.request_id}: S={req.steps} "
+                             f"outside [1, T={self.schedule.T}]")
         now = time.perf_counter() if now is None else now
         return self.queue.submit(req, now)
 
@@ -206,10 +269,10 @@ class ContinuousBatchingEngine:
     def _drop(self, req: SampleRequest, now: float,
               missed: bool = True) -> SampleResult:
         self.dropped += 1
-        return SampleResult(request_id=req.request_id, x0=None, S=req.S,
-                            eta=req.eta, submit_t=req.submit_t, admit_t=None,
-                            finish_t=now, deadline_missed=missed,
-                            dropped=True)
+        return SampleResult(request_id=req.request_id, x0=None, S=req.steps,
+                            eta=req.eta_label, submit_t=req.submit_t,
+                            admit_t=None, finish_t=now,
+                            deadline_missed=missed, dropped=True)
 
     def _admit(self, now: float, results: List[SampleResult]) -> None:
         while self._free and len(self.queue):
@@ -230,6 +293,10 @@ class ContinuousBatchingEngine:
                 for k, v in self._idle_row.items() if k != "t"}
         seeds = np.zeros((B,), np.uint32)
         ks = np.zeros((B,), np.uint32)
+        solver_w = None
+        if self.max_order > 1:
+            solver_w = np.zeros((B, self.max_order), np.float32)
+            solver_w[:, 0] = 1.0       # idle slots: identity combine
         for b, slot in enumerate(self._slots):
             if slot is None:
                 continue
@@ -239,6 +306,10 @@ class ContinuousBatchingEngine:
                 cols[name][b] = tab[name][k]
             seeds[b] = np.uint32(slot.req.seed & 0xFFFFFFFF)
             ks[b] = np.uint32(k)
+            if solver_w is not None:
+                w = tab["solver_w"][k]         # (order,) — plan's own order
+                solver_w[b, :] = 0.0
+                solver_w[b, :len(w)] = w
         seed = None
         if self.stochastic:
             # per-slot per-tick stream seed: full-avalanche mix of the
@@ -251,7 +322,9 @@ class ContinuousBatchingEngine:
                           c_noise=jnp.asarray(cols["c_noise"]),
                           sqrt_a_t=jnp.asarray(cols["sqrt_a_t"]),
                           sqrt_1m_a_t=jnp.asarray(cols["sqrt_1m_a_t"]),
-                          seed=seed)
+                          seed=seed,
+                          solver_w=(None if solver_w is None
+                                    else jnp.asarray(solver_w)))
 
     def _read_slot(self, b: int) -> np.ndarray:
         rows = self._x2[b * self._rps:(b + 1) * self._rps]
@@ -265,7 +338,7 @@ class ContinuousBatchingEngine:
                 continue
             req, done = slot.req, slot.k + 1
             if (req.preview_every > 0 and req.on_preview is not None
-                    and done < req.S and done % req.preview_every == 0):
+                    and done < req.steps and done % req.preview_every == 0):
                 rows = x0_2[b * self._rps:(b + 1) * self._rps]
                 x0 = np.asarray(rows).ravel()[:self._n].reshape(self.shape)
                 req.on_preview(req.request_id, done, x0)
@@ -288,7 +361,10 @@ class ContinuousBatchingEngine:
             return results
         states = self._states()
         t0 = time.perf_counter()
-        out = self._tick_fn(self._x2, states)
+        if self.max_order == 1:
+            out = self._tick_fn(self._x2, states)
+        else:
+            out, self._hist2 = self._tick_fn(self._x2, self._hist2, states)
         self._x2, x0_2 = out if self.preview else (out, None)
         jax.block_until_ready(self._x2)
         t1 = time.perf_counter()
@@ -303,12 +379,12 @@ class ContinuousBatchingEngine:
             if slot is None:
                 continue
             slot.k += 1
-            if slot.k >= slot.req.S:
+            if slot.k >= slot.req.steps:
                 req = slot.req
                 missed = (req.deadline is not None and now > req.deadline)
                 results.append(SampleResult(
                     request_id=req.request_id, x0=self._read_slot(b),
-                    S=req.S, eta=req.eta, submit_t=req.submit_t,
+                    S=req.steps, eta=req.eta_label, submit_t=req.submit_t,
                     admit_t=slot.admit_t, finish_t=now,
                     previews=slot.previews, deadline_missed=missed))
                 self.completed += 1
@@ -362,6 +438,7 @@ class ContinuousBatchingEngine:
             "compiled_ticks": self._traces,
             "stochastic": self.stochastic,
             "preview": self.preview,
+            "max_order": self.max_order,
             "dtype": jnp.dtype(self.dtype).name,
             "donated": self.donate,
         }

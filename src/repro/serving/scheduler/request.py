@@ -1,10 +1,14 @@
 """Request/result records for the continuous-batching scheduler.
 
 A :class:`SampleRequest` is one sampling job with its OWN quality/latency
-dial: per-request step budget S, eta, tau spacing and sigma-hat variant
-(paper §4.1-4.2 — "trade off computation for sample quality"), plus serving
-metadata (seed, deadline, preview cadence). The scheduler multiplexes
-requests with arbitrary mixes of these through one resident slot batch.
+dial. The first-class way to say what to run is a frozen
+``repro.sampling.SamplerPlan`` (``plan=``): any tau spacing (uniform /
+quadratic / explicit-learned), any sigma schedule (scalar eta, per-step
+eta, explicit sigmas), and any solver order the engine was built for —
+the scheduler multiplexes arbitrary mixes of these through one resident
+slot batch with zero retraces. The legacy scalar knobs (S, eta, tau_kind,
+sigma_hat) remain as a convenience and compile to the equivalent plan at
+admission.
 
 Timestamps are in the CALLER's clock (whatever ``now`` the engine is driven
 with — wall time by default, a virtual clock in trace-replay benchmarks).
@@ -17,6 +21,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core import SamplerConfig
+from repro.sampling import SamplerPlan
 
 
 @dataclasses.dataclass
@@ -28,6 +33,8 @@ class SampleRequest:
     eta: float = 0.0                   # 0 = DDIM, 1 = DDPM (Eq. 16)
     tau_kind: str = "linear"           # per-request sub-sequence spacing
     sigma_hat: bool = False            # over-dispersed DDPM variant
+    plan: Optional[SamplerPlan] = None  # full per-request trajectory plan;
+    #                                     overrides the scalar knobs above
     seed: int = 0                      # x_T + noise-stream seed
     deadline: Optional[float] = None   # absolute completion deadline
     preview_every: int = 0             # stream x0-previews every k ticks
@@ -36,13 +43,42 @@ class SampleRequest:
 
     @property
     def stochastic(self) -> bool:
+        if self.plan is not None:
+            return self.plan.stochastic
         return self.eta > 0.0 or self.sigma_hat
+
+    @property
+    def steps(self) -> int:
+        """The step budget actually executed (plan-aware S)."""
+        return self.plan.S if self.plan is not None else self.S
+
+    @property
+    def order(self) -> int:
+        return self.plan.order if self.plan is not None else 1
+
+    @property
+    def eta_label(self) -> float:
+        """Scalar eta for result bookkeeping (NaN for non-scalar specs)."""
+        if self.plan is None:
+            return self.eta
+        return (self.plan.sigma.eta if self.plan.sigma.kind == "eta"
+                else float("nan"))
 
     def sampler_config(self, clip_x0: Optional[float] = None
                        ) -> SamplerConfig:
-        """The equivalent whole-trajectory config (engine-level clip_x0)."""
+        """The equivalent whole-trajectory config (engine-level clip_x0).
+
+        Legacy-knob requests only; plan requests carry their own policy.
+        """
         return SamplerConfig(S=self.S, eta=self.eta, tau_kind=self.tau_kind,
                              sigma_hat=self.sigma_hat, clip_x0=clip_x0)
+
+    def resolved_plan(self, schedule, clip_x0: Optional[float] = None
+                      ) -> SamplerPlan:
+        """The plan this request executes on the given engine schedule."""
+        if self.plan is not None:
+            return self.plan
+        return self.sampler_config(clip_x0).to_plan(schedule)
 
 
 @dataclasses.dataclass
