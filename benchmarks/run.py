@@ -4,14 +4,28 @@
   PYTHONPATH=src python -m benchmarks.run --budget quick
   PYTHONPATH=src python -m benchmarks.run --suite sampler    # hot-path bench
   PYTHONPATH=src python -m benchmarks.run --suite scheduler  # serving bench
-  PYTHONPATH=src python -m benchmarks.run --suite sampler --check  # CI gate
+  PYTHONPATH=src python -m benchmarks.run --suite sampler --check    # CI gate
+  PYTHONPATH=src python -m benchmarks.run --suite scheduler --check  # CI gate
+  PYTHONPATH=src python -m benchmarks.run --suite all --record  # re-baseline
 
-``--check`` (sampler suite) runs the sampler microbench WITHOUT rewriting
-the committed BENCH_sampler.json and exits non-zero on ANY growth of the
-modeled HBM-bytes-per-step or a >25% regression of a kernel path's
-wall-clock relative to the same run's 'jnp' reference (machine speed
-cancels in the ratio) — wired into scripts/tier1.sh so hot-path
+``--check`` runs the suite's benchmark WITHOUT rewriting its committed
+BENCH_*.json and exits non-zero on regression:
+
+  sampler    any growth of the modeled HBM-bytes-per-step, or a >25%
+             regression of a kernel path's wall-clock relative to the same
+             run's 'jnp' reference (machine speed cancels in the ratio);
+  scheduler  a >25% drop of the continuous/lockstep samples-per-second
+             ratio, or >25% growth of continuous net evals per completed
+             sample, against a replay of the committed trace.
+
+Both gates are wired into scripts/tier1.sh so hot-path and serving
 regressions can't land silently.
+
+``--record`` re-runs the recording suites (sampler + scheduler — with
+``--suite all`` exactly those two, the paper modules don't write BENCH
+files), REWRITES the committed BENCH_*.json baselines in one command, and
+appends a dated summary entry to BENCH_HISTORY.md so the perf trajectory
+is tracked across PRs.
 
 Prints ``name,us_per_call,derived`` CSV rows (scaffold contract).
 """
@@ -19,6 +33,8 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import json
+import os
 import sys
 import time
 import traceback
@@ -41,6 +57,57 @@ SUITES = {
                             "benchmarks.scheduler_throughput"],
 }
 
+# suites whose run() rewrites a committed BENCH_*.json (and so support
+# --check against it / --record of it)
+RECORDING = {"sampler": ("benchmarks.sampler_overhead", "BENCH_sampler.json"),
+             "scheduler": ("benchmarks.scheduler_throughput",
+                           "BENCH_scheduler.json")}
+
+
+def _history_entry(root: str) -> str:
+    """One dated BENCH_HISTORY.md block from the committed BENCH files."""
+    import datetime
+    lines = [f"## {datetime.date.today().isoformat()}"]
+    sp = os.path.join(root, "BENCH_sampler.json")
+    if os.path.exists(sp):
+        with open(sp) as f:
+            bench = json.load(f)
+        best = {}
+        for r in bench["results"]:
+            if r["eta"] == 0.0:
+                cur = best.get(r["path"])
+                if cur is None or r["per_step_ms"] < cur["per_step_ms"]:
+                    best[r["path"]] = r
+        for path_name, r in sorted(best.items()):
+            lines.append(
+                f"- sampler/{path_name}: best {r['per_step_ms']:.3f} "
+                f"ms/step (eta=0, S={r['S']}), modeled HBM "
+                f"{r['modeled_hbm_bytes_per_step']} B/step")
+    cp = os.path.join(root, "BENCH_scheduler.json")
+    if os.path.exists(cp):
+        with open(cp) as f:
+            bench = json.load(f)
+        for p in ("lockstep", "continuous"):
+            r = bench[p]
+            lines.append(
+                f"- scheduler/{p}: {r['samples_per_s']:.2f} samples/s, "
+                f"p95 {r['p95_s']:.3f} s, net evals {r['net_evals']}")
+    return "\n".join(lines) + "\n"
+
+
+def _append_history(root: str) -> None:
+    hist = os.path.join(root, "BENCH_HISTORY.md")
+    entry = _history_entry(root)
+    if not os.path.exists(hist):
+        with open(hist, "w") as f:
+            f.write("# Benchmark history\n\n"
+                    "Appended by `benchmarks.run --record` — one dated "
+                    "entry per re-baseline, newest last, so the perf "
+                    "trajectory across PRs stays on the record.\n\n")
+    with open(hist, "a") as f:
+        f.write(entry + "\n")
+    print(f"# appended {hist}", file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -50,33 +117,53 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="substring filter on module names")
     ap.add_argument("--check", action="store_true",
-                    help="sampler suite only: compare a fresh run against "
-                    "the committed BENCH_sampler.json (no rewrite); fail "
-                    "on >25%% wall-clock or any modeled-HBM regression")
+                    help="sampler/scheduler suites: compare a fresh run "
+                    "against the committed BENCH_*.json (no rewrite); "
+                    "fail on regression (see module docstring)")
+    ap.add_argument("--record", action="store_true",
+                    help="re-run the recording suites, rewrite their "
+                    "BENCH_*.json baselines and append a dated entry to "
+                    "BENCH_HISTORY.md")
     args = ap.parse_args()
 
+    if args.check and args.record:
+        ap.error("--check and --record are mutually exclusive")
+
     if args.check:
-        if args.suite != "sampler":
-            ap.error("--check is defined for --suite sampler")
-        from benchmarks import sampler_overhead
-        failures = sampler_overhead.check(args.budget)
+        if args.suite not in RECORDING:
+            ap.error("--check is defined for --suite "
+                     + "/".join(sorted(RECORDING)))
+        modname, bench_file = RECORDING[args.suite]
+        mod = importlib.import_module(modname)
+        failures = mod.check(args.budget)
         if failures:
-            for f in failures:
-                print(f"CHECK FAIL: {f}", file=sys.stderr)
+            for fmsg in failures:
+                print(f"CHECK FAIL: {fmsg}", file=sys.stderr)
             sys.exit(1)
-        print("sampler benchmark check OK (within 25% of committed "
-              "BENCH_sampler.json)")
+        print(f"{args.suite} benchmark check OK (within 25% of committed "
+              f"{bench_file})")
         return
 
+    if args.record and args.suite not in tuple(RECORDING) + ("all",):
+        ap.error("--record is defined for --suite "
+                 + "/".join(sorted(RECORDING)) + "/all")
+
+    if args.record:
+        modules = [RECORDING[s][0] for s in sorted(RECORDING)
+                   if args.suite in ("all", s)]
+    else:
+        modules = SUITES[args.suite]
+
     print("name,us_per_call,derived")
-    failed = []
-    for modname in SUITES[args.suite]:
+    failed, ran = [], 0
+    for modname in modules:
         if args.only and args.only not in modname:
             continue
         t0 = time.time()
         try:
             mod = importlib.import_module(modname)
             rows = mod.run(args.budget)
+            ran += 1
             for row in rows:
                 print(row.csv(), flush=True)
             print(f"# {modname} done in {time.time()-t0:.1f}s",
@@ -87,6 +174,13 @@ def main() -> None:
                   file=sys.stderr, flush=True)
     if failed:
         sys.exit(1)
+    if args.record:
+        if ran == 0:   # e.g. --only filtered everything: nothing fresh to
+            print("# --record: no recording suite ran, history untouched",
+                  file=sys.stderr)
+            return     # baseline, so don't log a re-baseline that wasn't
+        from benchmarks._common import ROOT
+        _append_history(ROOT)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,16 @@ network time):
                  (R, C) tile layout for the whole scan; noise in-kernel
   rows           plan.run(backend='rows') — the per-row scheduler-tick
                  kernel driven in lockstep (slot-tile layout resident)
+  mega           plan.run(backend='mega') — the ISSUE 4 megakernel: a
+                 REAL (tiny, mega-eligible) diffusion-LM trunk fused INTO
+                 the step kernel, K steps per launch. Unlike the other
+                 paths (analytic eps, eps traffic excluded), the mega
+                 figure is a WEIGHTS-RESIDENT model: each launch moves
+                 (state in + state out + trunk weights), amortized over
+                 the trajectory's actual ceil(S/K) launches — the state
+                 never touches HBM between the fused steps and the weights
+                 stream once per chunk. eta=0 only (stochastic plans fall
+                 back to tile_resident by design).
 
 Reports wall-clock per-step ms (post-compile median) and a MODELED
 HBM-bytes-per-step figure: the count of state-sized array reads+writes the
@@ -30,6 +40,7 @@ baseline (see run.py).
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import warnings
@@ -57,11 +68,18 @@ SCH = make_schedule("linear", T=1000)
 #                no layout traffic; eps pack-free for tile-aware models)
 #   rows eta>=0: per-row kernel x,eps reads + x_prev write = 3 (the
 #                (R, 8) coefficient rows are noise-level traffic)
+# The mega path's model is computed in collect(): weights-resident —
+#   (state read + state write + trunk weights) / K_FUSE per step.
 _TOUCHES = {"jnp": {0.0: 3, 1.0: 5},
             "fused_step": {0.0: 9, 1.0: 13},
             "tile_resident": {0.0: 3, 1.0: 3},
             "rows": {0.0: 3, 1.0: 3}}
-PATHS = ("jnp", "fused_step", "tile_resident", "rows")
+PATHS = ("jnp", "fused_step", "tile_resident", "rows", "mega")
+K_FUSE = 8   # mega: plan steps fused per launch (the recorded config)
+
+# mega eps model: a real (tiny, VMEM-eligible) diffusion-LM dense trunk on
+# the SAME 65536-element state — batch 32 x seq 64 x latent 32
+MEGA_BATCH, MEGA_SEQ, MEGA_LATENT = 32, 64, 32
 
 
 def _eps_nat(x, t):
@@ -80,6 +98,32 @@ _eps_tile.tile_aware = True
 _eps_tile.slot_tile_aware = True
 
 
+@functools.lru_cache(maxsize=1)
+def _mega_model():
+    """The tiny mega-eligible trunk (fixed random weights, eval-only)."""
+    from repro import diffusion_lm as dlm
+    from repro.models.common import ArchConfig
+
+    arch = ArchConfig(name="bench-mega", family="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, d_ff=128,
+                      vocab=64)
+    cfg = dlm.DiffusionLMConfig(arch=arch, time_dim=64,
+                                latent_dim=MEGA_LATENT)
+    params = dlm.init_params(jax.random.PRNGKey(7), cfg)
+    eps_fn = dlm.make_tile_eps_fn(params, cfg, MEGA_BATCH, MEGA_SEQ)
+    assert eps_fn.mega_spec.fits(), "bench trunk must be VMEM-eligible"
+    return eps_fn
+
+
+def _mega_hbm_per_step(state_bytes: int, S: int) -> int:
+    """Weights-resident model: (state in + out + weights) per K-step chunk,
+    averaged over the trajectory's ACTUAL ceil(S/K) launches — a ragged
+    last chunk (S % K != 0) pays a full weight stream for fewer steps."""
+    w = _mega_model().mega_spec.weight_bytes()
+    chunks = -(-S // K_FUSE)
+    return (2 * state_bytes + w) * chunks // S
+
+
 def _make_fn(path: str, S: int, eta: float):
     plan = SamplerPlan.build(SCH, tau=S, sigma=eta)
     if path == "fused_step":
@@ -94,6 +138,12 @@ def _make_fn(path: str, S: int, eta: float):
     elif path == "jnp":
         def fn(x, r):
             return plan.run(_eps_nat, x, r, backend="jnp")
+    elif path == "mega":
+        eps_mega = _mega_model()
+
+        def fn(x, r):
+            x3 = x.reshape(MEGA_BATCH, MEGA_SEQ, MEGA_LATENT)
+            return plan.run(eps_mega, x3, backend="mega", k_fuse=K_FUSE)
     else:
         def fn(x, r, _backend=path):
             return plan.run(_eps_tile, x, r, backend=_backend)
@@ -110,12 +160,15 @@ def collect(budget: str = "full"):
     for eta in (0.0, 1.0):
         for S in s_list:
             for path in PATHS:
+                if path == "mega" and eta != 0.0:
+                    continue   # stochastic plans fall back by design
                 # best-of-5: the committed wall numbers feed the --check
                 # regression gate, so use the load-spike-robust estimator
                 dt = timed(_make_fn(path, S, eta), x, rng, repeats=5,
                            stat="min")
                 per_step_ms = dt * 1e3 / S
-                hbm = _TOUCHES[path][eta] * elem_bytes
+                hbm = (_mega_hbm_per_step(elem_bytes, S) if path == "mega"
+                       else _TOUCHES[path][eta] * elem_bytes)
                 rows.append(Row(
                     f"sampler_overhead/{path}/eta{eta:g}/S{S}",
                     dt * 1e6, f"per_step_ms={per_step_ms:.3f};"
@@ -142,13 +195,64 @@ def run(budget: str = "full"):
                  "reads+writes in the scan body outside the eps model; "
                  "wall-clock on CPU interpret mode tracks dispatch "
                  "overhead, not HBM. Paths are SamplerPlan backends plus "
-                 "the deprecated fused_step shim."),
+                 "the deprecated fused_step shim. The mega path runs a "
+                 "real tiny diffusion-LM trunk IN-kernel (weights-resident "
+                 "model: (2*state + weights) * ceil(S/K) / S per step, "
+                 "eta=0 only)."),
+        "mega": {
+            "k_fuse": K_FUSE,
+            "shape": [MEGA_BATCH, MEGA_SEQ, MEGA_LATENT],
+            "trunk_weight_bytes": _mega_model().mega_spec.weight_bytes(),
+            "trunk_vmem_bytes": _mega_model().mega_vmem_bytes,
+        },
         "results": results,
     }
     with open(BENCH_PATH, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     return rows
+
+
+def _compare(fresh, committed, threshold: float):
+    """One fresh-vs-committed comparison -> (hbm_failures, wall_failures,
+    wall_failure_paths)."""
+    base = {(r["path"], r["eta"], r["S"]): r for r in committed}
+    hbm_failures, wall_failures, wall_paths = [], [], set()
+    wall_new = {p: 0.0 for p in PATHS}
+    wall_old = {p: 0.0 for p in PATHS}
+    compared = 0
+    for r in fresh:
+        key = (r["path"], r["eta"], r["S"])
+        if key not in base:
+            continue
+        compared += 1
+        b = base[key]
+        if r["modeled_hbm_bytes_per_step"] > b["modeled_hbm_bytes_per_step"]:
+            hbm_failures.append(
+                f"{key}: modeled HBM/step grew "
+                f"{b['modeled_hbm_bytes_per_step']} -> "
+                f"{r['modeled_hbm_bytes_per_step']} bytes")
+        wall_new[r["path"]] += r["total_ms"]
+        wall_old[r["path"]] += b["total_ms"]
+    if compared == 0 or wall_new["jnp"] <= 0.0 or wall_old["jnp"] <= 0.0:
+        hbm_failures.append("no overlapping cases between fresh run and "
+                            "committed BENCH_sampler.json")
+        return hbm_failures, wall_failures, wall_paths
+    for path in PATHS:
+        if path == "jnp":
+            continue   # the normalizer: its own drift cancels by design
+        if wall_old[path] <= 0.0 or wall_new[path] <= 0.0:
+            continue   # path absent from one side (e.g. a new backend)
+        rel_new = wall_new[path] / wall_new["jnp"]
+        rel_old = wall_old[path] / wall_old["jnp"]
+        if rel_new > rel_old * (1.0 + threshold):
+            wall_paths.add(path)
+            wall_failures.append(
+                f"{path}: wall-clock relative to jnp regressed "
+                f"{rel_old:.2f}x -> {rel_new:.2f}x "
+                f"(+{(rel_new / rel_old - 1) * 100:.0f}% > "
+                f"{threshold * 100:.0f}% threshold)")
+    return hbm_failures, wall_failures, wall_paths
 
 
 def check(budget: str = "quick", threshold: float = 0.25):
@@ -164,45 +268,26 @@ def check(budget: str = "quick", threshold: float = 0.25):
         aggregate. A slower/faster machine scales all paths together and
         cancels in the ratio; a code regression in one path's scan body
         does not. Fails when a path's relative cost grows more than
-        ``threshold`` over the committed ratio.
+        ``threshold`` over the committed ratio — in TWO consecutive fresh
+        runs: at quick budget the aggregates are a few ms and the ratio
+        can swing under transient machine load (e.g. right after the full
+        pytest suite in tier1), so a wall failure must REPRODUCE before
+        it fails the gate. HBM failures are deterministic and never
+        retried.
     """
     with open(BENCH_PATH) as f:
         committed = json.load(f)["results"]
-    base = {(r["path"], r["eta"], r["S"]): r for r in committed}
-    _, fresh = collect(budget)
-    failures = []
-    wall_new = {p: 0.0 for p in PATHS}
-    wall_old = {p: 0.0 for p in PATHS}
-    compared = 0
-    for r in fresh:
-        key = (r["path"], r["eta"], r["S"])
-        if key not in base:
-            continue
-        compared += 1
-        b = base[key]
-        if r["modeled_hbm_bytes_per_step"] > b["modeled_hbm_bytes_per_step"]:
-            failures.append(
-                f"{key}: modeled HBM/step grew "
-                f"{b['modeled_hbm_bytes_per_step']} -> "
-                f"{r['modeled_hbm_bytes_per_step']} bytes")
-        wall_new[r["path"]] += r["total_ms"]
-        wall_old[r["path"]] += b["total_ms"]
-    if compared == 0 or wall_new["jnp"] <= 0.0 or wall_old["jnp"] <= 0.0:
-        failures.append("no overlapping cases between fresh run and "
-                        "committed BENCH_sampler.json")
-        return failures
-    for path in PATHS:
-        if path == "jnp":
-            continue   # the normalizer: its own drift cancels by design
-        rel_new = wall_new[path] / wall_new["jnp"]
-        rel_old = wall_old[path] / wall_old["jnp"]
-        if rel_new > rel_old * (1.0 + threshold):
-            failures.append(
-                f"{path}: wall-clock relative to jnp regressed "
-                f"{rel_old:.2f}x -> {rel_new:.2f}x "
-                f"(+{(rel_new / rel_old - 1) * 100:.0f}% > "
-                f"{threshold * 100:.0f}% threshold)")
-    return failures
+    hbm_f, wall_f, wall_paths = _compare(collect(budget)[1], committed,
+                                         threshold)
+    if wall_f:
+        _, wall_f2, wall_paths2 = _compare(collect(budget)[1], committed,
+                                           threshold)
+        reproduced = wall_paths & wall_paths2
+        wall_f = ([f for f in wall_f
+                   if any(f.startswith(p + ":") for p in reproduced)]
+                  + [f for f in wall_f2
+                     if any(f.startswith(p + ":") for p in reproduced)])
+    return hbm_f + wall_f
 
 
 if __name__ == "__main__":

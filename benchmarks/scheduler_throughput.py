@@ -228,6 +228,70 @@ def run(budget: str = "full"):
     return rows
 
 
+def check(budget: str = "full", threshold: float = 0.25):
+    """Compare a fresh replay against the committed BENCH_scheduler.json.
+
+    Returns failure strings (empty = pass). The fresh run replays the
+    COMMITTED configuration — same trace seed, request count, S menu,
+    slot count, eps model size, and (crucially) the committed Poisson
+    rate, so the arrival trace is identical and the comparison is
+    apples-to-apples. Two machine-robust gates:
+
+      * throughput, machine-independent: continuous samples/s RELATIVE to
+        the same run's lockstep samples/s must not fall more than
+        ``threshold`` below the committed ratio (a slower machine scales
+        both paths together and cancels; a scheduler regression does not);
+      * efficiency: continuous net evals (ticks) PER COMPLETED SAMPLE must
+        not grow more than ``threshold`` over the committed figure. Tick
+        counts are admission-timing dependent (service time is measured
+        wall clock), hence the slack rather than an exact-count gate.
+
+    A failing replay is retried ONCE and only reproduced failures fail
+    the gate — the replay interleaving is wall-clock sensitive, so a
+    transiently loaded machine must not flag a phantom regression.
+
+    ``budget`` is accepted for harness symmetry but ignored — a smaller
+    replay would not be comparable to the committed full trace.
+    """
+    del budget
+    path = os.path.join(ROOT, "BENCH_scheduler.json")
+    with open(path) as f:
+        committed = json.load(f)
+
+    def _replay():
+        _, lock, cont, _ = run_trace(
+            n_requests=committed["n_requests"],
+            s_menu=tuple(committed["s_menu"]),
+            slots=committed["slots"],
+            dim=committed["state_dim"], hidden=committed["eps_hidden"],
+            rate_per_s=committed["poisson_rate_per_s"])
+        failures = []
+        ratio_new = cont["samples_per_s"] / max(lock["samples_per_s"], 1e-9)
+        ratio_old = (committed["continuous"]["samples_per_s"]
+                     / committed["lockstep"]["samples_per_s"])
+        if ratio_new < ratio_old * (1.0 - threshold):
+            failures.append(
+                f"continuous/lockstep samples/s ratio regressed "
+                f"{ratio_old:.2f} -> {ratio_new:.2f} "
+                f"(-{(1 - ratio_new / ratio_old) * 100:.0f}% > "
+                f"{threshold * 100:.0f}% threshold)")
+        epc_new = cont["net_evals"] / max(cont["completed"], 1)
+        epc_old = (committed["continuous"]["net_evals"]
+                   / committed["continuous"]["completed"])
+        if epc_new > epc_old * (1.0 + threshold):
+            failures.append(
+                f"continuous net evals per completed sample grew "
+                f"{epc_old:.2f} -> {epc_new:.2f} "
+                f"(+{(epc_new / epc_old - 1) * 100:.0f}% > "
+                f"{threshold * 100:.0f}% threshold)")
+        return failures
+
+    failures = _replay()
+    if failures:
+        failures = _replay()   # only a reproduced regression fails
+    return failures
+
+
 def smoke() -> int:
     """Tiny trace for scripts/tier1.sh: both paths run, outputs sane."""
     trace, lock, cont, _ = run_trace(n_requests=10, s_menu=(3, 5, 8),

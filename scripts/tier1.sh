@@ -17,3 +17,7 @@ python examples/quickstart.py --smoke
 # BENCH_sampler.json — fails on any modeled-HBM growth or >25% wall-clock
 # growth relative to the same run's jnp reference (machine-independent)
 python -m benchmarks.run --suite sampler --check --budget quick
+# serving regression gate: replay the committed scheduler trace — fails on
+# >25% drop of the continuous/lockstep samples/s ratio or >25% growth of
+# continuous net evals per completed sample (ISSUE 4 satellite)
+python -m benchmarks.run --suite scheduler --check

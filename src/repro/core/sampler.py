@@ -265,7 +265,8 @@ def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
            step_impl: StepImpl = _jnp_step,
            return_trajectory: bool = False,
            tile_resident: bool = False,
-           interpret: Optional[bool] = None) -> jnp.ndarray:
+           interpret: Optional[bool] = None,
+           backend: Optional[str] = None) -> jnp.ndarray:
     """Run the generalized generative process from x_T to x_0.
 
     A thin adapter over ``repro.sampling.SamplerPlan``: builds the plan for
@@ -292,7 +293,12 @@ def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
       tile_resident: run the scan in the Pallas tile layout end-to-end
         (kernels/sampler_step) — the production hot path.
       interpret: Pallas interpret mode; None (default) resolves to
-        "everywhere except a real TPU". Only used when tile_resident.
+        "everywhere except a real TPU". Only used on kernel backends.
+      backend: explicit SamplerPlan backend name
+        ('jnp' | 'tile_resident' | 'rows' | 'mega'); overrides the
+        ``tile_resident`` flag when given. 'mega' fuses the eps trunk into
+        the step kernel for mega-eligible models and falls back to
+        'tile_resident' otherwise.
     """
     stochastic = cfg.eta > 0.0 or cfg.sigma_hat
     if stochastic and rng is None:
@@ -306,8 +312,9 @@ def sample(schedule: NoiseSchedule, eps_fn: EpsFn, x_T: jnp.ndarray,
         return _legacy_step_impl_sample(schedule, eps_fn, x_T, cfg, rng,
                                         step_impl, return_trajectory)
     plan = cfg.to_plan(schedule)
-    return plan.run(eps_fn, x_T, rng,
-                    backend="tile_resident" if tile_resident else "jnp",
+    if backend is None:
+        backend = "tile_resident" if tile_resident else "jnp"
+    return plan.run(eps_fn, x_T, rng, backend=backend,
                     return_trajectory=return_trajectory,
                     interpret=interpret)
 

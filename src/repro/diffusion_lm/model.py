@@ -162,6 +162,13 @@ def make_tile_eps_fn(params: Params, cfg: DiffusionLMConfig, batch: int,
 
     ``t`` may be a scalar (the tile-resident scan) or a (batch,) vector
     (the scheduler: every slot at its own timestep).
+
+    Dense-family trunks additionally get megakernel metadata (ISSUE 4):
+    ``eps_fn.mega_spec`` carries the eps-path weights + static geometry so
+    the 'mega' SamplerPlan backend (and the scheduler's fused tick) can
+    run the WHOLE step — trunk included — inside one Pallas launch, and
+    ``eps_fn.mega_vmem_bytes`` is the modeled VMEM footprint the
+    eligibility rule checks against ``megastep.MEGA_VMEM_BUDGET``.
     """
     from repro.kernels.sampler_step.kernel import SUBLANE, TILE_C
 
@@ -181,6 +188,17 @@ def make_tile_eps_fn(params: Params, cfg: DiffusionLMConfig, batch: int,
 
     eps_fn.tile_aware = True        # tile-resident scan (core/sampler)
     eps_fn.slot_tile_aware = True   # scheduler slot layout (serving)
+    if cfg.arch.family in ("dense", "vlm", "audio"):
+        # the dense transformer trunk is the megakernel-capable family;
+        # only the eps-path weights ride along (embed/rounding stay out)
+        from repro.kernels.megastep import MegaSpec
+        spec = MegaSpec(
+            params={k: params[k] for k in
+                    ("w_in", "time_w1", "time_w2", "layers", "out_norm",
+                     "w_out")},
+            cfg=cfg, batch=batch, seq_len=seq_len)
+        eps_fn.mega_spec = spec
+        eps_fn.mega_vmem_bytes = spec.vmem_bytes()
     return eps_fn
 
 
@@ -225,6 +243,10 @@ def generate(params: Params, cfg: DiffusionLMConfig, schedule: NoiseSchedule,
     ``tile_resident=True`` runs the scan in the Pallas tile layout with the
     tile-aware eps model (conversion-free loop body) when the latent size
     aligns to the tile granule, falling back to the adapter path otherwise.
+    Mega-eligible trunks (dense family, VMEM-fitting — see
+    ``make_tile_eps_fn``) automatically upgrade to the fused 'mega'
+    backend; its own eligibility check falls back to the tile-resident
+    scan bit-identically for anything else (stochastic samplers included).
     """
     sampler = sampler or SamplerConfig(S=50, eta=0.0)
     k_init, k_samp = jax.random.split(rng)
@@ -235,7 +257,7 @@ def generate(params: Params, cfg: DiffusionLMConfig, schedule: NoiseSchedule,
         except ValueError:   # unaligned latent: adapter path still works
             eps_fn = make_eps_fn(params, cfg)
         x0 = sample(schedule, eps_fn, x_T, sampler, rng=k_samp,
-                    tile_resident=True)
+                    tile_resident=True, backend="mega")
     else:
         eps_fn = make_eps_fn(params, cfg)
         x0 = sample(schedule, eps_fn, x_T, sampler, rng=k_samp)

@@ -29,6 +29,20 @@ Kernel inventory
                    c_x0/c_dir/c_noise/sqrt_a/sqrt_1m_a and PRNG seed, the
                    step-multiplexed mode the continuous-batching scheduler
                    ticks with; optional x0-preview second output)
+  megastep         the MEGAKERNEL (ISSUE 4): the small-model eps trunk
+                   (diffusion-LM dense family — time conditioning,
+                   embedding, RMSNorm + GQA attention + SwiGLU layers,
+                   output head) AND the Eq. 12 update fused in one launch,
+                   weights/activations/state VMEM-resident. K consecutive
+                   plan steps fuse per launch (megastep_tiles — an S-step
+                   eta=0 trajectory is ceil(S/K) launches with zero state
+                   HBM traffic inside a chunk) plus a per-row flavor
+                   (megastep_rows) the continuous-batching scheduler ticks
+                   with. Eligibility/fallback rule in megastep/ops.py
+                   (MegaSpec, set by diffusion_lm.make_tile_eps_fn);
+                   attn_impl='exact' is bit-identical to the unfused
+                   tile-resident path, 'flash' inlines the
+                   flash_attention online-softmax body (fp32-tight)
 
 Tile-resident layout contract (sampler hot path)
 ------------------------------------------------
@@ -49,6 +63,8 @@ dropping the separate jax.random.normal pass.
 """
 from .ddim_step.ops import fused_ddim_step
 from .flash_attention.ops import gqa_flash, mha_flash
+from .megastep import (MEGA_VMEM_BUDGET, MegaSpec, megastep_rows,
+                       megastep_tiles)
 from .rmsnorm.ops import rms_norm as rms_norm_kernel
 from .sampler_step.ops import (derive_row_seeds, expand_slot_coefs,
                                from_slot_tile_layout, from_tile_layout,
@@ -56,8 +72,9 @@ from .sampler_step.ops import (derive_row_seeds, expand_slot_coefs,
                                sampler_step_tiles, slot_rows,
                                to_slot_tile_layout, to_tile_layout)
 
-__all__ = ["derive_row_seeds", "expand_slot_coefs", "from_slot_tile_layout",
+__all__ = ["MEGA_VMEM_BUDGET", "MegaSpec", "derive_row_seeds",
+           "expand_slot_coefs", "from_slot_tile_layout",
            "from_tile_layout", "fused_ddim_step", "fused_sampler_step",
-           "gqa_flash", "mha_flash", "rms_norm_kernel", "sampler_step_rows",
-           "sampler_step_tiles", "slot_rows", "to_slot_tile_layout",
-           "to_tile_layout"]
+           "gqa_flash", "megastep_rows", "megastep_tiles", "mha_flash",
+           "rms_norm_kernel", "sampler_step_rows", "sampler_step_tiles",
+           "slot_rows", "to_slot_tile_layout", "to_tile_layout"]

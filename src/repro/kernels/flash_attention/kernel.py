@@ -25,6 +25,58 @@ DEFAULT_BLOCK_K = 128
 _NEG = -1e30
 
 
+def online_softmax_step(q, k, v, m_prev, l_prev, acc_prev, *,
+                        q_start, k_start, causal: bool):
+    """One KV-block update of the streaming-softmax recurrence.
+
+    The numerical core of the flash kernel, factored out so other kernels
+    can inline it (kernels/megastep streams the eps-trunk attention through
+    it when the full score block would blow the VMEM budget). ``q`` arrives
+    pre-scaled; all operands float32. Returns (m, l, acc).
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if causal:
+        bq, bk = s.shape
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, _NEG)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_prev * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc
+
+
+def streaming_attention_body(q, k, v, *, scale: float, causal: bool = False,
+                             block_k: int = DEFAULT_BLOCK_K) -> jnp.ndarray:
+    """Whole-sequence attention as a pure function of VMEM-resident values.
+
+    Drives ``online_softmax_step`` over KV blocks functionally (no scratch
+    refs, no grid) so a host kernel — kernels/megastep — can inline the
+    flash recurrence for one (S, D) head without materializing the full
+    (S, S) score matrix. q/k/v: (S, D) float32 for ONE (batch, head).
+    NOTE: the streaming normalization ((p @ v) / l) is mathematically equal
+    but not bit-identical to plain softmax-then-matmul.
+    """
+    S = q.shape[0]
+    bk = min(block_k, S)
+    qs = q * scale
+    m = jnp.full((S, 1), _NEG, jnp.float32)
+    l = jnp.zeros((S, 1), jnp.float32)
+    acc = jnp.zeros(q.shape, jnp.float32)
+    for k0 in range(0, S, bk):          # ragged tail = one narrower block
+        k1 = min(k0 + bk, S)
+        m, l, acc = online_softmax_step(
+            qs, k[k0:k1], v[k0:k1], m, l, acc,
+            q_start=0, k_start=k0, causal=causal)
+    return acc / jnp.maximum(l, 1e-20)
+
+
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             causal: bool, block_q: int, block_k: int, scale: float):
     qi = pl.program_id(1)
@@ -41,26 +93,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     k_start = ki * block_k
 
     def _body():
-        q = q_ref[0].astype(jnp.float32) * scale       # (BQ, D)
-        k = k_ref[0].astype(jnp.float32)               # (BK, D)
-        v = v_ref[0].astype(jnp.float32)               # (BK, D)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        if causal:
-            rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                      (block_q, block_k), 0)
-            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                      (block_q, block_k), 1)
-            s = jnp.where(rows >= cols, s, _NEG)
-        m_prev = m_scr[...]                             # (BQ, 1)
-        m_cur = jnp.max(s, axis=-1, keepdims=True)
-        m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new)                          # (BQ, BK)
-        alpha = jnp.exp(m_prev - m_new)                 # (BQ, 1)
-        l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
-        acc = acc_scr[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        m_new, l_new, acc = online_softmax_step(
+            q_ref[0].astype(jnp.float32) * scale,
+            k_ref[0].astype(jnp.float32),
+            v_ref[0].astype(jnp.float32),
+            m_scr[...], l_scr[...], acc_scr[...],
+            q_start=q_start, k_start=k_start, causal=causal)
         m_scr[...] = m_new
         l_scr[...] = l_new
         acc_scr[...] = acc

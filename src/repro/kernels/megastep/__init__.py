@@ -1,0 +1,5 @@
+from .ops import (DEFAULT_K_FUSE, MEGA_VMEM_BUDGET, MegaSpec, eligible,
+                  megastep_rows, megastep_tiles)
+
+__all__ = ["DEFAULT_K_FUSE", "MEGA_VMEM_BUDGET", "MegaSpec", "eligible",
+           "megastep_rows", "megastep_tiles"]

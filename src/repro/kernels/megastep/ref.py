@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the megastep kernel (no pallas_call anywhere).
+
+Replays the fused K-step body as plain traced jax: the same eps trunk
+functions (they are pure) and a mirror of the sampler update arithmetic.
+The allclose/bit-equal test sweeps in tests/test_megastep.py pin the
+kernel against this.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as _k
+
+
+def _update_ref(x32, e32, c, clip):
+    """Mirror of sampler_step.kernel._update on a (5+,) coefficient row."""
+    c_x0, c_dir, sqrt_a_t, sqrt_1m_a_t = c[0], c[1], c[3], c[4]
+    if clip is not None:
+        x0 = (x32 - sqrt_1m_a_t * e32) / sqrt_a_t
+        x0 = jnp.clip(x0, -clip, clip)
+        eps_eff = (x32 - sqrt_a_t * x0) / sqrt_1m_a_t
+        return c_x0 * x0 + c_dir * eps_eff
+    a = c_x0 / sqrt_a_t
+    b = c_dir - a * sqrt_1m_a_t
+    return a * x32 + b * e32
+
+
+def megastep_ref(x2, spec, coefs, ts, *, clip=None):
+    """K fused lockstep steps over the (R, C) tile view."""
+    eps_fn = _k._eps_body(spec.attn_impl)
+    coefs = jnp.asarray(coefs, jnp.float32)
+    x = x2
+    for k in range(int(ts.shape[0])):
+        e2 = eps_fn(spec.params, spec.cfg, spec.batch, spec.seq_len, x,
+                    ts[k])
+        x = _update_ref(x.astype(jnp.float32), e2.astype(jnp.float32),
+                        coefs[k], clip).astype(x.dtype)
+    return x
+
+
+def megastep_rows_ref(x2, spec, row_coefs, slot_ts, *, clip=None):
+    """One fused per-row tick (the scheduler flavor)."""
+    eps_fn = _k._eps_body(spec.attn_impl)
+    e2 = eps_fn(spec.params, spec.cfg, spec.batch, spec.seq_len, x2,
+                slot_ts)
+    c = jnp.asarray(row_coefs, jnp.float32)
+    x32, e32 = x2.astype(jnp.float32), e2.astype(jnp.float32)
+    c_x0, c_dir = c[:, 0:1], c[:, 1:2]
+    sqrt_a_t, sqrt_1m_a_t = c[:, 3:4], c[:, 4:5]
+    if clip is not None:
+        x0 = (x32 - sqrt_1m_a_t * e32) / sqrt_a_t
+        x0 = jnp.clip(x0, -clip, clip)
+        e32 = (x32 - sqrt_a_t * x0) / sqrt_1m_a_t
+        out = c_x0 * x0 + c_dir * e32
+    else:
+        a = c_x0 / sqrt_a_t
+        b = c_dir - a * sqrt_1m_a_t
+        out = a * x32 + b * e32
+    return out.astype(x2.dtype)

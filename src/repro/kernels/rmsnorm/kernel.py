@@ -16,12 +16,23 @@ from jax.experimental import pallas as pl
 TILE_R = 256
 
 
-def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
-    x = x_ref[...]
+def rms_norm_body(x, scale, eps: float):
+    """The fused RMSNorm arithmetic, factored out of the kernel body.
+
+    Inlined as a sub-function by other kernels (kernels/megastep fuses it
+    into the eps-trunk megakernel). Bit-for-bit identical to
+    ``models.common.rms_norm`` — the megastep eps-equivalence contract
+    rests on that, so keep the float32 mean-square / rsqrt / scale op
+    sequence in lockstep with it.
+    """
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
     inv = jax.lax.rsqrt(ms + eps).astype(x.dtype)
-    o_ref[...] = (x * inv) * scale_ref[...]
+    return (x * inv) * scale
+
+
+def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    o_ref[...] = rms_norm_body(x_ref[...], scale_ref[...], eps)
 
 
 def rms_norm_2d(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-5,

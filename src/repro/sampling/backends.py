@@ -15,7 +15,21 @@ outputs on every backend:
                      the slot-tile layout — the exact step program the
                      continuous-batching scheduler multiplexes, so a
                      scheduled request replays a plan.run(backend='rows')
-                     trajectory bit-for-bit at eta=0.
+                     trajectory bit-for-bit at eta=0.  The per-step row
+                     coefficient/seed tables are PRE-STACKED outside the
+                     scan (ISSUE 4 satellite): the body consumes (R, 8)
+                     slices off the scanned xs instead of rebuilding the
+                     expand/tile/derive chain every step, which was pure
+                     dispatch overhead (0.277 ms/step vs 0.042 jnp at S=10
+                     in the PR 3 BENCH_sampler.json).
+  run_mega           the megakernel path (kernels/megastep): eps trunk AND
+                     Eq. 12 update fused in one Pallas launch, K plan
+                     steps per launch, weights/activations/state VMEM-
+                     resident.  Automatic eligibility: eps_fn must carry a
+                     mega_spec that fits the VMEM budget and the plan must
+                     be deterministic order-1 without trajectory capture —
+                     anything else falls back to run_tile_resident (same
+                     results, per-step eps round trip).
 
 Solver order k > 1 (Adams–Bashforth over the eps history, paper
 Discussion §7) threads an (order-1, ...) float32 history through the scan
@@ -159,19 +173,34 @@ def run_rows(plan, eps_fn, x_T, rng, return_trajectory,
     order, clip = plan.order, plan.x0.clip
     B, shape = x_T.shape[0], x_T.shape[1:]
     slot_aware = getattr(eps_fn, "slot_tile_aware", False)
-    # per-step PER-SLOT tick seeds (the scheduler's seed granularity),
-    # drawn outside the scan; derive_row_seeds inside the body is pure
-    # integer mixing, not a PRNG op
-    seeds = (jax.random.randint(rng, (plan.S, B), 0,
-                                np.iinfo(np.int32).max, dtype=jnp.int32)
-             if stochastic else None)
 
     x2, n = tile_ops.to_slot_tile_layout(x_T)
     rps = x2.shape[0] // B
 
+    # pre-stack the per-step row tables OUTSIDE the scan: the body then
+    # gathers one (R, COEF_COLS) slice / one (R,) seed row off the scanned
+    # xs instead of re-launching the tile/expand/derive op chain on every
+    # step (that rebuild was pure dispatch overhead — the 'rows' lockstep
+    # path cost 0.277 ms/step vs 0.042 for jnp at S=10 before this).
+    xs = _xs(plan)
+    cmat = jnp.stack([xs["c_x0"], xs["c_dir"], xs["c_noise"],
+                      xs["sqrt_a_t"], xs["sqrt_1m_a_t"]], axis=1)  # (S, 5)
+    cmat = jnp.pad(cmat, ((0, 0), (0, tile_ops.COEF_COLS - cmat.shape[1])))
+    row_coefs_all = jnp.repeat(
+        jnp.repeat(cmat[:, None, :], B, axis=1), rps, axis=1)   # (S, R, 8)
+    if stochastic:
+        # per-step PER-SLOT tick seeds (the scheduler's seed granularity),
+        # drawn and row-derived outside the scan
+        seeds = jax.random.randint(rng, (plan.S, B), 0,
+                                   np.iinfo(np.int32).max, dtype=jnp.int32)
+        row_seeds_all = jax.vmap(
+            lambda s: tile_ops.derive_row_seeds(s, rps))(seeds)   # (S, R)
+    else:
+        row_seeds_all = None
+
     def body(carry, per):
         x2, hist = carry
-        c, seed_b = per
+        c, row_coefs, row_seeds = per
         t = jnp.full((B,), c["t"], dtype=jnp.int32)
         if slot_aware:
             eps2 = eps_fn(x2, t)
@@ -181,19 +210,14 @@ def run_rows(plan, eps_fn, x_T, rng, return_trajectory,
         if order > 1:
             eps2, hist = mix_history(eps2.astype(jnp.float32), hist,
                                       c["solver_w"], order)
-        cmat = jnp.tile(jnp.stack([c["c_x0"], c["c_dir"], c["c_noise"],
-                                   c["sqrt_a_t"], c["sqrt_1m_a_t"]])[None],
-                        (B, 1))
-        row_coefs = tile_ops.expand_slot_coefs(cmat, rps)
-        row_seeds = (tile_ops.derive_row_seeds(seed_b, rps)
-                     if stochastic else None)
         out = tile_ops.sampler_step_rows(
             x2, eps2, row_coefs, row_seeds, clip=clip,
             stochastic=stochastic, hw_prng=hw_prng, interpret=interpret)
         return (out, hist), (out if return_trajectory else None)
 
     (x2_0, _), traj2 = jax.lax.scan(
-        body, (x2, _hist0(order, x2.shape)), (_xs(plan), seeds))
+        body, (x2, _hist0(order, x2.shape)),
+        (xs, row_coefs_all, row_seeds_all))
     batch_shape = (B,) + tuple(shape)
     x0 = tile_ops.from_slot_tile_layout(x2_0, n, batch_shape)
     if return_trajectory:
@@ -202,6 +226,52 @@ def run_rows(plan, eps_fn, x_T, rng, return_trajectory,
             traj2)
         return x0, jnp.concatenate([x_T[None], traj], axis=0)
     return x0
+
+
+# ------------------------------------------------------------------ mega
+def run_mega(plan, eps_fn, x_T, rng, return_trajectory,
+             interpret: Optional[bool], k_fuse: Optional[int] = None):
+    """The megakernel path: trunk + update fused, K plan steps per launch.
+
+    Eligibility is AUTOMATIC: a deterministic order-1 plan over an eps
+    model carrying a VMEM-fitting ``mega_spec`` runs fused; everything
+    else silently falls back to the tile-resident scan (identical
+    results — the fallback is the same arithmetic, unfused).
+
+    The chunk loop is UNROLLED so an S-step trajectory lowers to exactly
+    ceil(S / K) pallas_call equations with the (R, C) state carried
+    between them — no per-step state pad/reshape anywhere (jaxpr-asserted
+    in tests/test_megastep.py). The last chunk takes the S % K remainder
+    as its own smaller K (no identity-row padding, keeping every step
+    bit-exact).
+    """
+    from repro.kernels import megastep as mega_ops
+    from repro.kernels.sampler_step import ops as tile_ops
+
+    spec = getattr(eps_fn, "mega_spec", None)
+    ok, _why = mega_ops.eligible(spec, x_T)
+    if (not ok or plan.stochastic or plan.order > 1 or return_trajectory):
+        return run_tile_resident(plan, eps_fn, x_T, rng, return_trajectory,
+                                 interpret)
+    if interpret is None:
+        interpret = tile_ops.default_interpret()
+    clip = plan.x0.clip
+    tab = plan.steps()                       # sampling order, numpy
+    S = plan.S
+    K = mega_ops.DEFAULT_K_FUSE if k_fuse is None else int(k_fuse)
+    K = max(1, min(K, S))
+    coefs = np.stack(
+        [tab["c_x0"], tab["c_dir"], tab["c_noise"], tab["sqrt_a_t"],
+         tab["sqrt_1m_a_t"]], axis=1).astype(np.float32)     # (S, 5)
+    ts = np.asarray(tab["t"], np.int32)                      # (S,)
+
+    x2, n = tile_ops.to_tile_layout(x_T)     # conversion #1 (entry)
+    for c0 in range(0, S, K):                # ceil(S/K) fused launches
+        sl = slice(c0, min(c0 + K, S))
+        x2 = mega_ops.megastep_tiles(
+            x2, spec, jnp.asarray(coefs[sl]), jnp.asarray(ts[sl]),
+            clip=clip, interpret=interpret)
+    return tile_ops.from_tile_layout(x2, n, x_T.shape)  # conversion #2
 
 
 # ---------------------------------------------------------------- encode

@@ -23,6 +23,11 @@ Every execution surface consumes this one table:
       'rows'           the per-row slot-tick kernel driven in lockstep —
                        the exact program the continuous-batching scheduler
                        multiplexes across requests
+      'mega'           the megakernel (kernels/megastep): eps trunk + the
+                       Eq. 12 update fused in ONE Pallas launch, K steps
+                       per launch, weights/state VMEM-resident; falls back
+                       to 'tile_resident' when the model/plan is not
+                       mega-eligible
   plan.encode(eps_fn, x0)                    the ODE inversion direction
   plan.steps()                               numpy rows for the scheduler
   plan.coefficients()                        legacy trajectory-order dict
@@ -48,7 +53,7 @@ from repro.core.solver import MAX_ORDER, warmup_weights
 
 from .specs import SigmaSpec, TauSpec, X0Policy
 
-_BACKENDS = ("jnp", "tile_resident", "rows")
+_BACKENDS = ("jnp", "tile_resident", "rows", "mega")
 
 
 def _schedule_digest(schedule: NoiseSchedule) -> bytes:
@@ -212,21 +217,28 @@ class SamplerPlan:
             rng: Optional[jax.Array] = None, *,
             backend: str = "jnp",
             return_trajectory: bool = False,
-            interpret: Optional[bool] = None) -> jnp.ndarray:
+            interpret: Optional[bool] = None,
+            k_fuse: Optional[int] = None) -> jnp.ndarray:
         """Execute the plan from x_T to x_0 on the chosen backend.
 
         Args:
           eps_fn: eps_theta(x_t, t), t an int32 (batch,) vector.  On the
             'tile_resident' backend a model may declare
             ``eps_fn.tile_aware = True`` (native (R, C) view); on 'rows',
-            ``eps_fn.slot_tile_aware = True`` (native slot-tile view).
+            ``eps_fn.slot_tile_aware = True`` (native slot-tile view); on
+            'mega' it must carry ``eps_fn.mega_spec`` (set by
+            diffusion_lm.make_tile_eps_fn for dense trunks) or the run
+            falls back to 'tile_resident'.
           x_T: (batch, *shape) initial latent — N(0, I) for generation, or
             an encoding from :meth:`encode` for reconstruction.
           rng: PRNG key; required iff the plan is stochastic.
-          backend: 'jnp' | 'tile_resident' | 'rows'.
+          backend: 'jnp' | 'tile_resident' | 'rows' | 'mega'.
           return_trajectory: also return the (S+1, ...) iterate stack.
           interpret: Pallas interpret mode for the kernel backends; None
             resolves to "everywhere except a real TPU".
+          k_fuse: 'mega' only — how many consecutive steps one megakernel
+            launch fuses (default kernels.megastep.DEFAULT_K_FUSE); the
+            trajectory becomes ceil(S / k_fuse) launches.
         """
         from . import backends
         if backend not in _BACKENDS:
@@ -235,13 +247,19 @@ class SamplerPlan:
         if self.stochastic and rng is None:
             raise ValueError("stochastic plan needs rng (sigma > 0 "
                              "somewhere in the schedule)")
+        if k_fuse is not None and backend != "mega":
+            raise ValueError("k_fuse is a 'mega' backend knob")
         # deterministic plans never touch the PRNG: rng stays None and the
         # traced program contains no random ops at all (jaxpr-asserted)
         fn = {"jnp": backends.run_jnp,
               "tile_resident": backends.run_tile_resident,
-              "rows": backends.run_rows}[backend]
+              "rows": backends.run_rows,
+              "mega": backends.run_mega}[backend]
         if backend == "jnp":
             return fn(self, eps_fn, x_T, rng, return_trajectory)
+        if backend == "mega":
+            return fn(self, eps_fn, x_T, rng, return_trajectory, interpret,
+                      k_fuse)
         return fn(self, eps_fn, x_T, rng, return_trajectory, interpret)
 
     def encode(self, eps_fn, x_0: jnp.ndarray, *,

@@ -108,6 +108,13 @@ class ContinuousBatchingEngine:
       max_queue: admission-queue depth bound (None = unbounded).
       donate: donate the slot state into the tick (default: on TPU/GPU).
       interpret: Pallas interpret mode; None = compiled on TPU only.
+      use_mega: run the MEGAKERNEL tick (kernels/megastep): the eps trunk
+        and the per-row Eq. 12 update fuse into ONE Pallas launch per tick,
+        trunk weights VMEM-resident. None (default) auto-detects: the tick
+        fuses when the eps model carries a VMEM-fitting ``mega_spec`` bound
+        to this engine's exact (slots, *sample_shape) geometry and the
+        engine is deterministic, history-free, and preview-free; True
+        raises if any of those fail, False forces the unfused tick.
     """
 
     def __init__(self, schedule: NoiseSchedule, eps_fn: Callable,
@@ -117,7 +124,8 @@ class ContinuousBatchingEngine:
                  max_order: int = 1,
                  max_queue: Optional[int] = None,
                  donate: Optional[bool] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 use_mega: Optional[bool] = None):
         from repro.kernels.sampler_step import ops as tile_ops
 
         if not 1 <= max_order <= MAX_ORDER:
@@ -140,6 +148,7 @@ class ContinuousBatchingEngine:
             donate = jax.default_backend() in ("tpu", "gpu")
         self.donate = donate
 
+        self.use_mega = self._resolve_mega(use_mega)
         self._n = int(np.prod(self.shape))
         self._rps = tile_ops.slot_rows(self.shape)
         self._tile_c = tile_ops.TILE_C
@@ -176,8 +185,53 @@ class ContinuousBatchingEngine:
         self._xT_fn = self._make_xT()
 
     # ------------------------------------------------------- jitted pieces
+    def _resolve_mega(self, use_mega: Optional[bool]) -> bool:
+        """Megakernel-tick eligibility (the 'mega' backend rule + the
+        engine-specific half).
+
+        The model/geometry/VMEM checks are ``megastep.eligible`` — the
+        single source shared with ``plan.run(backend='mega')`` — applied
+        to this engine's (slots, *sample_shape) state signature; the tick
+        additionally needs to be deterministic, history-free, and
+        preview-free (those are plan-level conditions on the backend
+        side).
+        """
+        if use_mega is False:
+            return False
+        from repro.kernels import megastep as mega_ops
+
+        spec = getattr(self.eps_fn, "mega_spec", None)
+        if self.stochastic or self.preview or self.max_order > 1:
+            ok, why = False, ("megakernel tick is deterministic/order-1/"
+                              "preview-free only")
+        else:
+            ok, why = mega_ops.eligible(
+                spec, jax.ShapeDtypeStruct((self.slots,) + self.shape,
+                                           self.dtype))
+        if ok:
+            return True
+        if use_mega:                       # explicitly requested: loud
+            raise ValueError(f"use_mega=True but {why}")
+        return False
+
     def _make_tick(self):
         shape = self.shape
+
+        if self.use_mega:
+            from repro.kernels import megastep as mega_ops
+            from repro.kernels.sampler_step import ops as tile_ops
+            spec, rps = self.eps_fn.mega_spec, self._rps
+
+            def tick(x2, states):
+                self._traces += 1   # host side effect: fires once per trace
+                row_coefs = tile_ops.expand_slot_coefs(
+                    states.coef_matrix(), rps)
+                return mega_ops.megastep_rows(
+                    x2, spec, row_coefs, states.t, clip=self.clip_x0,
+                    interpret=self.interpret)
+
+            kw = dict(donate_argnums=(0,)) if self.donate else {}
+            return jax.jit(tick, **kw)
 
         if self.max_order == 1:
             def tick(x2, states):
@@ -439,6 +493,7 @@ class ContinuousBatchingEngine:
             "stochastic": self.stochastic,
             "preview": self.preview,
             "max_order": self.max_order,
+            "mega_tick": self.use_mega,
             "dtype": jnp.dtype(self.dtype).name,
             "donated": self.donate,
         }

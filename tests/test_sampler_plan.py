@@ -330,6 +330,69 @@ def test_fused_ddim_step_shim_warns_and_routes_to_sampler_step():
     np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
 
 
+def _warn_count(warnlist):
+    return sum(1 for w in warnlist
+               if issubclass(w.category, DeprecationWarning))
+
+
+@pytest.mark.parametrize("wrapper", ["ddim_sample", "ddpm_sample",
+                                     "multistep_sample", "fused_ddim_step"])
+def test_deprecation_shims_warn_exactly_once(wrapper):
+    """ISSUE 4 satellite — the warning CONTRACT, not just equivalence:
+    each deprecated entry emits exactly ONE DeprecationWarning per call
+    (no duplicate warns from nested shims)."""
+    import warnings as _warnings
+    xT = jax.random.normal(jax.random.PRNGKey(0), (4, 6))
+    with _warnings.catch_warnings(record=True) as rec:
+        _warnings.simplefilter("always")
+        if wrapper == "ddim_sample":
+            from repro.core import ddim_sample
+            ddim_sample(SCH, EPS, xT, S=4)
+        elif wrapper == "ddpm_sample":
+            from repro.core import ddpm_sample
+            ddpm_sample(SCH, EPS, xT, jax.random.PRNGKey(1), S=4)
+        elif wrapper == "multistep_sample":
+            from repro.core import multistep_sample
+            multistep_sample(SCH, EPS, xT, S=4, order=2)
+        else:
+            from repro.kernels import fused_ddim_step
+            e = jax.random.normal(jax.random.PRNGKey(1), (4, 6))
+            fused_ddim_step(xT, e, None, 0.98, 0.15, 0.0, 0.97, 0.24)
+    assert _warn_count(rec) == 1, [str(w.message) for w in rec]
+
+
+@pytest.mark.parametrize("wrapper", ["ddim_sample", "ddpm_sample",
+                                     "multistep_sample"])
+def test_deprecation_shims_route_through_a_plan(wrapper, monkeypatch):
+    """The sampler wrappers must execute via SamplerPlan.run — the one
+    compiled coefficient program — not a private legacy scan."""
+    import warnings as _warnings
+    calls = []
+    real_run = SamplerPlan.run
+
+    def spy(self, *a, **kw):
+        calls.append(self)
+        return real_run(self, *a, **kw)
+
+    monkeypatch.setattr(SamplerPlan, "run", spy)
+    xT = jax.random.normal(jax.random.PRNGKey(0), (4, 6))
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("ignore", DeprecationWarning)
+        if wrapper == "ddim_sample":
+            from repro.core import ddim_sample
+            ddim_sample(SCH, EPS, xT, S=4)
+            want = SamplerPlan.build(SCH, tau=4)
+        elif wrapper == "ddpm_sample":
+            from repro.core import ddpm_sample
+            ddpm_sample(SCH, EPS, xT, jax.random.PRNGKey(1), S=4)
+            want = SamplerPlan.build(SCH, tau=4, sigma=1.0)
+        else:
+            from repro.core import multistep_sample
+            multistep_sample(SCH, EPS, xT, S=4, order=2)
+            want = SamplerPlan.build(SCH, tau=4, order=2)
+    assert len(calls) == 1 and calls[0] == want
+
+
 def test_sample_adapter_matches_plan_bitwise():
     """core.sample is a thin adapter: identical outputs to the plan."""
     cfg = SamplerConfig(S=10, eta=0.5, tau_kind="quadratic", clip_x0=2.0)
