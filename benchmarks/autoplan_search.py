@@ -1,0 +1,306 @@
+"""Trajectory-autotuner benchmark: search wall-clock + frontier quality.
+
+Runs the full `repro.autoplan` pipeline on the committed toy checkpoint
+(the deterministic 2D-GMM MLP from benchmarks/_common.get_gmm_model):
+
+  1. build the per-transition objective table (ELBO terms + step-doubling
+     quality proxy) on a quadratic candidate grid;
+  2. exact DP -> the optimal explicit tau for every budget in the ladder;
+  3. coordinate-descent refinement (eta schedule + AB order) scored by
+     full rollouts through the shared PlanExecutor;
+  4. score DP and refined plans vs the paper's uniform/quadratic tau at
+     EQUAL NFE with the offline FID-stand-in (kernel MMD^2 vs held-out
+     ground-truth samples — see eval.metrics);
+  5. persist the searched frontier as a PlanBank artifact
+     (results/cache/planbank_gmm.json) and the metrics as
+     BENCH_autoplan.json.
+
+`check()` is the tier-1 gate: it re-validates the committed
+BENCH_autoplan.json claim (the DP S=10 plan beats uniform AND quadratic
+at equal NFE) and re-runs a smoke-scale search end-to-end — DP optimality
+vs grid-restricted baselines, frontier monotonicity, bank save/load
+round-trip, plan-cache reuse — in CI-scale time on CPU.
+
+  PYTHONPATH=src python -m benchmarks.run --suite autoplan
+  PYTHONPATH=src python -m benchmarks.run --suite autoplan --check
+  PYTHONPATH=src python -m benchmarks.autoplan_search --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._common import CACHE, ROOT, Row
+
+BANK_PATH = os.path.join(CACHE, "planbank_gmm.json")
+
+
+def _model():
+    from benchmarks._common import get_gmm_model
+    return get_gmm_model(1500)
+
+
+def _scorer(eps_fn, data, n: int):
+    """Rollout scorer: MMD^2 against held-out ground truth, shared x_T.
+
+    Fixed seeds everywhere, so scores are reproducible and candidate
+    comparisons are apples-to-apples (deterministic plans literally rerun
+    the same program on the same x_T).
+    """
+    from repro.autoplan import PlanExecutor
+    from repro.eval import mmd_rbf
+
+    ex = PlanExecutor(eps_fn)
+    ref = jnp.asarray(np.asarray(data.sample(jax.random.PRNGKey(99), n)))
+    xT = jax.random.normal(jax.random.PRNGKey(7), (n, 2))
+    rng = jax.random.PRNGKey(3)
+
+    def score(plan):
+        out = ex.run(plan, xT, rng if plan.stochastic else None)
+        return float(mmd_rbf(out, ref))
+
+    return score, ex
+
+
+def run_search(budgets, grid_size, batch, n_score, per_step_eta_max,
+               quality_weight=1.0, refine=True):
+    """The full pipeline; returns (bank, per-budget records, timings)."""
+    from repro.autoplan import (ObjectiveConfig, PlanBank, RefineConfig,
+                                build_objective, dp_search, refine_plan)
+    from repro.sampling import SamplerPlan, TauSpec
+
+    schedule, eps_fn, data = _model()
+    score, ex = _scorer(eps_fn, data, n_score)
+    x0b = data.sample(jax.random.PRNGKey(11), batch)
+
+    t0 = time.perf_counter()
+    ocfg = ObjectiveConfig(grid_size=grid_size, grid_kind="quadratic",
+                           batch=batch, quality_weight=quality_weight)
+    table = build_objective(schedule, eps_fn, x0b, ocfg)
+    t_obj = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    dp = dp_search(table, budgets)
+    t_dp = time.perf_counter() - t0
+
+    bank = PlanBank(schedule, search_config={
+        "budgets": list(budgets), "grid_size": grid_size,
+        "grid_kind": "quadratic", "quality_weight": quality_weight,
+        "batch": batch, "n_score": n_score, "model": "gmm_mlp_1500"})
+    records = []
+    for S in budgets:
+        r = dp[S]
+        t0 = time.perf_counter()
+        dp_plan = SamplerPlan.build(schedule,
+                                    tau=TauSpec.explicit(r.taus,
+                                                         T=schedule.T))
+        dp_mmd = score(dp_plan)
+        uni = score(SamplerPlan.build(schedule, tau=S))
+        quad = score(SamplerPlan.build(schedule, tau=TauSpec.quadratic(S)))
+        plan, refined_mmd = dp_plan, dp_mmd
+        trials = 1
+        if refine:
+            # per-step eta sweeps are S x |grid| rollouts — worth it for
+            # short trajectories, scalar-eta + order only for long ones
+            rcfg = RefineConfig(per_step_eta=S <= per_step_eta_max)
+            plan, refined_mmd, trials = refine_plan(schedule, r.taus, score,
+                                                    rcfg,
+                                                    init_score=dp_mmd)
+        wall = time.perf_counter() - t0
+        bank.add_plan(plan, objective=r.objective, score=refined_mmd,
+                      baselines={"uniform_mmd": uni, "quadratic_mmd": quad,
+                                 "dp_mmd": dp_mmd},
+                      wall_s=wall,
+                      meta={"dp_taus": list(r.taus),
+                            "refine_trials": trials})
+        records.append(dict(
+            S=S, taus=list(r.taus), objective=r.objective, dp_mmd=dp_mmd,
+            refined_mmd=refined_mmd, uniform_mmd=uni, quadratic_mmd=quad,
+            refined_order=plan.order, refined_sigma=plan.sigma.kind,
+            refine_trials=trials, wall_s=wall))
+    timings = dict(objective_s=t_obj, dp_s=t_dp,
+                   executor_traces=ex.traces, executor_calls=ex.calls)
+    return bank, records, timings
+
+
+def run(budget: str = "full"):
+    if budget == "quick":
+        budgets, grid, batch, n = (5, 10), 48, 192, 1024
+        per_step_max = 10
+    else:
+        budgets, grid, batch, n = (5, 10, 20, 50), 64, 256, 2048
+        per_step_max = 10
+    t0 = time.perf_counter()
+    bank, records, timings = run_search(budgets, grid, batch, n,
+                                        per_step_max)
+    wall = time.perf_counter() - t0
+    bank.save(BANK_PATH)
+    payload = {
+        "bench": "autoplan_search",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "model": "gmm_mlp_1500 (committed toy checkpoint recipe)",
+        "grid_size": grid, "grid_kind": "quadratic",
+        "score_samples": n, "objective_batch": batch,
+        "search_wall_s": wall,
+        "note": ("DP over the decomposable ELBO+defect objective "
+                 "(Watson et al. 2021) + coordinate-descent eta/order "
+                 "refinement; *_mmd are kernel MMD^2 vs 2048 held-out "
+                 "ground-truth samples at EQUAL NFE (lower is better; "
+                 "the unbiased estimator may go negative at the noise "
+                 "floor). plan bank -> results/cache/planbank_gmm.json"),
+        **timings,
+        "budgets": records,
+    }
+    with open(os.path.join(ROOT, "BENCH_autoplan.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    rows = []
+    for r in records:
+        rows.append(Row(
+            f"autoplan_search/S={r['S']}",
+            r["wall_s"] * 1e6,
+            f"dp_mmd={r['dp_mmd']:.5f};refined_mmd={r['refined_mmd']:.5f};"
+            f"uniform_mmd={r['uniform_mmd']:.5f};"
+            f"quadratic_mmd={r['quadratic_mmd']:.5f}"))
+    rows.append(Row("autoplan_search/total", wall * 1e6,
+                    f"executor_traces={timings['executor_traces']};"
+                    f"executor_calls={timings['executor_calls']}"))
+    return rows
+
+
+def check(budget: str = "full"):
+    """Tier-1 gate. Returns failure strings (empty = pass).
+
+    Two halves:
+      * the COMMITTED BENCH_autoplan.json must still claim the acceptance
+        result — at every recorded budget the searched plan (DP or
+        refined) at equal NFE beats uniform AND quadratic (strictly at
+        S <= 20; within a noise-floor tolerance above that, where every
+        schedule saturates the unbiased-MMD estimator and the ordering
+        is not a stable claim), and at S=10 the raw DP plan alone beats
+        both;
+      * a fresh SMOKE-SCALE search must hold the subsystem's invariants:
+        DP path cost <= any grid-restricted baseline (exact optimality),
+        frontier objective monotone in budget, bank save/load round-trip
+        identity, and plan-cache reuse (scoring all candidates of one
+        budget compiles the executor once).
+
+    ``budget`` is accepted for harness symmetry but ignored — the smoke
+    scale is fixed so the gate's cost is CI-bounded.
+    """
+    del budget
+    failures = []
+    path = os.path.join(ROOT, "BENCH_autoplan.json")
+    if not os.path.exists(path):
+        return [f"missing {path} (run benchmarks.run --suite autoplan "
+                "--record)"]
+    with open(path) as f:
+        committed = json.load(f)
+    # strict beat where the compute-quality win IS the claim (few-step);
+    # at large S every schedule sits at the MMD estimator's noise floor
+    # and a ~1e-4 ordering would flip across backends/hardware on a
+    # --record re-baseline, failing the gate with no code change
+    NOISE_TOL = 2e-4
+    for r in committed["budgets"]:
+        searched = min(r["dp_mmd"], r["refined_mmd"])
+        tol = 0.0 if r["S"] <= 20 else NOISE_TOL
+        for base in ("uniform_mmd", "quadratic_mmd"):
+            if searched >= r[base] + tol:
+                failures.append(
+                    f"committed S={r['S']}: searched mmd {searched:.5f} "
+                    f"does not beat {base} {r[base]:.5f}"
+                    + (f" (tol {tol:g})" if tol else ""))
+        if r["S"] == 10 and (r["dp_mmd"] >= r["uniform_mmd"]
+                             or r["dp_mmd"] >= r["quadratic_mmd"]):
+            failures.append(
+                f"committed S=10: raw DP mmd {r['dp_mmd']:.5f} must beat "
+                f"uniform {r['uniform_mmd']:.5f} and quadratic "
+                f"{r['quadratic_mmd']:.5f} (acceptance claim)")
+
+    failures += smoke_invariants()
+    return failures
+
+
+def smoke_invariants():
+    """Fresh smoke-scale search; returns failure strings."""
+    from repro.autoplan import (ObjectiveConfig, PlanBank, build_objective,
+                                dp_search)
+    from repro.core.schedules import make_tau
+    from repro.sampling import SamplerPlan, TauSpec
+
+    failures = []
+    budgets = (4, 8)
+    schedule, eps_fn, data = _model()
+    score, ex = _scorer(eps_fn, data, 512)
+    x0b = data.sample(jax.random.PRNGKey(11), 96)
+    table = build_objective(
+        schedule, eps_fn, x0b,
+        ObjectiveConfig(grid_size=20, grid_kind="quadratic", batch=96))
+    dp = dp_search(table, budgets)
+
+    # DP exact optimality: no worse than ANY grid-restricted baseline
+    grid = table.grid
+    for S in budgets:
+        for kind in ("linear", "quadratic"):
+            # snap the paper spacing onto the candidate grid
+            want = make_tau(schedule.T, S, kind)
+            snapped = sorted(set(
+                int(grid[np.abs(grid - t).argmin()]) for t in want))
+            base_cost = table.path_cost(snapped)
+            if dp[S].objective > base_cost + 1e-9:
+                failures.append(
+                    f"smoke: DP S={S} cost {dp[S].objective:.4f} > "
+                    f"grid-{kind} baseline {base_cost:.4f} (optimality "
+                    "violated)")
+    if dp[8].objective > dp[4].objective + 1e-9:
+        failures.append("smoke: frontier objective not monotone in budget")
+
+    # bank round-trip + plan-cache reuse while scoring candidates
+    bank = PlanBank(schedule)
+    traces0 = ex.traces
+    for S in budgets:
+        plan = SamplerPlan.build(schedule,
+                                 tau=TauSpec.explicit(dp[S].taus))
+        mmd = score(plan)
+        mmd_u = score(SamplerPlan.build(schedule, tau=S))
+        bank.add_plan(plan, objective=dp[S].objective, score=mmd,
+                      baselines={"uniform_mmd": mmd_u})
+    if ex.traces - traces0 > len(budgets):
+        failures.append(
+            f"smoke: executor compiled {ex.traces - traces0} programs for "
+            f"{len(budgets)} budgets — plan-cache reuse broken")
+    tmp = os.path.join(CACHE, "planbank_smoke.json")
+    bank.save(tmp)
+    loaded = PlanBank.load(tmp, schedule)
+    if loaded.nfes != bank.nfes or any(
+            loaded.plan(n) != bank.plan(n) for n in bank.nfes):
+        failures.append("smoke: PlanBank save/load round-trip mismatch")
+    return failures
+
+
+def smoke() -> int:
+    fails = smoke_invariants()
+    for f in fails:
+        print(f"FAIL: {f}")
+    print(f"autoplan smoke: {'OK' if not fails else 'FAIL'}")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke-scale invariants only; exits nonzero on "
+                    "failure")
+    ap.add_argument("--budget", choices=["quick", "full"], default="full")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    print("name,us_per_call,derived")
+    for row in run(args.budget):
+        print(row.csv())

@@ -16,14 +16,19 @@ BENCH_*.json and exits non-zero on regression:
              run's 'jnp' reference (machine speed cancels in the ratio);
   scheduler  a >25% drop of the continuous/lockstep samples-per-second
              ratio, or >25% growth of continuous net evals per completed
-             sample, against a replay of the committed trace.
+             sample, against a replay of the committed trace;
+  autoplan   the committed BENCH_autoplan.json no longer claiming that
+             the searched plans beat uniform/quadratic tau at equal NFE,
+             or a fresh smoke-scale search violating the DP-optimality /
+             bank-roundtrip / plan-cache-reuse invariants.
 
 Both gates are wired into scripts/tier1.sh so hot-path and serving
 regressions can't land silently.
 
-``--record`` re-runs the recording suites (sampler + scheduler — with
-``--suite all`` exactly those two, the paper modules don't write BENCH
-files), REWRITES the committed BENCH_*.json baselines in one command, and
+``--record`` re-runs the recording suites (sampler + scheduler + autoplan
+— with ``--suite all`` exactly those three, the paper modules don't write
+BENCH files), REWRITES the committed BENCH_*.json baselines in one
+command, and
 appends a dated summary entry to BENCH_HISTORY.md so the perf trajectory
 is tracked across PRs.
 
@@ -53,15 +58,19 @@ SUITES = {
     "paper": PAPER_MODULES,
     "sampler": ["benchmarks.sampler_overhead"],
     "scheduler": ["benchmarks.scheduler_throughput"],
+    "autoplan": ["benchmarks.autoplan_search"],
     "all": PAPER_MODULES + ["benchmarks.sampler_overhead",
-                            "benchmarks.scheduler_throughput"],
+                            "benchmarks.scheduler_throughput",
+                            "benchmarks.autoplan_search"],
 }
 
 # suites whose run() rewrites a committed BENCH_*.json (and so support
 # --check against it / --record of it)
 RECORDING = {"sampler": ("benchmarks.sampler_overhead", "BENCH_sampler.json"),
              "scheduler": ("benchmarks.scheduler_throughput",
-                           "BENCH_scheduler.json")}
+                           "BENCH_scheduler.json"),
+             "autoplan": ("benchmarks.autoplan_search",
+                          "BENCH_autoplan.json")}
 
 
 def _history_entry(root: str) -> str:
@@ -92,6 +101,20 @@ def _history_entry(root: str) -> str:
             lines.append(
                 f"- scheduler/{p}: {r['samples_per_s']:.2f} samples/s, "
                 f"p95 {r['p95_s']:.3f} s, net evals {r['net_evals']}")
+    ap_ = os.path.join(root, "BENCH_autoplan.json")
+    if os.path.exists(ap_):
+        with open(ap_) as f:
+            bench = json.load(f)
+        for r in bench["budgets"]:
+            lines.append(
+                f"- autoplan/S={r['S']}: searched MMD^2 "
+                f"{min(r['dp_mmd'], r['refined_mmd']):.5f} vs uniform "
+                f"{r['uniform_mmd']:.5f} / quadratic "
+                f"{r['quadratic_mmd']:.5f} at equal NFE")
+        lines.append(f"- autoplan/search: {bench['search_wall_s']:.1f} s "
+                     f"wall, grid {bench['grid_size']}, "
+                     f"{bench['executor_traces']} executor traces / "
+                     f"{bench['executor_calls']} rollouts")
     return "\n".join(lines) + "\n"
 
 
@@ -140,7 +163,7 @@ def main() -> None:
             for fmsg in failures:
                 print(f"CHECK FAIL: {fmsg}", file=sys.stderr)
             sys.exit(1)
-        print(f"{args.suite} benchmark check OK (within 25% of committed "
+        print(f"{args.suite} benchmark check OK (vs committed "
               f"{bench_file})")
         return
 

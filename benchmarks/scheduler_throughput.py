@@ -140,8 +140,7 @@ def run_continuous(trace, eps_fn, dim, slots, seed=0):
     # warm-up: compile the tick once, then zero the counters
     eng.submit(SampleRequest(request_id=-1, S=2, seed=seed), now=0.0)
     eng.run()
-    eng.ticks = eng.slot_steps = eng.completed = 0
-    eng._tick_wall_s = 0.0
+    eng.reset_stats()
     clock, latencies = 0.0, {}
     pending = sorted(trace, key=lambda r: r["arrival"])
     while pending or eng.active or len(eng.queue):

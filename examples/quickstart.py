@@ -95,15 +95,36 @@ def run_gmm(args):
     n = args.n_samples
     ref = np.asarray(data.sample(jax.random.PRNGKey(99), n))
     xT = jax.random.normal(jax.random.PRNGKey(7), (n, 2))
+
+    # autoplan gallery row: the DP-searched explicit tau at each budget
+    # (repro.autoplan — ELBO+defect objective on a small candidate grid,
+    # exact DP; docs/autoplan.md). Rides the same table as the hand-picked
+    # specs so the learned-vs-picked gap is visible in one sweep. The DP
+    # optimizes the MODEL'S OWN likelihood terms, so the row only beats
+    # the hand-picked spacings once the model is trained (full --steps);
+    # on the tiny --smoke budget it demonstrates the API, not the win
+    # (BENCH_autoplan.json carries the trained-checkpoint claim).
+    from repro.autoplan import ObjectiveConfig, build_objective, dp_search
+    ocfg = ObjectiveConfig(
+        grid_size=max(24, min(2 * max(args.steps_list), 96)),
+        grid_kind="quadratic", batch=128)
+    dp = dp_search(
+        build_objective(schedule, eps_fn,
+                        data.sample(jax.random.PRNGKey(11), 128), ocfg),
+        tuple(args.steps_list))
+
     print(f"\n{'sampler':>14s} {'S':>5s} {'MMD^2':>9s} {'modes':>6s} "
           f"{'precision':>9s}")
     for S in args.steps_list:
-        for name, plan in _family(schedule, S):
+        rows = _family(schedule, S) + [
+            ("DP-tau", SamplerPlan.build(
+                schedule, tau=TauSpec.explicit(dp[S].taus)))]
+        for name, plan in rows:
             out = plan.run(eps_fn, xT, jax.random.PRNGKey(3))
             m2 = mmd_rbf(out, jnp.asarray(ref))
             modes, prec = mode_coverage(np.asarray(out), data.modes())
-            print(f"{name:>14s} {S:5d} {m2:9.5f} {modes:6d} {prec:9.3f}",
-                  flush=True)
+            print(f"{name:>14s} {plan.S:5d} {m2:9.5f} {modes:6d} "
+                  f"{prec:9.3f}", flush=True)
 
     # ONE plan drives every backend: the reference scan, the tile-resident
     # Pallas hot path, and the per-row scheduler tick. The step arithmetic

@@ -21,3 +21,8 @@ python -m benchmarks.run --suite sampler --check --budget quick
 # >25% drop of the continuous/lockstep samples/s ratio or >25% growth of
 # continuous net evals per completed sample (ISSUE 4 satellite)
 python -m benchmarks.run --suite scheduler --check
+# trajectory-autotuner gate: the committed BENCH_autoplan.json must still
+# claim the DP-searched plans beat uniform/quadratic tau at equal NFE, and
+# a fresh smoke-scale search must hold the DP-optimality / bank-roundtrip /
+# plan-cache-reuse invariants (ISSUE 5)
+python -m benchmarks.run --suite autoplan --check

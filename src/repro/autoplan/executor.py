@@ -1,0 +1,99 @@
+"""Shape-keyed rollout executor — candidate plans share ONE compiled scan.
+
+The search scores hundreds of candidate trajectories by full rollout.
+``SamplerPlan.run`` (and the plan-keyed ``DiffusionSampler`` cache from
+PR 3) key compiled programs on the FULL plan contents — correct for
+serving, where two plans are genuinely different programs, but wasteful
+for search, where every candidate at one step budget is the SAME program
+fed a different coefficient table.
+
+``PlanExecutor`` closes that gap: the jit cache keys on the plan's
+*compile-relevant statics* only — (S, order, stochastic, clip, batch
+shape/dtype) — and the per-step coefficient table enters as ARRAY
+ARGUMENTS.  N searched candidates sharing a model and step budget compile
+the backend executor exactly once (trace-count asserted in
+tests/test_autoplan.py); scoring a new candidate is a dictionary lookup
+plus a cached XLA call.
+
+The scan body is a line-for-line mirror of ``sampling.backends.run_jnp``
+(same ``kernel_update`` / ``mix_history`` calls, same scan structure), so
+``executor.run(plan, x_T, rng)`` is BIT-IDENTICAL to
+``plan.run(eps_fn, x_T, rng, backend='jnp')`` — the searched scores are
+scores of exactly what serving will run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sampling import SamplerPlan
+from repro.sampling.backends import _hist0, kernel_update
+from repro.core.solver import mix_history
+
+
+class PlanExecutor:
+    """jit-cached jnp rollouts keyed on plan statics, table passed as data.
+
+    Args:
+      eps_fn: the (fixed) eps model every candidate is scored against.
+
+    Attributes:
+      traces: number of scan compilations so far — the search-efficiency
+        contract is ``traces == #distinct (S, order, stochastic, clip,
+        batch-shape) combinations``, not #candidates.
+    """
+
+    def __init__(self, eps_fn):
+        self.eps_fn = eps_fn
+        self._cache: Dict[Tuple, object] = {}
+        self.traces = 0
+        self.calls = 0
+
+    def _build(self, order: int, stochastic: bool, clip: Optional[float]):
+        eps_fn = self.eps_fn
+
+        def rollout(tab, x_T, keys):
+            self.traces += 1          # host side effect: once per trace
+            batch = x_T.shape[0]
+
+            def body(carry, per):
+                x, hist = carry
+                c, key = per
+                t = jnp.full((batch,), c["t"], jnp.int32)
+                e32 = eps_fn(x, t).astype(jnp.float32)
+                e32, hist = mix_history(e32, hist, c["solver_w"], order)
+                out = kernel_update(x.astype(jnp.float32), e32, c["c_x0"],
+                                    c["c_dir"], c["sqrt_a_t"],
+                                    c["sqrt_1m_a_t"], clip)
+                if stochastic:
+                    out = out + c["c_noise"] * jax.random.normal(
+                        key, x.shape, jnp.float32)
+                return (out.astype(x_T.dtype), hist), None
+
+            (x0, _), _ = jax.lax.scan(
+                body, (x_T, _hist0(order, x_T.shape)), (tab, keys))
+            return x0
+
+        return jax.jit(rollout)
+
+    def run(self, plan: SamplerPlan, x_T: jnp.ndarray,
+            rng: Optional[jax.Array] = None) -> jnp.ndarray:
+        """Execute ``plan`` from x_T — bit-identical to the 'jnp' backend."""
+        stochastic = plan.stochastic
+        if stochastic and rng is None:
+            raise ValueError("stochastic candidate plan needs rng")
+        key = (plan.S, plan.order, stochastic, plan.clip_x0,
+               tuple(x_T.shape), jnp.dtype(x_T.dtype).name)
+        if key not in self._cache:
+            self._cache[key] = self._build(plan.order, stochastic,
+                                           plan.clip_x0)
+        tab = {k: jnp.asarray(v) for k, v in plan.steps().items()}
+        keys = jax.random.split(rng, plan.S) if stochastic else None
+        self.calls += 1
+        return self._cache[key](tab, x_T, keys)
+
+    @property
+    def compiled(self) -> int:
+        return len(self._cache)

@@ -1,5 +1,7 @@
+from .elbo import TransitionTable, transition_elbo_table
 from .metrics import (mmd_rbf, frechet_proxy, image_features, fid_proxy,
                       mode_coverage, high_level_similarity)
 
-__all__ = ["mmd_rbf", "frechet_proxy", "image_features", "fid_proxy",
+__all__ = ["TransitionTable", "transition_elbo_table",
+           "mmd_rbf", "frechet_proxy", "image_features", "fid_proxy",
            "mode_coverage", "high_level_similarity"]

@@ -71,15 +71,29 @@ def serve_unet(args):
         restored, _ = checkpoint.restore(args.ckpt, ref)
         params = restored["ema"]            # sample from the EMA model
     eps_fn = unet.make_eps_fn(params, ucfg)
+    bank = None
+    if args.plan_bank:
+        from repro.autoplan import PlanBank
+        bank = PlanBank.load(args.plan_bank, schedule)
+        print(f"plan bank: {len(bank)} rows, NFE frontier {bank.nfes}")
     svc = DiffusionSampler(schedule, eps_fn,
                            (args.image_size, args.image_size, 3),
-                           batch_size=args.batch)
+                           batch_size=args.batch, plan_bank=bank)
     if args.scheduler:
         return serve_unet_continuous(args, svc)
-    plan = SamplerPlan.build(
-        schedule, tau=(TauSpec.quadratic(args.S) if args.tau == "quadratic"
-                       else TauSpec.uniform(args.S)),
-        sigma=args.eta, order=args.order)
+    if bank is not None:
+        # budget-bounded bank row: the best searched trajectory <= --S NFE
+        plan = svc.bank_plan(max_nfe=args.S)
+        if plan.S > args.S:
+            # bank_plan falls back to the smallest row when nothing fits
+            print(f"warning: no bank row fits --S {args.S}; serving the "
+                  f"smallest searched row (S={plan.S})")
+    else:
+        plan = SamplerPlan.build(
+            schedule, tau=(TauSpec.quadratic(args.S)
+                           if args.tau == "quadratic"
+                           else TauSpec.uniform(args.S)),
+            sigma=args.eta, order=args.order)
     samples, stats = svc.serve(args.n_samples, plan, seed=args.seed)
     print(f"sampled {samples.shape} in {stats['batches']} batches; "
           f"steady={stats['steady_batch_s']:.2f}s/batch "
@@ -99,9 +113,29 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
     """
     s_mix = [int(s) for s in args.s_mix.split(",")]
     stochastic = args.eta > 0.0
+    max_order = args.order
+    clip_x0 = None
+    if svc.plan_bank is not None:
+        # size the engine to the whole bank frontier: refined rows may be
+        # stochastic (eta schedules), multistep, or clipped, and an engine
+        # only serves bank rows within its own caps
+        bank = svc.plan_bank
+        stochastic = stochastic or any(bank.plan(n).stochastic
+                                       for n in bank.nfes)
+        max_order = max([max_order] + [e.order for e in bank.entries])
+        clips = [e.clip for e in bank.entries]
+        uniq = set(clips)
+        if len(uniq) == 1:
+            clip_x0 = uniq.pop()
+        elif len(uniq) > 1:
+            # an engine compiles ONE clip; serve the biggest bank subset
+            clip_x0 = max(uniq, key=clips.count)
+            print(f"warning: bank mixes clip values "
+                  f"{sorted(map(str, uniq))}; engine serves only its "
+                  f"clip_x0={clip_x0} rows")
     schedule = svc.schedule
     eng = svc.continuous(slots=args.slots, stochastic=stochastic,
-                         max_order=args.order)
+                         max_order=max_order, clip_x0=clip_x0)
 
     def plan_for(i: int) -> SamplerPlan:
         S = s_mix[i % len(s_mix)]
@@ -114,23 +148,57 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
                                  sigma=SigmaSpec.from_eta(args.eta),
                                  order=order)
 
-    reqs = [SampleRequest(request_id=i, plan=plan_for(i),
-                          seed=args.seed + i)
-            for i in range(args.n_samples)]
+    deadlines = [float(d) for d in args.deadlines.split(",")] \
+        if args.deadlines else [None]
+    import time as _time
+
+    # warm the tick before stamping any deadline: the one-off XLA trace
+    # (seconds on CPU) must neither eat the requests' headroom nor — on
+    # the bank path — poison the EWMA the selection policy consults
+    if svc.plan_bank is not None:
+        eng.submit(SampleRequest(request_id=-1, auto_plan=True, seed=0))
+        eng.run()
+        eng.reset_stats()        # keep the compiled tick + measured EWMA
+    elif args.deadlines:
+        eng.submit(SampleRequest(request_id=-1, plan=plan_for(0), seed=0))
+        eng.run()
+        eng.reset_stats()
+    now = _time.perf_counter()
+
+    def deadline_for(i: int):
+        d = deadlines[i % len(deadlines)]
+        return None if d is None else now + d
+
+    if svc.plan_bank is not None:
+        # deadline-aware bank selection: every request lets the ENGINE
+        # pick its plan at admission; the cycled relative deadlines make
+        # the policy choose different NFE rows across one trace
+        reqs = [SampleRequest(request_id=i, auto_plan=True,
+                              deadline=deadline_for(i), seed=args.seed + i)
+                for i in range(args.n_samples)]
+    else:
+        reqs = [SampleRequest(request_id=i, plan=plan_for(i),
+                              deadline=deadline_for(i), seed=args.seed + i)
+                for i in range(args.n_samples)]
     results = eng.serve(reqs)
     by_id = {r.request_id: r for r in results}
     for i in sorted(by_id):
         r = by_id[i]
+        sel = (f" nfe={r.nfe} headroom="
+               + (f"{r.deadline_headroom_s*1e3:.0f}ms"
+                  if r.deadline_headroom_s is not None else "inf")
+               if r.auto_plan else "")
         print(f"req{r.request_id}: {reqs[i].plan} "
               f"wait={r.queue_wait_s*1e3:.1f}ms "
               f"service={r.service_s*1e3:.1f}ms "
-              f"latency={r.latency_s*1e3:.1f}ms")
+              f"latency={r.latency_s*1e3:.1f}ms{sel}")
     st = eng.stats()
     print(f"scheduler: {st['completed']} done in {st['ticks']} ticks "
           f"(occupancy={st['occupancy']:.2f}, "
           f"{st['steps_per_s']:.1f} slot-steps/s, "
           f"compiled_ticks={st['compiled_ticks']}, "
-          f"max_order={st['max_order']})")
+          f"max_order={st['max_order']}, "
+          f"bank_selected={st['bank_selected']})")
     if args.out:
         done = [r for r in sorted(results, key=lambda r: r.request_id)
                 if r.x0 is not None]
@@ -165,6 +233,14 @@ def main():
                     help="resident scheduler slots (--scheduler)")
     ap.add_argument("--s-mix", default="10,20,50",
                     help="comma list of per-request step budgets to cycle")
+    ap.add_argument("--plan-bank", default=None,
+                    help="PlanBank JSON (repro.autoplan): lockstep serves "
+                    "the best bank row <= --S; --scheduler switches every "
+                    "request to deadline-aware bank selection")
+    ap.add_argument("--deadlines", default="",
+                    help="comma list of relative deadlines in seconds to "
+                    "cycle across --scheduler requests (with --plan-bank: "
+                    "drives the per-request NFE selection)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()

@@ -55,12 +55,35 @@ class TauSpec:
         elif self.kind == "explicit":
             if not self.taus:
                 raise ValueError("TauSpec('explicit') needs a non-empty taus")
-            taus = tuple(int(t) for t in self.taus)
-            if any(b <= a for a, b in zip(taus, taus[1:])):
-                raise ValueError(f"explicit taus must be strictly "
-                                 f"increasing, got {taus}")
+            taus = tuple(self.taus)
+            for k, t in enumerate(taus):
+                # integral values only — silently truncating 5.7 -> 5 (or
+                # coercing bool/NaN) used to surface downstream as a subtly
+                # wrong coefficient table; the DP search builds thousands
+                # of these, so bad values must fail HERE, by index.  Any
+                # integral-valued number (python int, numpy/jax int or
+                # float scalar out of e.g. floor arithmetic) is accepted.
+                bad = (isinstance(t, (bool, np.bool_))
+                       or getattr(t, "dtype", None) == np.bool_)
+                if not bad:
+                    try:
+                        bad = int(t) != t      # NaN/inf raise, 5.7 != 5
+                    except (TypeError, ValueError, OverflowError):
+                        bad = True
+                if bad:
+                    raise ValueError(
+                        f"explicit taus must be integer timesteps; "
+                        f"taus[{k}] = {t!r} is not an integer")
+            taus = tuple(int(t) for t in taus)
+            for k, (a, b) in enumerate(zip(taus, taus[1:])):
+                if b <= a:
+                    raise ValueError(
+                        f"explicit taus must be strictly increasing; "
+                        f"taus[{k}] = {a} >= taus[{k + 1}] = {b}"
+                        + (" (duplicate timestep)" if b == a else ""))
             if taus[0] < 1:
-                raise ValueError(f"explicit taus must start >= 1, got "
+                raise ValueError(f"explicit taus must start >= 1 (the model "
+                                 f"grid begins at t=1), got taus[0] = "
                                  f"{taus[0]}")
             object.__setattr__(self, "taus", taus)
             object.__setattr__(self, "S", len(taus))
@@ -77,9 +100,20 @@ class TauSpec:
         return cls(kind="quadratic", S=S)
 
     @classmethod
-    def explicit(cls, taus: Sequence[int]) -> "TauSpec":
-        """An arbitrary (e.g. learned) strictly-increasing subsequence."""
-        return cls(kind="explicit", taus=tuple(int(t) for t in taus))
+    def explicit(cls, taus: Sequence[int],
+                 T: Optional[int] = None) -> "TauSpec":
+        """An arbitrary (e.g. learned) strictly-increasing subsequence.
+
+        ``T`` (optional) validates the upper bound at CONSTRUCTION time —
+        callers that know the target schedule (e.g. the DP search) get the
+        out-of-range error immediately instead of at plan compilation.
+        ``T`` is a validation bound only, not part of the spec's identity:
+        two specs with the same taus hash/compare equal regardless.
+        """
+        spec = cls(kind="explicit", taus=tuple(taus))
+        if T is not None and spec.taus[-1] > T:
+            raise ValueError(f"explicit tau {spec.taus[-1]} exceeds T={T}")
+        return spec
 
     # ------------------------------------------------------------- resolve
     def resolve(self, T: int) -> np.ndarray:

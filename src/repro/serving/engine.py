@@ -165,7 +165,8 @@ class DiffusionSampler:
                  dtype=jnp.float32, tile_resident: bool = False,
                  donate: Optional[bool] = None,
                  bucket_sizes: Optional[Sequence[int]] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 plan_bank=None):
         """Args beyond the seed version:
 
         dtype: state dtype (bf16 halves sampler HBM traffic; trajectory
@@ -178,6 +179,11 @@ class DiffusionSampler:
           the full batch. Defaults to (batch_size,) — one program.
         interpret: Pallas interpret mode; None = compiled on TPU,
           interpreter elsewhere. tile_resident only.
+        plan_bank: a ``repro.autoplan.PlanBank`` searched on ``schedule``
+          (digest-validated). ``serve``/``sample_batch`` then accept
+          ``cfg="auto"`` (the bank's quality end) and ``bank_plan(max_nfe)``
+          picks a budget-bounded row; ``continuous()`` forwards the bank to
+          the scheduler for per-request deadline-aware selection.
         """
         self.schedule = schedule
         self.eps_fn = eps_fn
@@ -194,6 +200,14 @@ class DiffusionSampler:
             buckets = buckets + (batch_size,)
         self.buckets = buckets
         self._compiled: Dict[Tuple, Callable] = {}
+        self.plan_bank = plan_bank
+        if plan_bank is not None:
+            from repro.sampling.plan import _schedule_digest
+            if (_schedule_digest(plan_bank.schedule)
+                    != _schedule_digest(schedule)):
+                raise ValueError(
+                    "plan_bank was searched on a different noise schedule "
+                    "than this service serves")
 
     def _bucket_for(self, n: int) -> int:
         for b in self.buckets:
@@ -220,11 +234,30 @@ class DiffusionSampler:
 
     def _as_plan(self, plan_or_cfg) -> SamplerPlan:
         """Normalize the request surface: SamplerPlan passes through,
-        legacy SamplerConfig compiles to its equivalent plan (memoized by
-        the plan's own hash in ``_compiled``)."""
+        ``"auto"`` resolves against the plan bank, legacy SamplerConfig
+        compiles to its equivalent plan (memoized by the plan's own hash
+        in ``_compiled``)."""
         if isinstance(plan_or_cfg, SamplerPlan):
             return plan_or_cfg
+        if plan_or_cfg == "auto":
+            return self.bank_plan()
         return plan_or_cfg.to_plan(self.schedule)
+
+    def bank_plan(self, max_nfe: Optional[int] = None) -> SamplerPlan:
+        """The plan bank's best row with NFE <= max_nfe (None = best).
+
+        Graceful degradation, not a hard cap: when every bank row exceeds
+        ``max_nfe`` this returns the SMALLEST row (the cheapest searched
+        trajectory the bank knows) rather than failing — check the
+        returned ``plan.S`` if the budget is a hard limit.
+        """
+        if self.plan_bank is None:
+            raise ValueError("no plan bank: build the DiffusionSampler "
+                             "with plan_bank= to use cfg='auto'")
+        plan = self.plan_bank.best(max_nfe)
+        if plan is None:
+            raise ValueError("the plan bank is empty")
+        return plan
 
     def _get_fn(self, plan: SamplerPlan, batch: int) -> Callable:
         # key on the FROZEN PLAN (hashes its full contents, schedule
@@ -317,4 +350,5 @@ class DiffusionSampler:
             self.schedule, self.eps_fn, self.shape,
             slots=slots or self.batch, dtype=self.dtype,
             donate=kw.pop("donate", self.donate),
-            interpret=kw.pop("interpret", self.interpret), **kw)
+            interpret=kw.pop("interpret", self.interpret),
+            plan_bank=kw.pop("plan_bank", self.plan_bank), **kw)

@@ -39,6 +39,7 @@ per request plus engine-level throughput/occupancy stats.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -67,6 +68,7 @@ class _Slot:
     k: int                         # next step index to run (0..S-1)
     admit_t: float
     previews: int = 0
+    headroom_s: Optional[float] = None   # deadline - admit time (if any)
 
 
 class ContinuousBatchingEngine:
@@ -115,6 +117,20 @@ class ContinuousBatchingEngine:
         to this engine's exact (slots, *sample_shape) geometry and the
         engine is deterministic, history-free, and preview-free; True
         raises if any of those fail, False forces the unfused tick.
+      plan_bank: a ``repro.autoplan.PlanBank`` searched on this engine's
+        noise schedule (digest-validated).  Requests submitted with
+        ``auto_plan=True`` get their SamplerPlan chosen AT ADMISSION:
+        the largest-NFE bank row that fits the request's deadline
+        headroom at the measured EWMA tick latency (one tick advances a
+        resident request one step); deadline-free requests are served the
+        quality end of the frontier.  Rows incompatible with this engine
+        (stochastic rows on a deterministic engine, order > max_order,
+        clip mismatch) are never selected.
+      select_margin: safety factor on the deadline fit — a bank row fits
+        when NFE * tick_ewma_s <= headroom * select_margin.
+      tick_ewma_alpha: smoothing factor for the per-tick latency EWMA
+        that feeds the selection policy (``stats()['tick_ewma_s']``);
+        0.0 freezes a seeded ``tick_ewma_s`` (virtual-clock replays).
     """
 
     def __init__(self, schedule: NoiseSchedule, eps_fn: Callable,
@@ -125,7 +141,9 @@ class ContinuousBatchingEngine:
                  max_queue: Optional[int] = None,
                  donate: Optional[bool] = None,
                  interpret: Optional[bool] = None,
-                 use_mega: Optional[bool] = None):
+                 use_mega: Optional[bool] = None,
+                 plan_bank=None, select_margin: float = 0.9,
+                 tick_ewma_alpha: float = 0.2):
         from repro.kernels.sampler_step import ops as tile_ops
 
         if not 1 <= max_order <= MAX_ORDER:
@@ -147,6 +165,20 @@ class ContinuousBatchingEngine:
         if donate is None:  # XLA:CPU can't donate — avoid the warning spam
             donate = jax.default_backend() in ("tpu", "gpu")
         self.donate = donate
+
+        self.plan_bank = plan_bank
+        self.select_margin = float(select_margin)
+        self.tick_ewma_alpha = float(tick_ewma_alpha)
+        self.tick_ewma_s: Optional[float] = None
+        self.bank_selected = 0
+        if plan_bank is not None:
+            from repro.sampling.plan import _schedule_digest
+            if (_schedule_digest(plan_bank.schedule)
+                    != _schedule_digest(schedule)):
+                raise ValueError(
+                    "plan_bank was searched on a different noise schedule "
+                    "than this engine serves — re-search or load the "
+                    "matching bank")
 
         self.use_mega = self._resolve_mega(use_mega)
         self._n = int(np.prod(self.shape))
@@ -304,17 +336,58 @@ class ContinuousBatchingEngine:
     def submit(self, req: SampleRequest,
                now: Optional[float] = None) -> bool:
         """Enqueue a request; False means rejected (queue back-pressure)."""
-        if req.stochastic and not self.stochastic:
-            raise ValueError(
-                f"request {req.request_id}: a stochastic plan (sigma > 0 "
-                "somewhere) needs a stochastic=True engine (deterministic "
-                "tick has no PRNG)")
-        self._validate_plan(req)
-        if not 1 <= req.steps <= self.schedule.T:
-            raise ValueError(f"request {req.request_id}: S={req.steps} "
-                             f"outside [1, T={self.schedule.T}]")
+        if req.auto_plan:
+            if req.plan is not None:
+                raise ValueError(
+                    f"request {req.request_id}: auto_plan=True and an "
+                    "explicit plan are mutually exclusive (the engine "
+                    "fills plan in at admission)")
+            if self.plan_bank is None:
+                raise ValueError(
+                    f"request {req.request_id}: auto_plan=True needs an "
+                    "engine built with plan_bank=")
+            if self._bank_candidates() == 0:
+                raise ValueError(
+                    f"request {req.request_id}: the plan bank has no entry "
+                    "compatible with this engine (stochastic rows need a "
+                    f"stochastic engine; order <= max_order="
+                    f"{self.max_order}; clip == {self.clip_x0})")
+        else:
+            if req.stochastic and not self.stochastic:
+                raise ValueError(
+                    f"request {req.request_id}: a stochastic plan (sigma > "
+                    "0 somewhere) needs a stochastic=True engine "
+                    "(deterministic tick has no PRNG)")
+            self._validate_plan(req)
+            if not 1 <= req.steps <= self.schedule.T:
+                raise ValueError(f"request {req.request_id}: S={req.steps} "
+                                 f"outside [1, T={self.schedule.T}]")
         now = time.perf_counter() if now is None else now
         return self.queue.submit(req, now)
+
+    # ------------------------------------------------- deadline-aware bank
+    def _bank_candidates(self) -> int:
+        """How many bank rows this engine could actually serve."""
+        return len(self.plan_bank.compatible(
+            deterministic=None if self.stochastic else True,
+            max_order=self.max_order, clip=self.clip_x0))
+
+    def _select_plan(self, req: SampleRequest, now: float):
+        """The admission-time bank pick (the deadline-aware policy).
+
+        headroom = deadline - now (infinite without a deadline); the
+        per-step latency estimate is the EWMA tick time — a resident
+        request advances exactly one step per tick, so a plan fits when
+        NFE * tick_ewma_s <= headroom * select_margin.  Before the first
+        measured tick the policy is conservative (smallest row) for
+        deadline requests and quality-greedy for deadline-free ones.
+        """
+        headroom = (math.inf if req.deadline is None
+                    else max(req.deadline - now, 0.0))
+        return self.plan_bank.select(
+            headroom, self.tick_ewma_s, margin=self.select_margin,
+            deterministic=None if self.stochastic else True,
+            max_order=self.max_order, clip=self.clip_x0)
 
     @property
     def active(self) -> int:
@@ -323,10 +396,15 @@ class ContinuousBatchingEngine:
     def _drop(self, req: SampleRequest, now: float,
               missed: bool = True) -> SampleResult:
         self.dropped += 1
-        return SampleResult(request_id=req.request_id, x0=None, S=req.steps,
+        # an auto_plan request dropped before admission never had a plan
+        # selected — report no step budget rather than the dataclass default
+        steps = (None if req.auto_plan and req.plan is None
+                 else req.steps)
+        return SampleResult(request_id=req.request_id, x0=None, S=steps,
                             eta=req.eta_label, submit_t=req.submit_t,
                             admit_t=None, finish_t=now,
-                            deadline_missed=missed, dropped=True)
+                            deadline_missed=missed, dropped=True,
+                            auto_plan=req.auto_plan)
 
     def _admit(self, now: float, results: List[SampleResult]) -> None:
         while self._free and len(self.queue):
@@ -334,9 +412,14 @@ class ContinuousBatchingEngine:
             results.extend(self._drop(m, now) for m in missed)
             if req is None:
                 break
+            headroom = (req.deadline - now if req.deadline is not None
+                        else None)
+            if req.auto_plan and req.plan is None:
+                req.plan = self._select_plan(req, now)
+                self.bank_selected += 1
             b = self._free.pop()
             self._slots[b] = _Slot(req=req, table=self._table_for(req),
-                                   k=0, admit_t=now)
+                                   k=0, admit_t=now, headroom_s=headroom)
             self._x2 = self._write_fn(self._x2, self._xT_fn(req.seed),
                                       b * self._rps)
 
@@ -414,6 +497,7 @@ class ContinuousBatchingEngine:
         if self.active == 0:
             return results
         states = self._states()
+        traces0 = self._traces
         t0 = time.perf_counter()
         if self.max_order == 1:
             out = self._tick_fn(self._x2, states)
@@ -423,6 +507,18 @@ class ContinuousBatchingEngine:
         jax.block_until_ready(self._x2)
         t1 = time.perf_counter()
         self._tick_wall_s += t1 - t0
+        # EWMA per-step tick latency — the deadline-selection policy's
+        # latency input (a resident request advances one step per tick).
+        # Compile ticks are excluded: XLA tracing is a one-off 100-1000x
+        # a steady tick, and folding it in would make deadline admissions
+        # pick the cheapest bank row for dozens of requests afterwards.
+        if self._traces == traces0:
+            if self.tick_ewma_s is None:
+                self.tick_ewma_s = t1 - t0
+            else:
+                a = self.tick_ewma_alpha
+                self.tick_ewma_s = (a * (t1 - t0)
+                                    + (1.0 - a) * self.tick_ewma_s)
         if wall:
             now = t1
         self.ticks += 1
@@ -440,7 +536,9 @@ class ContinuousBatchingEngine:
                     request_id=req.request_id, x0=self._read_slot(b),
                     S=req.steps, eta=req.eta_label, submit_t=req.submit_t,
                     admit_t=slot.admit_t, finish_t=now,
-                    previews=slot.previews, deadline_missed=missed))
+                    previews=slot.previews, deadline_missed=missed,
+                    deadline_headroom_s=slot.headroom_s,
+                    auto_plan=req.auto_plan))
                 self.completed += 1
                 self._slots[b] = None
                 self._free.append(b)
@@ -475,6 +573,17 @@ class ContinuousBatchingEngine:
         results.extend(self.run())
         return results
 
+    def reset_stats(self) -> None:
+        """Zero the throughput counters (e.g. after a warm-up trace).
+
+        Keeps what warm-up exists to build: the compiled-program cache,
+        ``compiled_ticks``, and the measured ``tick_ewma_s`` the
+        deadline-selection policy consults.
+        """
+        self.ticks = self.slot_steps = self.completed = 0
+        self.dropped = self.previews_sent = self.bank_selected = 0
+        self._tick_wall_s = 0.0
+
     def stats(self) -> Dict:
         denom = max(self.ticks * self.slots, 1)
         return {
@@ -488,8 +597,12 @@ class ContinuousBatchingEngine:
             "queued": len(self.queue),
             "queue_rejected": self.queue.rejected,
             "tick_wall_s": self._tick_wall_s,
+            "tick_ewma_s": self.tick_ewma_s,
             "steps_per_s": self.slot_steps / max(self._tick_wall_s, 1e-9),
             "compiled_ticks": self._traces,
+            "plan_bank": (None if self.plan_bank is None
+                          else len(self.plan_bank)),
+            "bank_selected": self.bank_selected,
             "stochastic": self.stochastic,
             "preview": self.preview,
             "max_order": self.max_order,

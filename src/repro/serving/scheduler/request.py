@@ -35,6 +35,11 @@ class SampleRequest:
     sigma_hat: bool = False            # over-dispersed DDPM variant
     plan: Optional[SamplerPlan] = None  # full per-request trajectory plan;
     #                                     overrides the scalar knobs above
+    auto_plan: bool = False            # let the engine pick the plan from
+    #                                     its PlanBank at ADMISSION, using
+    #                                     the deadline headroom and the
+    #                                     measured tick latency (the
+    #                                     engine fills ``plan`` in)
     seed: int = 0                      # x_T + noise-stream seed
     deadline: Optional[float] = None   # absolute completion deadline
     preview_every: int = 0             # stream x0-previews every k ticks
@@ -87,7 +92,8 @@ class SampleResult:
 
     request_id: int
     x0: Optional[np.ndarray]           # None iff dropped before running
-    S: int
+    S: Optional[int]                   # None iff dropped before an
+    #                                     auto_plan selection happened
     eta: float
     submit_t: float
     admit_t: Optional[float]           # None iff never admitted
@@ -95,6 +101,18 @@ class SampleResult:
     previews: int = 0
     deadline_missed: bool = False      # finished (or dropped) past deadline
     dropped: bool = False              # never ran: expired in the queue
+    # --- selection-policy observability (the deadline-aware admission's
+    # inputs, recorded per request): the deadline headroom measured AT
+    # ADMISSION (deadline - admit time; None without a deadline) and
+    # whether the plan came from the bank.
+    deadline_headroom_s: Optional[float] = None
+    auto_plan: bool = False
+
+    @property
+    def nfe(self) -> Optional[int]:
+        """NFE of the plan actually executed (alias of ``S``; None when
+        the request was dropped before an auto_plan selection)."""
+        return self.S
 
     @property
     def queue_wait_s(self) -> float:
