@@ -1,0 +1,271 @@
+"""Slot-pool fleet scaling under a mixed-S Poisson trace (1/2/4 pools).
+
+Replays ONE seeded arrival trace — Poisson arrivals, per-request step
+budgets off a menu — through fleets of 1, 2 and 4 slot pools
+(serving/fleet): a global EDF queue with least-loaded dispatch in front
+of N continuous-batching engines, each pool's weight-heavy eps trunk
+running under ``shard_map`` on its own disjoint ("data","model") mesh
+slice (launch.mesh.make_fleet_mesh) when enough devices exist, else
+unsharded (recorded in the payload).
+
+Clocking is the repo's virtual-clock replay convention taken multi-host:
+each pool advances its OWN virtual clock by its REAL measured tick wall
+times, and the event loop always ticks the pool whose clock is furthest
+behind — pools overlap in virtual time exactly as a fleet of machines
+overlaps in wall time, while the benchmark itself runs serially on one
+host. Aggregate samples/s is completions over the union span (last
+completion minus first arrival). The offered Poisson rate saturates the
+LARGEST fleet, so every configuration runs at capacity and the
+1 -> 2 -> 4 scaling ratio measures what the fleet tier actually adds.
+
+CPU simulation recipe (what CI uses):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.run --suite fleet
+
+Emits per-fleet samples/s + latency percentiles and the scaling ratios
+into BENCH_fleet.json and the standard Row CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks._common import ROOT, Row
+from benchmarks.scheduler_throughput import _percentiles, make_trace
+from repro.core import make_schedule
+from repro.serving.fleet import (PoolFleet, make_sharded_eps,
+                                 make_trunk_params, make_unsharded_eps)
+from repro.serving.scheduler.request import SampleRequest
+
+SCH = make_schedule("linear", T=1000)
+
+POOL_COUNTS = (1, 2, 4)
+FLEET_MODEL_AXIS = 2          # model-axis size per pool mesh (8-device sim)
+
+
+def _pool_meshes(n_pools: int):
+    """The first n_pools of the max-fleet mesh partition, else None.
+
+    Every pool gets the SAME per-pool device slice regardless of fleet
+    size (a 1-pool fleet does NOT absorb the idle devices): scaling then
+    compares fleets of identical pools, which is both the deployment
+    reality (machines per pool are fixed; you add machines) and what
+    makes the 1 -> 2 -> 4 samples/s ratio a clean gate — per-pool tick
+    cost is constant across configurations instead of varying with mesh
+    shape.
+    """
+    n = len(jax.devices())
+    per = FLEET_MODEL_AXIS          # (1, model) mesh per pool
+    if n % (max(POOL_COUNTS) * per) == 0:
+        from repro.launch.mesh import make_fleet_mesh
+        return make_fleet_mesh(n // per,
+                               model=FLEET_MODEL_AXIS)[:n_pools]
+    return None
+
+
+def build_fleet(params, dim, n_pools, slots):
+    meshes = _pool_meshes(n_pools)
+    if meshes is not None:
+        eps = lambda pool_id, mesh: make_sharded_eps(mesh, params)
+    else:
+        eps = make_unsharded_eps(params)
+    fleet = PoolFleet.build(SCH, eps, (dim,), n_pools=n_pools,
+                            slots=slots, meshes=meshes)
+    return fleet, meshes is not None
+
+
+def run_fleet(trace, params, dim, n_pools, slots, seed=0):
+    """Replay the trace against an n_pools fleet on per-pool virtual clocks."""
+    fleet, sharded = build_fleet(params, dim, n_pools, slots)
+    # warm-up: compile every pool's tick once, then zero the counters
+    fleet.serve([SampleRequest(request_id=-1 - p, S=2, seed=seed)
+                 for p in range(n_pools)], now=0.0)
+    for p in fleet.pools:
+        p.engine.reset_stats()
+
+    clocks = [0.0] * n_pools
+    latencies = {}
+    pending = sorted(trace, key=lambda r: r["arrival"])
+    while pending or fleet.busy:
+        busy = [p for p in fleet.pools if p.busy]
+        if busy:
+            now = min(clocks[p.pool_id] for p in busy)
+        else:   # fleet idle: jump every clock to the next arrival
+            now = max(pending[0]["arrival"], min(clocks))
+            clocks = [max(c, now) for c in clocks]
+        while pending and pending[0]["arrival"] <= now:
+            r = pending.pop(0)
+            fleet.submit(SampleRequest(request_id=r["request_id"],
+                                       S=r["S"],
+                                       seed=seed + r["request_id"]),
+                         now=r["arrival"])
+        fleet.dispatch(now)
+        # a pool that just went busy starts no earlier than dispatch time
+        for p in fleet.pools:
+            if p.busy:
+                clocks[p.pool_id] = max(clocks[p.pool_id], now)
+        busy = [p for p in fleet.pools if p.busy]
+        if not busy:
+            continue
+        p = min(busy, key=lambda q: clocks[q.pool_id])
+        t0 = time.perf_counter()
+        results = p.tick(now=clocks[p.pool_id])
+        clocks[p.pool_id] += time.perf_counter() - t0
+        for res in results:
+            latencies[res.request_id] = clocks[p.pool_id] - res.submit_t
+    done = len(latencies)
+    span = max(max(clocks) - min(r["arrival"] for r in trace), 1e-9)
+    st = fleet.stats()
+    return dict(n_pools=n_pools, completed=done,
+                samples_per_s=done / span,
+                occupancy=st["occupancy"], ticks=st["ticks"],
+                sharded=sharded,
+                compiled_ticks=[ps["compiled_ticks"]
+                                for ps in st["pools"]],
+                per_pool_completed=[ps["completed"] for ps in st["pools"]],
+                **_percentiles(list(latencies.values())))
+
+
+def run_scaling(n_requests, s_menu, slots, dim, hidden, rate_per_s=None,
+                seed=0):
+    params = make_trunk_params(SCH, dim, hidden, seed=seed)
+    if rate_per_s is None:
+        # saturate the LARGEST fleet: a saturated single pool's samples/s
+        # IS its capacity; offer 2x the 4-pool aggregate (the probe's
+        # short burst under-reads capacity via its ramp/drain tails, so
+        # lean well past 1x to keep every configuration compute-bound)
+        probe = run_fleet(make_trace(2 * slots, s_menu, 1e9, seed=1),
+                          params, dim, n_pools=1, slots=slots, seed=1)
+        rate_per_s = 2.0 * max(POOL_COUNTS) * probe["samples_per_s"]
+    trace = make_trace(n_requests, s_menu, rate_per_s, seed=seed)
+    fleets = {n: run_fleet(trace, params, dim, n, slots, seed=seed)
+              for n in POOL_COUNTS}
+    return trace, fleets, rate_per_s
+
+
+def _ratios(fleets):
+    base = fleets[1]["samples_per_s"]
+    return {f"x{n}": fleets[n]["samples_per_s"] / max(base, 1e-9)
+            for n in POOL_COUNTS if n > 1}
+
+
+def run(budget: str = "full"):
+    if budget == "quick":
+        n_requests, s_menu, slots = 64, (5, 10, 20), 4
+    else:
+        n_requests, s_menu, slots = 128, (5, 10, 20), 4
+    dim, hidden = 512, 1024
+    trace, fleets, rate = run_scaling(n_requests, s_menu, slots, dim,
+                                      hidden)
+    payload = {
+        "bench": "fleet_throughput",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "state_dim": dim,
+        "eps_hidden": hidden,
+        "slots_per_pool": slots,
+        "n_requests": n_requests,
+        "s_menu": list(s_menu),
+        "poisson_rate_per_s": float(rate),
+        "note": ("multi-host virtual-clock replay: each pool advances its "
+                 "own virtual clock by real measured tick wall times and "
+                 "the loop ticks the furthest-behind pool, so pools "
+                 "overlap in virtual time as fleet machines overlap in "
+                 "wall time. Offered load saturates the largest fleet; "
+                 "scaling ratios are the gate (machine-independent). "
+                 "sharded=true means each pool's trunk ran under "
+                 "shard_map on its own disjoint mesh slice "
+                 "(make_fleet_mesh)"),
+        "fleets": {str(n): fleets[n] for n in POOL_COUNTS},
+        "scaling": _ratios(fleets),
+    }
+    with open(os.path.join(ROOT, "BENCH_fleet.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return [Row(
+        f"fleet_throughput/pools{n}/mixedS",
+        fleets[n]["p50_s"] * 1e6,
+        f"samples_per_s={fleets[n]['samples_per_s']:.3f};"
+        f"p95_latency_s={fleets[n]['p95_s']:.3f};"
+        f"completed={fleets[n]['completed']}") for n in POOL_COUNTS]
+
+
+def check(budget: str = "full", threshold: float = 0.25):
+    """Compare fresh scaling ratios against committed BENCH_fleet.json.
+
+    Returns failure strings (empty = pass). The fresh run replays the
+    committed configuration (same trace seed, request count, S menu,
+    slots, trunk size, Poisson rate). The gate is the aggregate
+    samples/s SCALING RATIO per fleet size (x2 = 2 pools / 1 pool, x4 =
+    4 pools / 1 pool): machine speed cancels out of a ratio, a fleet-tier
+    regression (routing imbalance, dispatch stalls, lost overlap) does
+    not. A fresh ratio more than ``threshold`` below the committed one
+    fails; a failing replay is retried ONCE and only reproduced failures
+    fail the gate (the replay interleaving is wall-clock sensitive).
+
+    ``budget`` is accepted for harness symmetry but ignored — a smaller
+    replay would not be comparable to the committed trace.
+    """
+    del budget
+    with open(os.path.join(ROOT, "BENCH_fleet.json")) as f:
+        committed = json.load(f)
+
+    def _replay():
+        _, fleets, _ = run_scaling(
+            n_requests=committed["n_requests"],
+            s_menu=tuple(committed["s_menu"]),
+            slots=committed["slots_per_pool"],
+            dim=committed["state_dim"], hidden=committed["eps_hidden"],
+            rate_per_s=committed["poisson_rate_per_s"])
+        fresh = _ratios(fleets)
+        failures = []
+        for key, old in committed["scaling"].items():
+            new = fresh[key]
+            if new < old * (1.0 - threshold):
+                failures.append(
+                    f"fleet {key} samples/s scaling regressed "
+                    f"{old:.2f} -> {new:.2f} "
+                    f"(-{(1 - new / old) * 100:.0f}% > "
+                    f"{threshold * 100:.0f}% threshold)")
+        return failures
+
+    failures = _replay()
+    if failures:
+        failures = _replay()   # only a reproduced regression fails
+    return failures
+
+
+def smoke() -> int:
+    """Tiny 2-pool replay for scripts/tier1.sh."""
+    params = make_trunk_params(SCH, 256, 256)
+    trace = make_trace(10, (3, 5, 8), 1e9, seed=0)  # burst: both pools fill
+    out = run_fleet(trace, params, 256, n_pools=2, slots=2, seed=0)
+    ok = (out["completed"] == len(trace)
+          and np.isfinite(out["p95_s"])
+          and out["compiled_ticks"] == [1, 1]
+          and min(out["per_pool_completed"]) > 0)
+    print(f"fleet smoke: 2 pools {out['samples_per_s']:.2f}/s "
+          f"p95={out['p95_s']:.3f}s sharded={out['sharded']} "
+          f"per_pool={out['per_pool_completed']} "
+          f"({'OK' if ok else 'FAIL'})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tier-1 replay; exits nonzero on failure")
+    ap.add_argument("--budget", choices=["quick", "full"], default="full")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    print("name,us_per_call,derived")
+    for row in run(args.budget):
+        print(row.csv())

@@ -20,7 +20,12 @@ BENCH_*.json and exits non-zero on regression:
   autoplan   the committed BENCH_autoplan.json no longer claiming that
              the searched plans beat uniform/quadratic tau at equal NFE,
              or a fresh smoke-scale search violating the DP-optimality /
-             bank-roundtrip / plan-cache-reuse invariants.
+             bank-roundtrip / plan-cache-reuse invariants;
+  fleet      a >25% drop of any aggregate samples-per-second scaling
+             ratio (2 pools / 1 pool, 4 pools / 1 pool) against a replay
+             of the committed mixed-S Poisson trace (run under
+             XLA_FLAGS=--xla_force_host_platform_device_count=8 for the
+             sharded pool meshes).
 
 Both gates are wired into scripts/tier1.sh so hot-path and serving
 regressions can't land silently.
@@ -59,9 +64,11 @@ SUITES = {
     "sampler": ["benchmarks.sampler_overhead"],
     "scheduler": ["benchmarks.scheduler_throughput"],
     "autoplan": ["benchmarks.autoplan_search"],
+    "fleet": ["benchmarks.fleet_throughput"],
     "all": PAPER_MODULES + ["benchmarks.sampler_overhead",
                             "benchmarks.scheduler_throughput",
-                            "benchmarks.autoplan_search"],
+                            "benchmarks.autoplan_search",
+                            "benchmarks.fleet_throughput"],
 }
 
 # suites whose run() rewrites a committed BENCH_*.json (and so support
@@ -70,7 +77,8 @@ RECORDING = {"sampler": ("benchmarks.sampler_overhead", "BENCH_sampler.json"),
              "scheduler": ("benchmarks.scheduler_throughput",
                            "BENCH_scheduler.json"),
              "autoplan": ("benchmarks.autoplan_search",
-                          "BENCH_autoplan.json")}
+                          "BENCH_autoplan.json"),
+             "fleet": ("benchmarks.fleet_throughput", "BENCH_fleet.json")}
 
 
 def _history_entry(root: str) -> str:
@@ -101,6 +109,17 @@ def _history_entry(root: str) -> str:
             lines.append(
                 f"- scheduler/{p}: {r['samples_per_s']:.2f} samples/s, "
                 f"p95 {r['p95_s']:.3f} s, net evals {r['net_evals']}")
+    fp = os.path.join(root, "BENCH_fleet.json")
+    if os.path.exists(fp):
+        with open(fp) as f:
+            bench = json.load(f)
+        for n, r in sorted(bench["fleets"].items(), key=lambda kv:
+                           int(kv[0])):
+            lines.append(
+                f"- fleet/pools={n}: {r['samples_per_s']:.2f} samples/s, "
+                f"p95 {r['p95_s']:.3f} s"
+                + (f" (x{r['samples_per_s'] / bench['fleets']['1']['samples_per_s']:.2f} vs 1 pool)"
+                   if n != "1" else ""))
     ap_ = os.path.join(root, "BENCH_autoplan.json")
     if os.path.exists(ap_):
         with open(ap_) as f:

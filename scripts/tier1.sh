@@ -26,3 +26,14 @@ python -m benchmarks.run --suite scheduler --check
 # a fresh smoke-scale search must hold the DP-optimality / bank-roundtrip /
 # plan-cache-reuse invariants (ISSUE 5)
 python -m benchmarks.run --suite autoplan --check
+# fleet tier (ISSUE 6): mesh-parallel pools need simulated host devices —
+# run the sharded/multi-device fleet tests and the fleet smoke under a
+# forced 8-device CPU topology (single-device runs skip those cases)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_fleet.py
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.fleet_throughput --smoke
+# fleet regression gate: replay the committed 1/2/4-pool Poisson trace —
+# fails on >25% drop of any aggregate samples/s scaling ratio (x2, x4)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.run --suite fleet --check

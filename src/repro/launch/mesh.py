@@ -17,10 +17,52 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1):
-    """Tiny mesh over the real local devices (CPU smoke / examples)."""
+    """Tiny mesh over the real local devices (CPU smoke / examples).
+
+    Works on the forced-multi-device CPU path too: run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` and the N
+    simulated host devices form the ("data", "model") mesh.
+    """
     n = len(jax.devices())
-    assert n % model == 0
+    if model < 1 or n % model:
+        raise ValueError(
+            f"local device count {n} is not divisible by model={model}; "
+            f"pick a model-axis size that divides {n} (e.g. force more "
+            "host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=<k*model>)")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_fleet_mesh(n_pools: int, model: int = 1):
+    """Split the local devices into ``n_pools`` disjoint pool meshes.
+
+    Each pool gets its own ("data", "model") mesh over a contiguous,
+    non-overlapping slice of ``jax.devices()`` — the device-level view of
+    a data-parallel slot-pool fleet (serving/fleet): tensor/data sharding
+    INSIDE a pool, pure data parallelism ACROSS pools. Returns a list of
+    ``n_pools`` meshes. CPU simulation recipe: force 8 host devices and
+    ``make_fleet_mesh(2, model=2)`` yields two (2, 2) pool meshes.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs)
+    if n_pools < 1 or n % n_pools:
+        raise ValueError(
+            f"local device count {n} is not divisible by n_pools="
+            f"{n_pools}; pick a pool count that divides {n} (e.g. force "
+            "more host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"<k*{n_pools}>)")
+    per = n // n_pools
+    if model < 1 or per % model:
+        raise ValueError(
+            f"per-pool device count {per} (= {n} devices / {n_pools} "
+            f"pools) is not divisible by model={model}")
+    return [Mesh(np.asarray(devs[p * per:(p + 1) * per])
+                 .reshape(per // model, model), ("data", "model"))
+            for p in range(n_pools)]
 
 
 # Hardware constants for the roofline analysis (TPU v5e)

@@ -134,6 +134,9 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
                   f"{sorted(map(str, uniq))}; engine serves only its "
                   f"clip_x0={clip_x0} rows")
     schedule = svc.schedule
+    if args.pools > 1:
+        return serve_unet_fleet(args, svc, stochastic=stochastic,
+                                max_order=max_order, clip_x0=clip_x0)
     eng = svc.continuous(slots=args.slots, stochastic=stochastic,
                          max_order=max_order, clip_x0=clip_x0)
 
@@ -206,6 +209,63 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
         print(f"saved -> {args.out}")
 
 
+def serve_unet_fleet(args, svc: DiffusionSampler, *, stochastic,
+                     max_order, clip_x0):
+    """--pools N: the mixed-S stream through a slot-pool fleet.
+
+    N continuous-batching pools behind the global EDF queue with
+    least-loaded dispatch (serving/fleet). When the local device count
+    divides evenly, each pool runs on its own disjoint mesh slice
+    (launch.mesh.make_fleet_mesh) — force host devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 to see sharded
+    pools on CPU. Requests cycle an affinity key to exercise sticky
+    routing; per-pool stats print at the end.
+    """
+    from repro.serving.fleet import PoolFleet
+
+    s_mix = [int(s) for s in args.s_mix.split(",")]
+    meshes = None
+    n_dev = len(jax.devices())
+    if n_dev >= 2 * args.pools and n_dev % args.pools == 0:
+        from repro.launch.mesh import make_fleet_mesh
+        meshes = make_fleet_mesh(args.pools)
+    fleet = PoolFleet.build(
+        svc.schedule, svc.eps_fn,
+        (args.image_size, args.image_size, 3), n_pools=args.pools,
+        slots=args.slots, meshes=meshes, dtype=svc.dtype,
+        stochastic=stochastic, max_order=max_order, clip_x0=clip_x0,
+        plan_bank=svc.plan_bank)
+    # warm every pool's tick before stamping latencies
+    fleet.serve([SampleRequest(request_id=-1 - p, S=min(s_mix), seed=0)
+                 for p in range(args.pools)], now=0.0)
+    for p in fleet.pools:
+        p.engine.reset_stats()
+    reqs = [SampleRequest(request_id=i, S=s_mix[i % len(s_mix)],
+                          eta=args.eta, seed=args.seed + i,
+                          affinity_key=i % (2 * args.pools))
+            for i in range(args.n_samples)]
+    results = fleet.serve(reqs)
+    for r in sorted(results, key=lambda r: r.request_id):
+        print(f"req{r.request_id}: S={r.S} pool={r.pool_id} "
+              f"wait={r.queue_wait_s*1e3:.1f}ms "
+              f"latency={r.latency_s*1e3:.1f}ms")
+    st = fleet.stats()
+    print(f"fleet: {st['completed']} done across {st['n_pools']} pools "
+          f"(occupancy={st['occupancy']:.2f}, dropped={st['dropped']})")
+    for ps in st["pools"]:
+        mesh = ps["mesh"] or "unsharded"
+        print(f"  pool {ps['pool_id']}: {ps['completed']} done, "
+              f"{ps['ticks']} ticks, ewma="
+              + (f"{ps['tick_ewma_s']*1e3:.1f}ms"
+                 if ps["tick_ewma_s"] else "n/a")
+              + f", compiled_ticks={ps['compiled_ticks']}, mesh={mesh}")
+    if args.out:
+        done = [r for r in sorted(results, key=lambda r: r.request_id)
+                if r.x0 is not None]
+        np.save(args.out, np.stack([r.x0 for r in done]))
+        print(f"saved -> {args.out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -230,7 +290,13 @@ def main():
     ap.add_argument("--scheduler", action="store_true",
                     help="serve through the continuous-batching scheduler")
     ap.add_argument("--slots", type=int, default=4,
-                    help="resident scheduler slots (--scheduler)")
+                    help="resident scheduler slots (--scheduler; per pool "
+                    "with --pools)")
+    ap.add_argument("--pools", type=int, default=1,
+                    help="with --scheduler: serve through a fleet of N "
+                    "slot pools (global EDF queue + least-loaded/affinity "
+                    "routing; disjoint pool meshes when the device count "
+                    "divides)")
     ap.add_argument("--s-mix", default="10,20,50",
                     help="comma list of per-request step budgets to cycle")
     ap.add_argument("--plan-bank", default=None,

@@ -1,7 +1,8 @@
 from .engine import ARGenerator, DiffusionSampler, GenRequest, GenResult
+from .fleet import PoolFleet, PoolState, SlotPool
 from .scheduler import (AdmissionQueue, ContinuousBatchingEngine,
                         SampleRequest, SampleResult)
 
 __all__ = ["ARGenerator", "AdmissionQueue", "ContinuousBatchingEngine",
-           "DiffusionSampler", "GenRequest", "GenResult", "SampleRequest",
-           "SampleResult"]
+           "DiffusionSampler", "GenRequest", "GenResult", "PoolFleet",
+           "PoolState", "SampleRequest", "SampleResult", "SlotPool"]

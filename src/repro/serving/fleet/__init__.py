@@ -1,0 +1,21 @@
+"""Data-parallel slot-pool fleet with mesh-sharded eps trunks.
+
+The serving scale-out tier: N independent continuous-batching slot pools
+(each one compiled tick, optionally running its eps trunk under
+shard_map/GSPMD on its own ("data","model") mesh) behind a global EDF
+admission queue with affinity / least-loaded routing, graceful
+drain/refill, and aggregated stats. See docs/fleet.md.
+"""
+from .fleet import PoolFleet
+from .pool import PoolState, SlotPool
+from .router import affinity_pool, pick_pool
+from .sharded import (make_sharded_eps, make_trunk_params,
+                      make_unsharded_eps, sharded_eps_from_apply,
+                      trunk_apply)
+
+__all__ = [
+    "PoolFleet", "PoolState", "SlotPool",
+    "affinity_pool", "pick_pool",
+    "make_trunk_params", "trunk_apply", "make_unsharded_eps",
+    "make_sharded_eps", "sharded_eps_from_apply",
+]

@@ -1,0 +1,225 @@
+"""PoolFleet — N data-parallel slot pools behind one admission tier.
+
+The production topology for DDIM serving (ROADMAP open item 2): the
+continuous-batching engine is ONE slot pool; a fleet runs N of them —
+each with its own compiled tick, its own (optionally mesh-sharded) eps
+trunk, its own device set — behind a single front door:
+
+* **Global EDF queue.** Requests land in one earliest-deadline-first
+  admission queue. The fleet only moves a request to a pool when that
+  pool can actually take it (free slot not already spoken for), so
+  deadline order is decided globally, not per-backend.
+* **Routing.** Per popped request the router (serving/fleet/router)
+  picks a pool: affinity key first (sticky, deterministic), else
+  least-loaded by per-pool tick-EWMA-weighted backlog.
+* **Per-pool deadline-aware admission.** auto_plan bank selection runs
+  at the DESTINATION pool's local pop (queue.py's select hook) with that
+  pool's tick EWMA — a slow pool picks fewer steps for the same deadline
+  than a fast one (tested with a virtual clock in tests/test_fleet.py).
+* **Drain / refill.** ``drain_pool`` gracefully retires a pool: queued
+  work re-enters the global queue (submit stamps preserved), residents
+  finish in place, the pool parks STOPPED; ``restore_pool`` makes it
+  routable again. Weight hot-swap / upgrades happen behind this.
+* **Aggregated stats.** ``stats()`` sums the fleet counters and carries
+  every pool's own stats (pool_id, tick_ewma_s, queue depth, drained
+  counts) for observability.
+
+Pools must be capability-homogeneous (same schedule, shape, clip,
+stochasticity, max_order, dtype) — a request the fleet accepts must be
+servable by EVERY pool, or routing decisions would change semantics.
+Heterogeneous capabilities belong in separate fleets behind a model
+router (ROADMAP open item 5).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.schedules import NoiseSchedule
+from repro.serving.scheduler import ContinuousBatchingEngine
+from repro.serving.scheduler.queue import AdmissionQueue
+from repro.serving.scheduler.request import SampleRequest, SampleResult
+
+from .pool import SlotPool
+from .router import pick_pool
+
+
+class PoolFleet:
+    """N slot pools, one global EDF admission tier."""
+
+    def __init__(self, pools: Sequence[SlotPool],
+                 max_queue: Optional[int] = None):
+        if not pools:
+            raise ValueError("a fleet needs at least one pool")
+        self.pools = list(pools)
+        ref = self.pools[0].engine
+        for p in self.pools[1:]:
+            e = p.engine
+            same = (e.schedule is ref.schedule
+                    and e.shape == ref.shape and e.dtype == ref.dtype
+                    and e.stochastic == ref.stochastic
+                    and e.clip_x0 == ref.clip_x0
+                    and e.max_order == ref.max_order)
+            if not same:
+                raise ValueError(
+                    f"pool {p.pool_id} differs from pool "
+                    f"{self.pools[0].pool_id} in serving capabilities "
+                    "(schedule/shape/dtype/stochastic/clip/max_order); "
+                    "fleet pools must be homogeneous")
+        self.queue = AdmissionQueue(max_queue)
+        self.dropped = 0              # dropped at the FLEET tier
+        self.drained_requests = 0     # re-routed by pool drains
+
+    # ------------------------------------------------------- construction
+    @classmethod
+    def build(cls, schedule: NoiseSchedule, eps_fn, sample_shape,
+              *, n_pools: int, slots: int, meshes: Optional[Sequence] = None,
+              max_queue: Optional[int] = None, **engine_kw) -> "PoolFleet":
+        """Build n_pools homogeneous pools over one model.
+
+        ``eps_fn`` is either a plain eps callable shared by every pool,
+        or a FACTORY ``f(pool_id, mesh) -> eps_fn`` (the sharded-trunk
+        path: each pool places its weights on its own mesh — see
+        serving.fleet.sharded and launch.mesh.make_fleet_mesh).
+        ``meshes`` gives pool i its mesh (None entries = unsharded).
+        """
+        if meshes is not None and len(meshes) != n_pools:
+            raise ValueError(f"got {len(meshes)} meshes for {n_pools} "
+                             "pools")
+        meshes = list(meshes) if meshes is not None else [None] * n_pools
+        factory = _is_factory(eps_fn)
+        pools = []
+        for pid in range(n_pools):
+            fn = eps_fn(pid, meshes[pid]) if factory else eps_fn
+            eng = ContinuousBatchingEngine(
+                schedule, fn, sample_shape, slots, mesh=meshes[pid],
+                pool_id=pid, **engine_kw)
+            pools.append(SlotPool(pid, eng))
+        return cls(pools, max_queue=max_queue)
+
+    # ---------------------------------------------------------- admission
+    def submit(self, req: SampleRequest,
+               now: Optional[float] = None) -> bool:
+        """Enqueue into the global EDF queue; False = back-pressure."""
+        # pools are homogeneous: one pool's capability check stands for all
+        self.pools[0].engine.validate_request(req)
+        now = time.perf_counter() if now is None else now
+        return self.queue.submit(req, now)
+
+    def dispatch(self, now: float) -> List[SampleResult]:
+        """Move queued requests to pools while capacity exists.
+
+        Pops in global EDF order; expired requests drop here (never
+        spending a slot anywhere). auto_plan selection does NOT happen at
+        this tier — the destination pool fills the plan at its own
+        admission with its own tick EWMA.
+        """
+        results: List[SampleResult] = []
+        while len(self.queue) and any(p.capacity > 0 for p in self.pools):
+            req, missed = self.queue.pop(now)
+            for m in missed:
+                self.dropped += 1
+                results.append(SampleResult.drop(m, now))
+            if req is None:
+                break
+            pool = pick_pool(self.pools, req)
+            if pool is None:      # raced out of capacity: requeue, stop
+                self.queue.submit(req, now)
+                self.queue.submitted -= 1   # a re-queue, not a new arrival
+                break
+            pool.dispatch(req, now)
+        return results
+
+    # --------------------------------------------------------------- loop
+    @property
+    def active(self) -> int:
+        return sum(p.engine.active for p in self.pools)
+
+    @property
+    def busy(self) -> bool:
+        return len(self.queue) > 0 or any(p.busy for p in self.pools)
+
+    def tick(self, now: Optional[float] = None) -> List[SampleResult]:
+        """One fleet round: dispatch, then advance every busy pool."""
+        wall = now is None
+        t = time.perf_counter() if wall else now
+        results = self.dispatch(t)
+        for p in self.pools:
+            results.extend(p.tick(None if wall else now))
+        return results
+
+    def run(self, max_ticks: Optional[int] = None,
+            now_fn: Optional[Callable[[], float]] = None
+            ) -> List[SampleResult]:
+        """Tick until the global queue and every pool drain."""
+        results: List[SampleResult] = []
+        n = 0
+        while self.busy:
+            if max_ticks is not None and n >= max_ticks:
+                break
+            results.extend(self.tick(now_fn() if now_fn else None))
+            n += 1
+        return results
+
+    def serve(self, requests: Sequence[SampleRequest],
+              now: Optional[float] = None) -> List[SampleResult]:
+        """Submit a request list and drain the fleet (one-call entry)."""
+        results: List[SampleResult] = []
+        for r in requests:
+            if not self.submit(r, now=now):
+                t = time.perf_counter() if now is None else now
+                r.submit_t = t if r.submit_t is None else r.submit_t
+                self.dropped += 1
+                results.append(SampleResult.drop(r, t, missed=False))
+        results.extend(self.run())
+        return results
+
+    # ---------------------------------------------------- pool lifecycle
+    def drain_pool(self, pool_id: int,
+                   now: Optional[float] = None) -> int:
+        """Gracefully drain one pool; returns how many queued requests
+        were re-routed through the global queue."""
+        now = time.perf_counter() if now is None else now
+        pending = self.pools[pool_id].drain()
+        for r in pending:
+            self.queue.submit(r, now)       # submit_t already stamped
+            self.queue.submitted -= 1       # a re-route, not a new arrival
+        self.drained_requests += len(pending)
+        return len(pending)
+
+    def restore_pool(self, pool_id: int) -> None:
+        """Refill path: make a drained/stopped pool routable again."""
+        self.pools[pool_id].restore()
+
+    # ------------------------------------------------------------- stats
+    def stats(self) -> Dict:
+        per_pool = [p.stats() for p in self.pools]
+        ticks = sum(s["ticks"] for s in per_pool)
+        slot_steps = sum(s["slot_steps"] for s in per_pool)
+        cap = sum(s["ticks"] * s["slots"] for s in per_pool)
+        return {
+            "n_pools": len(self.pools),
+            "queued": len(self.queue),
+            "queue_rejected": self.queue.rejected,
+            "completed": sum(s["completed"] for s in per_pool),
+            "dropped": self.dropped + sum(s["dropped"] for s in per_pool),
+            "drained_requests": self.drained_requests,
+            "ticks": ticks,
+            "slot_steps": slot_steps,
+            "occupancy": slot_steps / max(cap, 1),
+            "tick_ewma_s": {s["pool_id"]: s["tick_ewma_s"]
+                            for s in per_pool},
+            "pools": per_pool,
+        }
+
+
+def _is_factory(fn) -> bool:
+    """An eps argument is a pool factory iff it takes (pool_id, mesh)."""
+    import inspect
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+    names = [p for p in params.values()
+             if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    return len(names) == 2 and names[0].name in ("pool_id", "pid")

@@ -1,0 +1,109 @@
+"""SlotPool — one continuous-batching engine as a fleet backend.
+
+The control-plane/backend split (cf. the pie inference engine): the pool
+owns LIFECYCLE (active / draining / stopped) and load telemetry; the
+wrapped :class:`ContinuousBatchingEngine` owns the hot loop. A pool never
+changes how the engine computes — drain only stops NEW work from being
+routed here, residents finish on their own trajectories and the engine's
+one compiled tick keeps serving them.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Dict, List, Optional
+
+from repro.serving.scheduler import ContinuousBatchingEngine
+from repro.serving.scheduler.request import SampleRequest, SampleResult
+
+
+class PoolState(enum.Enum):
+    ACTIVE = "active"        # routable: accepts dispatches
+    DRAINING = "draining"    # finishing residents; accepts nothing new
+    STOPPED = "stopped"      # drained dry; engine idle (weights resident)
+
+
+class SlotPool:
+    """Lifecycle + telemetry wrapper around one engine (one slot pool)."""
+
+    def __init__(self, pool_id: int, engine: ContinuousBatchingEngine):
+        engine.pool_id = pool_id
+        self.pool_id = pool_id
+        self.engine = engine
+        self.state = PoolState.ACTIVE
+        self.drained_requests = 0     # queued work handed back at drain
+
+    # -------------------------------------------------------------- load
+    @property
+    def accepting(self) -> bool:
+        return self.state is PoolState.ACTIVE
+
+    @property
+    def capacity(self) -> int:
+        """Dispatchable headroom (free slots minus already-queued work)."""
+        return self.engine.capacity if self.accepting else 0
+
+    @property
+    def busy(self) -> bool:
+        return self.engine.active > 0 or len(self.engine.queue) > 0
+
+    @property
+    def tick_ewma_s(self) -> Optional[float]:
+        return self.engine.tick_ewma_s
+
+    def load_eta_s(self, default_tick_s: float = 0.0) -> float:
+        """Estimated seconds to absorb this pool's backlog — the
+        least-loaded router's ranking key: remaining resident + queued
+        steps, spread over the pool's slots, at the pool's measured
+        tick EWMA (``default_tick_s`` before the first measurement)."""
+        tick = (self.tick_ewma_s if self.tick_ewma_s is not None
+                else default_tick_s)
+        backlog_ticks = self.engine.pending_steps() / max(
+            self.engine.slots, 1)
+        return backlog_ticks * tick
+
+    # --------------------------------------------------------- lifecycle
+    def dispatch(self, req: SampleRequest, now: float) -> bool:
+        """Route one request into this pool's local admission queue."""
+        if not self.accepting:
+            raise RuntimeError(
+                f"pool {self.pool_id} is {self.state.value}; the router "
+                "must not dispatch to a non-active pool")
+        return self.engine.submit(req, now=now)
+
+    def drain(self) -> List[SampleRequest]:
+        """Begin graceful drain: stop accepting, hand back queued work.
+
+        Resident requests keep ticking to completion (their state lives
+        in this pool's slot tile); un-admitted queued requests are
+        returned for re-routing. The pool parks at STOPPED once dry.
+        """
+        self.state = PoolState.DRAINING
+        pending = self.engine.queue.drain_pending()
+        self.drained_requests += len(pending)
+        self._maybe_stop()
+        return pending
+
+    def restore(self) -> None:
+        """Reactivate a draining/stopped pool (refill: routable again)."""
+        self.state = PoolState.ACTIVE
+
+    def _maybe_stop(self) -> None:
+        if self.state is PoolState.DRAINING and not self.busy:
+            self.state = PoolState.STOPPED
+
+    # -------------------------------------------------------------- loop
+    def tick(self, now: Optional[float] = None) -> List[SampleResult]:
+        """Advance the pool one engine tick (no-op when idle)."""
+        if not self.busy:
+            self._maybe_stop()
+            return []
+        results = self.engine.tick(now)
+        self._maybe_stop()
+        return results
+
+    def stats(self) -> Dict:
+        st = self.engine.stats()
+        st["state"] = self.state.value
+        st["drained_requests"] = self.drained_requests
+        st["pending_steps"] = self.engine.pending_steps()
+        return st

@@ -1,0 +1,51 @@
+"""Routing policies for the slot-pool fleet dispatch tier.
+
+The fleet pops requests from its global EDF queue and asks the router
+which ACTIVE pool takes each one. Two signals:
+
+* **affinity** — requests carrying the same ``affinity_key`` (a session /
+  user / prompt-cache key) prefer the same pool, via a deterministic
+  hash over the POOL COUNT (stable across runs and processes — no Python
+  hash randomization). A draining or full preferred pool falls back to
+  least-loaded: stickiness is a preference, not a guarantee.
+* **least-loaded** — rank pools by estimated backlog-absorption time:
+  remaining resident + queued steps over the pool's slots, at the pool's
+  OWN measured tick EWMA. Before any pool has a measurement the fleet
+  mean (or a neutral constant) stands in, so a half-warmed fleet doesn't
+  starve the unmeasured pools.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import List, Optional, Sequence
+
+from .pool import SlotPool
+
+
+def affinity_pool(key, n_pools: int) -> int:
+    """Deterministic affinity_key -> preferred pool index."""
+    return zlib.crc32(repr(key).encode()) % n_pools
+
+
+def _default_tick_s(pools: Sequence[SlotPool]) -> float:
+    known = [p.tick_ewma_s for p in pools if p.tick_ewma_s is not None]
+    return sum(known) / len(known) if known else 1.0
+
+
+def pick_pool(pools: Sequence[SlotPool], req) -> Optional[SlotPool]:
+    """The dispatch decision for one popped request.
+
+    Returns None when no active pool has capacity (the fleet stops
+    popping — the request stays in the global EDF queue rather than
+    deep-queueing behind one backend, which would re-order deadlines).
+    """
+    cands: List[SlotPool] = [p for p in pools if p.capacity > 0]
+    if not cands:
+        return None
+    key = getattr(req, "affinity_key", None)
+    if key is not None:
+        pref = pools[affinity_pool(key, len(pools))]
+        if pref.capacity > 0:
+            return pref
+    default = _default_tick_s(pools)
+    return min(cands, key=lambda p: (p.load_eta_s(default), p.pool_id))

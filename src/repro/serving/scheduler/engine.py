@@ -131,6 +131,18 @@ class ContinuousBatchingEngine:
       tick_ewma_alpha: smoothing factor for the per-tick latency EWMA
         that feeds the selection policy (``stats()['tick_ewma_s']``);
         0.0 freezes a seeded ``tick_ewma_s`` (virtual-clock replays).
+      mesh: a ``("data", "model")`` jax.sharding.Mesh this pool's tick
+        runs on (serving/fleet). The (R, 256) slot-tile state (and the
+        multistep eps-history stack) shards its row dimension over the
+        mesh's data axes when divisible; the eps trunk is expected to
+        carry mesh-placed weights (see serving.fleet.sharded — name-based
+        rules from sharding/rules.py under shard_map, or GSPMD via
+        NamedSharding). Output shardings are pinned inside the tick so
+        the state round-trips with a STABLE sharding — the one-trace-per-
+        engine contract holds under a mesh too. None = single-device
+        placement (the default, bit-identical to pre-fleet behavior).
+      pool_id: fleet identity surfaced in ``stats()`` and stamped on
+        every SampleResult this engine produces.
     """
 
     def __init__(self, schedule: NoiseSchedule, eps_fn: Callable,
@@ -143,7 +155,8 @@ class ContinuousBatchingEngine:
                  interpret: Optional[bool] = None,
                  use_mega: Optional[bool] = None,
                  plan_bank=None, select_margin: float = 0.9,
-                 tick_ewma_alpha: float = 0.2):
+                 tick_ewma_alpha: float = 0.2,
+                 mesh=None, pool_id: Optional[int] = None):
         from repro.kernels.sampler_step import ops as tile_ops
 
         if not 1 <= max_order <= MAX_ORDER:
@@ -180,15 +193,39 @@ class ContinuousBatchingEngine:
                     "than this engine serves — re-search or load the "
                     "matching bank")
 
+        self.mesh = mesh
+        self.pool_id = pool_id
         self.use_mega = self._resolve_mega(use_mega)
         self._n = int(np.prod(self.shape))
         self._rps = tile_ops.slot_rows(self.shape)
         self._tile_c = tile_ops.TILE_C
         self._x2 = jnp.zeros((self.slots * self._rps, self._tile_c), dtype)
+        self._state_sharding = None
+        if mesh is not None:
+            # the (R, 256) slot-tile state shards its ROW dim over the
+            # mesh's data axes (rows belong to slots — pure data
+            # parallelism); indivisible row counts replicate. The sharding
+            # is pinned on the tick's outputs too (_constrain), so the
+            # jit cache sees ONE stable (aval, sharding) signature and the
+            # zero-retrace contract survives the mesh.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.sharding import data_axes
+            axes = data_axes(mesh)
+            dsize = int(np.prod([mesh.shape[a] for a in axes]))
+            rows = self.slots * self._rps
+            spec = P(axes if dsize > 1 and rows % dsize == 0 else None,
+                     None)
+            self._state_sharding = NamedSharding(mesh, spec)
+            self._x2 = jax.device_put(self._x2, self._state_sharding)
         # shared eps-history stack for the multistep tick (fp32 policy)
         self._hist2 = (jnp.zeros((self.max_order - 1,) + self._x2.shape,
                                  jnp.float32)
                        if self.max_order > 1 else None)
+        if self._hist2 is not None and mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            self._hist_sharding = NamedSharding(
+                mesh, P(None, *self._state_sharding.spec))
+            self._hist2 = jax.device_put(self._hist2, self._hist_sharding)
         self._slots: List[Optional[_Slot]] = [None] * self.slots
         self._free: List[int] = list(range(self.slots))[::-1]
         self.queue = AdmissionQueue(max_queue)
@@ -246,6 +283,23 @@ class ContinuousBatchingEngine:
             raise ValueError(f"use_mega=True but {why}")
         return False
 
+    def _constrain(self, arr2):
+        """Pin an (R, C)-shaped tick output to the slot-state sharding.
+
+        No-op off-mesh. On a mesh this keeps the state's sharding STABLE
+        across ticks (GSPMD would otherwise be free to hand back a
+        replicated result, and the next tick's changed input sharding
+        would re-trace).
+        """
+        if self._state_sharding is None or arr2 is None:
+            return arr2
+        return jax.lax.with_sharding_constraint(arr2, self._state_sharding)
+
+    def _constrain_hist(self, hist2):
+        if self._state_sharding is None or hist2 is None:
+            return hist2
+        return jax.lax.with_sharding_constraint(hist2, self._hist_sharding)
+
     def _make_tick(self):
         shape = self.shape
 
@@ -258,9 +312,9 @@ class ContinuousBatchingEngine:
                 self._traces += 1   # host side effect: fires once per trace
                 row_coefs = tile_ops.expand_slot_coefs(
                     states.coef_matrix(), rps)
-                return mega_ops.megastep_rows(
+                return self._constrain(mega_ops.megastep_rows(
                     x2, spec, row_coefs, states.t, clip=self.clip_x0,
-                    interpret=self.interpret)
+                    interpret=self.interpret))
 
             kw = dict(donate_argnums=(0,)) if self.donate else {}
             return jax.jit(tick, **kw)
@@ -268,28 +322,38 @@ class ContinuousBatchingEngine:
         if self.max_order == 1:
             def tick(x2, states):
                 self._traces += 1   # host side effect: fires once per trace
-                return slot_tile_step(
+                out = slot_tile_step(
                     self.eps_fn, x2, states, shape, clip_x0=self.clip_x0,
                     stochastic=self.stochastic, want_x0=self.preview,
                     hw_prng=self.hw_prng, interpret=self.interpret)
+                if self.preview:
+                    return (self._constrain(out[0]),
+                            self._constrain(out[1]))
+                return self._constrain(out)
 
             kw = dict(donate_argnums=(0,)) if self.donate else {}
             return jax.jit(tick, **kw)
 
         def tick(x2, hist2, states):
             self._traces += 1       # host side effect: fires once per trace
-            return slot_tile_step(
+            out, new_hist2 = slot_tile_step(
                 self.eps_fn, x2, states, shape, hist2=hist2,
                 clip_x0=self.clip_x0, stochastic=self.stochastic,
                 want_x0=self.preview, hw_prng=self.hw_prng,
                 interpret=self.interpret)
+            if self.preview:
+                out = (self._constrain(out[0]), self._constrain(out[1]))
+            else:
+                out = self._constrain(out)
+            return out, self._constrain_hist(new_hist2)
 
         kw = dict(donate_argnums=(0, 1)) if self.donate else {}
         return jax.jit(tick, **kw)
 
     def _make_write(self):
         def write(x2, xT2, row0):
-            return jax.lax.dynamic_update_slice(x2, xT2, (row0, 0))
+            return self._constrain(
+                jax.lax.dynamic_update_slice(x2, xT2, (row0, 0)))
 
         kw = dict(donate_argnums=(0,)) if self.donate else {}
         return jax.jit(write, **kw)
@@ -333,9 +397,13 @@ class ContinuousBatchingEngine:
                 f"engine max_order={self.max_order} (build the engine with "
                 "max_order >= the largest solver order it must serve)")
 
-    def submit(self, req: SampleRequest,
-               now: Optional[float] = None) -> bool:
-        """Enqueue a request; False means rejected (queue back-pressure)."""
+    def validate_request(self, req: SampleRequest) -> None:
+        """Raise if this engine can never serve ``req`` (capability check).
+
+        Shared with the fleet tier: a PoolFleet validates against one pool
+        at submit (pools are capability-homogeneous) so an unservable
+        request fails loudly at the front door, not at dispatch.
+        """
         if req.auto_plan:
             if req.plan is not None:
                 raise ValueError(
@@ -362,6 +430,11 @@ class ContinuousBatchingEngine:
             if not 1 <= req.steps <= self.schedule.T:
                 raise ValueError(f"request {req.request_id}: S={req.steps} "
                                  f"outside [1, T={self.schedule.T}]")
+
+    def submit(self, req: SampleRequest,
+               now: Optional[float] = None) -> bool:
+        """Enqueue a request; False means rejected (queue back-pressure)."""
+        self.validate_request(req)
         now = time.perf_counter() if now is None else now
         return self.queue.submit(req, now)
 
@@ -393,30 +466,44 @@ class ContinuousBatchingEngine:
     def active(self) -> int:
         return self.slots - len(self._free)
 
+    @property
+    def capacity(self) -> int:
+        """Dispatchable headroom: free slots not already spoken for by the
+        local queue (what a fleet router may send without deep-queueing
+        behind this pool)."""
+        return max(len(self._free) - len(self.queue), 0)
+
+    def pending_steps(self) -> int:
+        """Remaining step budget resident + queued (the router's load
+        signal). Queued ``auto_plan`` requests count their S field — an
+        estimate; the real NFE is picked at admission."""
+        rem = sum(s.req.steps - s.k for s in self._slots if s is not None)
+        rem += sum(r.steps for r in self.queue.pending_requests())
+        return rem
+
     def _drop(self, req: SampleRequest, now: float,
               missed: bool = True) -> SampleResult:
         self.dropped += 1
-        # an auto_plan request dropped before admission never had a plan
-        # selected — report no step budget rather than the dataclass default
-        steps = (None if req.auto_plan and req.plan is None
-                 else req.steps)
-        return SampleResult(request_id=req.request_id, x0=None, S=steps,
-                            eta=req.eta_label, submit_t=req.submit_t,
-                            admit_t=None, finish_t=now,
-                            deadline_missed=missed, dropped=True,
-                            auto_plan=req.auto_plan)
+        return SampleResult.drop(req, now, missed=missed,
+                                 pool_id=self.pool_id)
+
+    def _fill_auto_plan(self, req: SampleRequest, now: float) -> None:
+        """The queue's pop-time ``select`` hook: fill an auto_plan
+        request's plan from the bank using THIS engine's tick EWMA — in a
+        fleet, always the destination pool's estimate, never a global
+        one."""
+        if req.auto_plan and req.plan is None:
+            req.plan = self._select_plan(req, now)
+            self.bank_selected += 1
 
     def _admit(self, now: float, results: List[SampleResult]) -> None:
         while self._free and len(self.queue):
-            req, missed = self.queue.pop(now)
+            req, missed = self.queue.pop(now, select=self._fill_auto_plan)
             results.extend(self._drop(m, now) for m in missed)
             if req is None:
                 break
             headroom = (req.deadline - now if req.deadline is not None
                         else None)
-            if req.auto_plan and req.plan is None:
-                req.plan = self._select_plan(req, now)
-                self.bank_selected += 1
             b = self._free.pop()
             self._slots[b] = _Slot(req=req, table=self._table_for(req),
                                    k=0, admit_t=now, headroom_s=headroom)
@@ -538,7 +625,7 @@ class ContinuousBatchingEngine:
                     admit_t=slot.admit_t, finish_t=now,
                     previews=slot.previews, deadline_missed=missed,
                     deadline_headroom_s=slot.headroom_s,
-                    auto_plan=req.auto_plan))
+                    auto_plan=req.auto_plan, pool_id=self.pool_id))
                 self.completed += 1
                 self._slots[b] = None
                 self._free.append(b)
@@ -587,6 +674,12 @@ class ContinuousBatchingEngine:
     def stats(self) -> Dict:
         denom = max(self.ticks * self.slots, 1)
         return {
+            "pool_id": self.pool_id,
+            "mesh": (None if self.mesh is None
+                     else dict(self.mesh.shape)),
+            "state_sharded": (self._state_sharding is not None
+                              and any(ax is not None for ax in
+                                      self._state_sharding.spec)),
             "slots": self.slots,
             "ticks": self.ticks,
             "slot_steps": self.slot_steps,

@@ -5,13 +5,21 @@ FIFO among themselves), an optional depth bound for back-pressure, and
 expiry at pop time: a request whose deadline has already passed is never
 admitted to a slot — it is returned to the engine as a dropped miss so a
 doomed job cannot waste S network evaluations under overload.
+
+``pop`` accepts a ``select`` hook invoked on the request it is about to
+return: this is where deadline-aware auto-plan selection runs, so the
+latency estimate used is whatever the POPPING engine measures. In a
+slot-pool fleet each pool pops from its own queue and passes its own
+tick-EWMA-backed hook — the DESTINATION pool's estimate, never a global
+one (a fast pool must not inherit a slow pool's conservative NFE pick,
+nor the reverse).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import math
-from typing import List, Optional, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from .request import SampleRequest
 
@@ -41,9 +49,15 @@ class AdmissionQueue:
         self.submitted += 1
         return True
 
-    def pop(self, now: float
+    def pop(self, now: float,
+            select: Optional[Callable[[SampleRequest, float], None]] = None
             ) -> Tuple[Optional[SampleRequest], List[SampleRequest]]:
-        """Next admissible request + any requests that expired un-served."""
+        """Next admissible request + any requests that expired un-served.
+
+        ``select(req, now)`` runs on the request about to be returned —
+        the pop-time hook where an engine fills in an ``auto_plan``
+        request's plan from its bank using ITS OWN tick-EWMA estimate.
+        """
         missed: List[SampleRequest] = []
         while self._heap:
             _, _, req = heapq.heappop(self._heap)
@@ -51,5 +65,23 @@ class AdmissionQueue:
                 missed.append(req)
                 self.expired += 1
                 continue
+            if select is not None:
+                select(req, now)
             return req, missed
         return None, missed
+
+    def pending_requests(self) -> List[SampleRequest]:
+        """Queued requests in EDF order (non-destructive, for load probes)."""
+        return [req for _, _, req in sorted(self._heap)]
+
+    def drain_pending(self) -> List[SampleRequest]:
+        """Remove and return every queued request (EDF order).
+
+        Used by graceful pool drain: un-admitted requests go back to the
+        fleet's global queue instead of waiting on a pool that is shutting
+        down. ``submit_t`` stamps are preserved by re-submission (the queue
+        only stamps unset ones), so latency accounting spans the detour.
+        """
+        out = [req for _, _, req in sorted(self._heap)]
+        self._heap.clear()
+        return out

@@ -45,6 +45,11 @@ class SampleRequest:
     preview_every: int = 0             # stream x0-previews every k ticks
     on_preview: Optional[Callable] = None  # f(request_id, step_k, x0: np)
     submit_t: Optional[float] = None   # stamped by the admission queue
+    affinity_key: Optional[int] = None  # fleet routing: requests sharing a
+    #                                     key prefer the same slot pool
+    #                                     (session/user stickiness); falls
+    #                                     back to least-loaded when that
+    #                                     pool is draining or full
 
     @property
     def stochastic(self) -> bool:
@@ -107,6 +112,24 @@ class SampleResult:
     # whether the plan came from the bank.
     deadline_headroom_s: Optional[float] = None
     auto_plan: bool = False
+    pool_id: Optional[int] = None      # which slot pool served it (fleet);
+    #                                     None = single engine, or dropped
+    #                                     at the fleet tier before routing
+
+    @classmethod
+    def drop(cls, req: SampleRequest, now: float, *, missed: bool = True,
+             pool_id: Optional[int] = None) -> "SampleResult":
+        """The result record for a request that never ran.
+
+        An ``auto_plan`` request dropped before admission never had a plan
+        selected, so it reports no step budget rather than the dataclass
+        default S.
+        """
+        steps = (None if req.auto_plan and req.plan is None else req.steps)
+        return cls(request_id=req.request_id, x0=None, S=steps,
+                   eta=req.eta_label, submit_t=req.submit_t, admit_t=None,
+                   finish_t=now, deadline_missed=missed, dropped=True,
+                   auto_plan=req.auto_plan, pool_id=pool_id)
 
     @property
     def nfe(self) -> Optional[int]:

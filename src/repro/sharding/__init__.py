@@ -1,5 +1,7 @@
 from .rules import (spec_for_param, shard_params, shard_batch, shard_cache,
-                    spec_for_cache, batch_spec, data_axes, replicated)
+                    spec_for_cache, batch_spec, data_axes, replicated,
+                    rule_for, replicate_allowed)
 
 __all__ = ["spec_for_param", "shard_params", "shard_batch", "shard_cache",
-           "spec_for_cache", "batch_spec", "data_axes", "replicated"]
+           "spec_for_cache", "batch_spec", "data_axes", "replicated",
+           "rule_for", "replicate_allowed"]

@@ -44,6 +44,13 @@ _RULES = [
     (r"/w_krope$", (None, None)),
     (r"/w_uk$", _COL2),
     (r"/w_uv$", _COL2),
+    # --- MoE router + expert weights (expert dim leads the base array).
+    # These MUST precede the generic FFN rules: first match wins, and the
+    # expert-parallel spec would otherwise be shadowed by /w_gate$ etc.
+    (r"/router$", (None, None)),
+    (r"/moe/w_gate$", ("model", None, None)),
+    (r"/moe/w_up$", ("model", None, None)),
+    (r"/moe/w_down$", ("model", None, None)),
     # --- FFN
     (r"/w_gate$", _COL2),
     (r"/w_up$", _COL2),
@@ -51,11 +58,6 @@ _RULES = [
     (r"/sw_gate$", _COL2),
     (r"/sw_up$", _COL2),
     (r"/sw_down$", _ROW2),
-    # --- MoE router + expert weights (expert dim leads the base array)
-    (r"/router$", (None, None)),
-    (r"/moe/w_gate$", ("model", None, None)),
-    (r"/moe/w_up$", ("model", None, None)),
-    (r"/moe/w_down$", ("model", None, None)),
     # --- mamba / hybrid
     (r"/w_in$", _COL2),
     (r"/conv_w$", (None, "model")),
@@ -98,6 +100,34 @@ def _divisible(shape: Tuple[int, ...], spec: Tuple, mesh: Mesh) -> Tuple:
     return tuple(out)
 
 
+# Leaf names that are CORRECT to replicate: norm scales, per-head mixing
+# vectors, learned decay/gate vectors, SSM per-head scalars. The coverage
+# test (tests/test_fleet.py) flattens every registry model through the
+# rules and fails on any leaf that neither matches a rule nor lands here —
+# no shardable weight may silently fall through to replicated.
+REPLICATE_OK = (
+    r"(^|/)(final_norm|enc_norm|ln_in)$",
+    r"/(attn_norm|mlp_norm|self_norm|cross_norm|q_norm|kv_norm|norm)$",
+    r"/(ln1|ln2|ln_scale)$",
+    r"/mu_\w+$",                 # rwkv time/channel-mix interpolants
+    r"/(u|w0)$",                 # rwkv bonus / decay-base vectors
+    r"/(A_log|D|dt_bias)$",      # mamba per-head SSM scalars
+)
+
+
+def rule_for(path_str: str) -> Optional[str]:
+    """The first matching rule pattern for a param path (None = no rule)."""
+    for pattern, _ in _RULES:
+        if re.search(pattern, path_str):
+            return pattern
+    return None
+
+
+def replicate_allowed(path_str: str) -> bool:
+    """Whether a rule-less leaf is on the explicit replicate allowlist."""
+    return any(re.search(p, path_str) for p in REPLICATE_OK)
+
+
 def spec_for_param(path_str: str, shape: Tuple[int, ...],
                    mesh: Mesh) -> P:
     """Resolve a parameter's PartitionSpec from its tree path."""
@@ -108,7 +138,6 @@ def spec_for_param(path_str: str, shape: Tuple[int, ...],
                 return P()
             spec = (None,) * n_lead + tuple(trailing)
             return P(*_divisible(shape, spec, mesh))
-    # expert weights matched structurally: 3D+ trailing (E, d, f) under moe
     return P(*((None,) * len(shape)))
 
 

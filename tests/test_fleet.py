@@ -1,0 +1,311 @@
+"""Sharded slot pools: fleet routing/drain, mesh construction, sharding-
+rule coverage, per-pool deadline-aware admission, and the cross-backend
+equivalence anchors (1-device-mesh pool bit-identical to the unsharded
+engine; sharded pools trace exactly once).
+
+Multi-device cases need simulated host devices and skip otherwise:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_fleet.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.autoplan import PlanBank
+from repro.core import make_schedule
+from repro.launch.mesh import make_fleet_mesh, make_host_mesh
+from repro.models import get_api
+from repro.sampling import SamplerPlan, TauSpec
+from repro.serving import ContinuousBatchingEngine
+from repro.serving.fleet import (PoolFleet, PoolState, SlotPool,
+                                 affinity_pool, make_sharded_eps,
+                                 make_trunk_params, make_unsharded_eps,
+                                 pick_pool, sharded_eps_from_apply,
+                                 trunk_apply)
+from repro.serving.scheduler.request import SampleRequest
+from repro.sharding import spec_for_param
+from repro.sharding.rules import _path_str, replicate_allowed, rule_for
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_"
+    "device_count=8")
+
+SCH = make_schedule("linear", T=100)
+DIM, HIDDEN, SLOTS = 16, 64, 4
+PARAMS = make_trunk_params(SCH, DIM, HIDDEN)
+
+
+def _reqs(n, S=6, seed0=0, **kw):
+    return [SampleRequest(request_id=i, S=S, eta=0.0, seed=seed0 + i, **kw)
+            for i in range(n)]
+
+
+# ------------------------------------------------------------------ meshes
+def test_host_mesh_error_names_divisor():
+    bad = N_DEV + 1 if N_DEV > 1 else 3
+    with pytest.raises(ValueError, match=f"not divisible by model={bad}"):
+        make_host_mesh(model=bad)
+
+
+def test_fleet_mesh_errors_name_divisors():
+    with pytest.raises(ValueError, match="n_pools"):
+        make_fleet_mesh(N_DEV + 1)
+    if N_DEV % 2 == 0:
+        with pytest.raises(ValueError, match="model="):
+            make_fleet_mesh(N_DEV // 2, model=3)
+
+
+def test_fleet_mesh_single_device_pools():
+    meshes = make_fleet_mesh(1, model=1)
+    assert len(meshes) == 1
+    assert dict(meshes[0].shape) == {"data": N_DEV, "model": 1}
+
+
+@multi_device
+def test_fleet_mesh_disjoint_partition():
+    meshes = make_fleet_mesh(2, model=2)
+    assert [dict(m.shape) for m in meshes] == [
+        {"data": 2, "model": 2}] * 2
+    seen = [d for m in meshes for d in m.devices.ravel()]
+    assert len(seen) == len(set(seen)) == 8  # disjoint, covers all devices
+
+
+# -------------------------------------------- sharding-rule coverage (sat 2)
+def _leaf_paths(cfg):
+    api = get_api(cfg)
+    shapes = jax.eval_shape(
+        lambda k: api.init_params(k, cfg), jax.random.PRNGKey(0))
+    out = []
+    jax.tree_util.tree_map_with_path(
+        lambda p, l: out.append((_path_str(p), l.shape)), shapes)
+    return out
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_every_param_matches_rule_or_replicate_allowlist(arch):
+    """No shardable weight may silently fall through to replicated: every
+    leaf of every registry model either hits a sharding rule or sits on
+    the explicit REPLICATE_OK allowlist."""
+    cfg = configs.get_smoke(arch)
+    orphans = [p for p, _ in _leaf_paths(cfg)
+               if rule_for(p) is None and not replicate_allowed(p)]
+    assert not orphans, (
+        f"{arch}: params with neither a sharding rule nor a replicate "
+        f"allowlist entry: {orphans}")
+
+
+def test_moe_expert_rules_not_shadowed():
+    """MoE expert weights must resolve to the EXPERT-parallel rule, not
+    the generic FFN column/row rules (first match wins — the MoE rules
+    must precede them)."""
+    assert rule_for("layers/moe/w_gate") == r"/moe/w_gate$"
+    assert rule_for("layers/moe/w_down") == r"/moe/w_down$"
+    assert rule_for("layers/w_gate") == r"/w_gate$"
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # stacked (L, E, d, ff): expert dim sharded, not the ff dim
+    assert spec_for_param("layers/moe/w_up", (4, 8, 16, 32), mesh) == \
+        jax.sharding.PartitionSpec(None, "model", None, None)
+
+
+# ----------------------------------------------------------------- routing
+def _fleet(n_pools, slots=SLOTS, **kw):
+    return PoolFleet.build(SCH, make_unsharded_eps(PARAMS), (DIM,),
+                           n_pools=n_pools, slots=slots, **kw)
+
+
+def test_router_least_loaded_balances():
+    fleet = _fleet(2, slots=2)
+    for r in _reqs(4):
+        fleet.submit(r, now=0.0)
+    fleet.dispatch(0.0)
+    depths = [len(p.engine.queue) + p.engine.active for p in fleet.pools]
+    assert depths == [2, 2]
+
+
+def test_router_affinity_sticky_and_falls_back():
+    fleet = _fleet(2, slots=4)
+    key = 7
+    pref = affinity_pool(key, 2)
+    for r in _reqs(3, affinity_key=key):
+        fleet.submit(r, now=0.0)
+    fleet.dispatch(0.0)
+    pool = fleet.pools[pref]
+    assert len(pool.engine.queue) + pool.engine.active == 3
+    # drain the preferred pool: same-key requests fall back, not stall
+    fleet.drain_pool(pref, now=0.0)
+    fleet.run()
+    for r in _reqs(2, seed0=50, affinity_key=key):
+        fleet.submit(r, now=0.0)
+    fleet.dispatch(0.0)
+    other = fleet.pools[1 - pref]
+    assert len(other.engine.queue) + other.engine.active == 2
+
+
+def test_router_no_capacity_returns_none():
+    pools = [SlotPool(0, ContinuousBatchingEngine(
+        SCH, make_unsharded_eps(PARAMS), (DIM,), 1))]
+    pools[0].dispatch(_reqs(1)[0], now=0.0)
+    assert pick_pool(pools, _reqs(1, seed0=9)[0]) is None
+
+
+# ----------------------------------------------------- fleet serve + stats
+def test_fleet_serves_and_aggregates_stats():
+    fleet = _fleet(2, slots=2)
+    res = fleet.serve(_reqs(7), now=0.0)
+    assert len(res) == 7 and not any(r.dropped for r in res)
+    assert sorted({r.pool_id for r in res}) == [0, 1]  # both pools worked
+    st = fleet.stats()
+    assert st["n_pools"] == 2 and st["completed"] == 7
+    assert st["queued"] == 0 and st["dropped"] == 0
+    assert set(st["tick_ewma_s"]) == {0, 1}
+    for pid, ps in enumerate(st["pools"]):
+        assert ps["pool_id"] == pid
+        assert ps["compiled_ticks"] == 1       # one trace per pool
+        assert ps["tick_ewma_s"] is not None
+        assert ps["state"] == "active"
+        assert "queued" in ps and "drained_requests" in ps
+
+
+def test_fleet_zero_retrace_under_churn():
+    """Retire/refill churn across both pools never retraces a tick."""
+    fleet = _fleet(2, slots=2)
+    for wave, S in enumerate((3, 7, 5)):
+        res = fleet.serve(_reqs(4, S=S, seed0=10 * wave), now=0.0)
+        assert len(res) == 4
+    for ps in fleet.stats()["pools"]:
+        assert ps["compiled_ticks"] == 1
+
+
+def test_fleet_backpressure_and_validation():
+    fleet = _fleet(1, slots=1, max_queue=2)
+    res = fleet.serve(_reqs(5), now=0.0)   # all 5 land before any dispatch
+    dropped = [r for r in res if r.dropped]
+    assert len(res) == 5 and len(dropped) == 3
+    assert fleet.stats()["queue_rejected"] == 3
+    with pytest.raises(ValueError, match="stochastic"):
+        fleet.submit(SampleRequest(request_id=99, S=4, eta=0.5), now=0.0)
+
+
+def test_fleet_rejects_heterogeneous_pools():
+    e1 = ContinuousBatchingEngine(SCH, make_unsharded_eps(PARAMS), (DIM,), 2)
+    e2 = ContinuousBatchingEngine(SCH, make_unsharded_eps(PARAMS), (DIM,), 2,
+                                  stochastic=True)
+    with pytest.raises(ValueError, match="homogeneous"):
+        PoolFleet([SlotPool(0, e1), SlotPool(1, e2)])
+
+
+# ------------------------------------------------------------ drain/refill
+def test_drain_reroutes_and_refill_restores():
+    fleet = _fleet(2, slots=2)
+    for r in _reqs(8, S=5):
+        fleet.submit(r, now=0.0)
+    fleet.dispatch(0.0)   # 2 queued per pool beyond... slots each hold 2
+    moved = fleet.drain_pool(0, now=0.0)
+    assert moved == 2 and len(fleet.pools[0].engine.queue) == 0
+    assert fleet.pools[0].state in (PoolState.DRAINING, PoolState.STOPPED)
+    res = fleet.run()
+    assert len(res) == 8 and not any(r.dropped for r in res)
+    # pool 0 served nothing new after the drain point beyond residents
+    st = fleet.stats()
+    assert st["drained_requests"] == moved
+    assert fleet.pools[0].state is PoolState.STOPPED
+    fleet.restore_pool(0)
+    assert fleet.pools[0].accepting
+    res2 = fleet.serve(_reqs(2, seed0=80), now=0.0)
+    assert len(res2) == 2 and fleet.stats()["completed"] == 10
+
+
+# ----------------------- per-pool deadline-aware admission (satellite 6)
+def _bank():
+    bank = PlanBank(SCH)
+    for S in (4, 32):   # banks require explicit (searched) taus
+        taus = sorted(set(np.linspace(1, SCH.T, S).astype(int).tolist()))
+        bank.add_plan(SamplerPlan.build(SCH, tau=TauSpec.explicit(taus)))
+    return bank
+
+
+def test_auto_plan_uses_destination_pool_ewma():
+    """A fast pool and a slow pool select DIFFERENT bank rows for the
+    same deadline: selection runs at the destination pool's local pop
+    with that pool's own tick EWMA, never a fleet-global estimate."""
+    fleet = _fleet(2, slots=2, plan_bank=_bank(), tick_ewma_alpha=0.0)
+    fleet.pools[0].engine.tick_ewma_s = 0.001   # fast pool
+    fleet.pools[1].engine.tick_ewma_s = 0.1     # slow pool
+    k0 = next(k for k in range(16) if affinity_pool(k, 2) == 0)
+    k1 = next(k for k in range(16) if affinity_pool(k, 2) == 1)
+    # headroom 0.5s, margin 0.9: fast fits 32 (0.032s), slow only 4 (0.4s)
+    fleet.submit(SampleRequest(request_id=0, auto_plan=True, deadline=0.5,
+                               affinity_key=k0), now=0.0)
+    fleet.submit(SampleRequest(request_id=1, auto_plan=True, deadline=0.5,
+                               affinity_key=k1), now=0.0)
+    res = {r.request_id: r for r in fleet.run(now_fn=lambda: 0.0)}
+    assert res[0].pool_id == 0 and res[0].S == 32
+    assert res[1].pool_id == 1 and res[1].S == 4
+
+
+# ------------------------------------------- cross-backend equivalence
+def test_one_device_pool_bit_identical_to_unsharded_engine():
+    """eta=0 order-1: a pool whose trunk runs under shard_map on a
+    1-device mesh produces BITWISE the x0 of the plain engine (the psum
+    over a size-1 model axis is an identity)."""
+    mesh = make_fleet_mesh(N_DEV, model=1)[0]   # one device per pool
+    ref = ContinuousBatchingEngine(SCH, make_unsharded_eps(PARAMS),
+                                   (DIM,), SLOTS)
+    fleet = PoolFleet.build(
+        SCH, lambda pool_id, m: make_sharded_eps(m, PARAMS), (DIM,),
+        n_pools=1, slots=SLOTS, meshes=[mesh])
+    ra = {r.request_id: np.asarray(r.x0) for r in ref.serve(_reqs(5))}
+    rb = {r.request_id: np.asarray(r.x0)
+          for r in fleet.serve(_reqs(5), now=0.0)}
+    for rid in ra:
+        assert np.array_equal(ra[rid], rb[rid]), rid
+
+
+@multi_device
+def test_sharded_pool_multi_device_close_one_trace():
+    """The (2,2)-mesh shard_map pool matches the unsharded engine to
+    float tolerance, marks its state sharded, and still traces once."""
+    mesh = make_fleet_mesh(2, model=2)[0]
+    ref = ContinuousBatchingEngine(SCH, make_unsharded_eps(PARAMS),
+                                   (DIM,), SLOTS)
+    eng = ContinuousBatchingEngine(SCH, make_sharded_eps(mesh, PARAMS),
+                                   (DIM,), SLOTS, mesh=mesh, pool_id=0)
+    ra = {r.request_id: np.asarray(r.x0) for r in ref.serve(_reqs(6))}
+    rb = {r.request_id: np.asarray(r.x0) for r in eng.serve(_reqs(6))}
+    for rid in ra:
+        np.testing.assert_allclose(ra[rid], rb[rid], rtol=1e-5, atol=1e-5)
+    st = eng.stats()
+    assert st["compiled_ticks"] == 1
+    assert st["state_sharded"] and st["mesh"] == {"data": 2, "model": 2}
+
+
+@multi_device
+def test_gspmd_wrapper_matches_shard_map_trunk():
+    mesh = make_fleet_mesh(1, model=2)[0]
+    auto = sharded_eps_from_apply(mesh, PARAMS, trunk_apply)
+    explicit = make_sharded_eps(mesh, PARAMS)
+    x = jax.random.normal(jax.random.PRNGKey(3), (8, DIM))
+    t = jnp.full((8,), 37, jnp.int32)
+    np.testing.assert_allclose(np.asarray(auto(x, t)),
+                               np.asarray(explicit(x, t)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@multi_device
+def test_sharded_fleet_end_to_end():
+    """2 pools x (2,2) disjoint meshes: mixed-S load completes, both
+    pools tick sharded, one compiled tick each."""
+    meshes = make_fleet_mesh(2, model=2)
+    fleet = PoolFleet.build(
+        SCH, lambda pool_id, m: make_sharded_eps(m, PARAMS), (DIM,),
+        n_pools=2, slots=SLOTS, meshes=meshes)
+    reqs = [SampleRequest(request_id=i, S=4 + (i % 3) * 3, eta=0.0,
+                          seed=i, affinity_key=i % 5) for i in range(10)]
+    res = fleet.serve(reqs, now=0.0)
+    assert len(res) == 10 and not any(r.dropped for r in res)
+    for ps in fleet.stats()["pools"]:
+        assert ps["compiled_ticks"] == 1 and ps["state_sharded"]
