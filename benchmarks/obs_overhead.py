@@ -1,0 +1,277 @@
+"""Telemetry overhead gate: tracing the serving stack must stay <= 2%.
+
+The obs layer (repro.obs) claims the engine's tick loop can carry full
+per-request span tracing + registry metrics for free-ish. This benchmark
+prices that claim and commits it:
+
+  plain    ContinuousBatchingEngine with its default Observability —
+           registry metrics only, NO trace sinks. This is the production
+           baseline: the registry counters replaced the engine's old
+           plain-int counters one-for-one.
+  traced   an identical engine whose Observability carries a JSONL trace
+           sink, so every request emits its full span (submit / admit /
+           first_tick / retire) and every tick updates the latency
+           histograms that feed the percentile views.
+
+Both engines share the weight-heavy eps model and Poisson trace generator
+from benchmarks.scheduler_throughput (weight-bound evals — the regime
+where serving economics are real). The SAME drain replays through both,
+INTERLEAVED (plain, traced, plain, traced, ...) over several repeats.
+
+Telemetry lives entirely on the HOST side of the tick (the jitted call
+carries zero JAX-level instrumentation — that's the design contract), so
+the overhead is measured where it actually is: each drain records its
+external wall AND the engine's internal jitted-tick wall
+(engine_tick_wall_seconds); the difference is the host component — admit/
+retire bookkeeping, registry updates, span emission. XLA dispatch wall on
+a shared machine jitters by >10% between drains, far above a 2% gate, and
+that noise cancels out of the subtraction entirely. Each config keeps its
+MINIMUM host per-tick over the repeats (host work is near-deterministic
+Python; load spikes only inflate it), and the committed gate is
+
+    (traced_host - plain_host) / plain_total_per_tick  <=  2%
+
+i.e. turning on full span tracing may cost at most 2% of a steady tick's
+wall-clock.
+
+The traced run doubles as the span-schema smoke: the produced JSONL log
+must parse, every span must be well-formed (repro.obs.check_spans), and
+the retire-event ordering must reconstruct the engine's actual
+retirement order exactly (file order IS emission order).
+
+  PYTHONPATH=src python -m benchmarks.run --suite obs
+  PYTHONPATH=src python -m benchmarks.run --suite obs --check   # CI gate
+  PYTHONPATH=src python -m benchmarks.obs_overhead              # direct
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks._common import ROOT, Row
+from benchmarks.scheduler_throughput import SCH, make_eps, make_trace
+from repro.obs import (JsonlSink, Observability, check_spans, ordering,
+                       read_jsonl)
+from repro.serving.scheduler import ContinuousBatchingEngine
+from repro.serving.scheduler.request import SampleRequest
+
+TRACE_PATH = os.path.join(ROOT, "results", "traces", "obs_overhead.jsonl")
+OVERHEAD_THRESHOLD_PCT = 2.0
+
+
+def _build(eps_fn, dim: int, slots: int, obs: Observability
+           ) -> ContinuousBatchingEngine:
+    """One engine, tick compiled and counters zeroed (EWMA kept)."""
+    eng = ContinuousBatchingEngine(SCH, eps_fn, (dim,), slots=slots,
+                                   obs=obs)
+    eng.submit(SampleRequest(request_id=-1, S=2, seed=0), now=0.0)
+    eng.run()
+    eng.reset_stats()
+    return eng
+
+
+def _drain(eng: ContinuousBatchingEngine, trace, id_base: int, seed=0):
+    """Replay one trace to empty.
+
+    Virtual clock (Poisson arrival stamps drive submit/tick time), wall
+    clock around the WHOLE drain loop. Returns
+    ``(total_per_tick_s, host_per_tick_s, results)`` where the host
+    component is external wall minus the engine's internal jitted-tick
+    wall — everything telemetry could possibly cost lives there.
+    """
+    ticks0, jit0 = eng.ticks, eng._tick_wall_s
+    clock = 0.0
+    pending = sorted(trace, key=lambda r: r["arrival"])
+    t0 = time.perf_counter()
+    results = []
+    while pending or eng.active or len(eng.queue):
+        if not eng.active and not len(eng.queue) and pending:
+            clock = max(clock, pending[0]["arrival"])
+        while pending and pending[0]["arrival"] <= clock:
+            r = pending.pop(0)
+            eng.submit(
+                SampleRequest(request_id=id_base + r["request_id"],
+                              S=r["S"], seed=seed + r["request_id"]),
+                now=r["arrival"])
+        s0 = time.perf_counter()
+        results.extend(eng.tick(now=clock))
+        clock += time.perf_counter() - s0
+    wall = time.perf_counter() - t0
+    ticks = max(eng.ticks - ticks0, 1)
+    host = wall - (eng._tick_wall_s - jit0)
+    return wall / ticks, host / ticks, results
+
+
+def measure(n_requests, s_menu, slots, dim, hidden, repeats, rate_per_s,
+            seed=0):
+    """Interleaved min-over-repeats drain of plain vs traced engines."""
+    eps_fn = make_eps(dim, hidden, seed=seed)
+    plain = _build(eps_fn, dim, slots, Observability())
+    traced_obs = Observability()
+    traced_obs.add_sink(JsonlSink(TRACE_PATH))
+    traced = _build(eps_fn, dim, slots, traced_obs)
+    trace = make_trace(n_requests, s_menu, rate_per_s, seed=seed)
+
+    walls = {"plain": [], "traced": []}
+    hosts = {"plain": [], "traced": []}
+    last_traced_results = None
+    for rep in range(repeats):
+        # distinct id block per repeat so JSONL spans never collide
+        base = (rep + 1) * 100_000
+        w, h, _ = _drain(plain, trace, id_base=base, seed=seed)
+        walls["plain"].append(w)
+        hosts["plain"].append(h)
+        w, h, res = _drain(traced, trace, id_base=base, seed=seed)
+        walls["traced"].append(w)
+        hosts["traced"].append(h)
+        last_traced_results = (base, res)
+    traced_obs.close()
+
+    events = read_jsonl(TRACE_PATH)
+    schema_failures = check_spans(events)
+    base, res = last_traced_results
+    want = [r.request_id for r in res if not r.dropped]
+    got = [i for i in ordering(events, "retire") if i >= base]
+    if got != want:
+        schema_failures.append(
+            f"retire-event ordering {got} does not reconstruct the "
+            f"engine's retirement order {want}")
+
+    out = {}
+    for name, eng in (("plain", plain), ("traced", traced)):
+        out[name] = {
+            "per_tick_ms": min(walls[name]) * 1e3,
+            "host_per_tick_ms": min(hosts[name]) * 1e3,
+            "host_per_tick_ms_all": [h * 1e3 for h in hosts[name]],
+            "compiled_ticks": eng.stats()["compiled_ticks"],
+        }
+    out["traced"]["events"] = len(events)
+    # tracing's cost as a fraction of a steady tick's total wall-clock:
+    # host-only numerator so XLA dispatch jitter cancels out of the gate
+    out["overhead_pct"] = (
+        (out["traced"]["host_per_tick_ms"]
+         - out["plain"]["host_per_tick_ms"])
+        / out["plain"]["per_tick_ms"]) * 100.0
+    out["schema_failures"] = schema_failures
+    return out
+
+
+def _config(budget: str):
+    if budget == "quick":
+        return dict(n_requests=16, s_menu=(5, 10, 20), slots=8,
+                    dim=1024, hidden=2048, repeats=2, rate_per_s=200.0)
+    return dict(n_requests=32, s_menu=(10, 20, 50), slots=8,
+                dim=2048, hidden=4096, repeats=3, rate_per_s=200.0)
+
+
+def run(budget: str = "full"):
+    import jax
+    cfg = _config(budget)
+    m = measure(**cfg)
+    if m["schema_failures"]:
+        raise AssertionError("trace schema smoke failed: "
+                             + "; ".join(m["schema_failures"]))
+    payload = {
+        "bench": "obs_overhead",
+        "device": jax.devices()[0].device_kind,
+        "backend": jax.default_backend(),
+        **{k: (list(v) if isinstance(v, tuple) else v)
+           for k, v in cfg.items()},
+        "threshold_pct": OVERHEAD_THRESHOLD_PCT,
+        "plain": m["plain"],
+        "traced": m["traced"],
+        "overhead_pct": m["overhead_pct"],
+        "note": ("interleaved min-over-repeats drain of one Poisson "
+                 "trace through two identical weight-heavy-eps engines; "
+                 "plain = default Observability (registry metrics only), "
+                 "traced = + JSONL span sink. overhead_pct = (traced "
+                 "host per-tick - plain host per-tick) / plain total "
+                 "per-tick: telemetry is host-side by design, and the "
+                 "host/jit split cancels XLA dispatch jitter out of the "
+                 "gate. The traced run's JSONL doubles as the "
+                 "span-schema smoke."),
+    }
+    with open(os.path.join(ROOT, "BENCH_obs.json"), "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    rows = []
+    for name in ("plain", "traced"):
+        rows.append(Row(
+            f"obs_overhead/drain/{name}",
+            m[name]["per_tick_ms"] * 1e3,
+            f"host_per_tick_ms={m[name]['host_per_tick_ms']:.3f};"
+            + (f"overhead_pct={m['overhead_pct']:.2f};"
+               f"events={m['traced']['events']}" if name == "traced"
+               else f"compiled_ticks={m[name]['compiled_ticks']}")))
+    return rows
+
+
+def check(budget: str = "full"):
+    """Fresh measurement vs the committed BENCH_obs.json gate.
+
+    Failure modes (returned as strings, empty list = pass):
+
+      * telemetry overhead above the committed threshold (2%);
+      * either engine compiled more than one tick trace — telemetry must
+        never perturb the zero-retrace contract;
+      * the traced replay's JSONL failing the span schema or not
+        reconstructing the retirement order.
+
+    Per-tick wall is machine-dependent; the overhead RATIO is not, so the
+    committed absolute numbers are informational only. A failing
+    measurement is retried ONCE (the scheduler-suite pattern): host
+    timing at the 2% scale is load-sensitive and only a reproduced
+    overhead regression should fail the gate.
+
+    ``budget`` is accepted for harness symmetry but ignored — the check
+    re-measures the committed configuration.
+    """
+    del budget
+    with open(os.path.join(ROOT, "BENCH_obs.json")) as f:
+        committed = json.load(f)
+    cfg = dict(n_requests=committed["n_requests"],
+               s_menu=tuple(committed["s_menu"]),
+               slots=committed["slots"], dim=committed["dim"],
+               hidden=committed["hidden"], repeats=committed["repeats"],
+               rate_per_s=committed["rate_per_s"])
+    threshold = committed["threshold_pct"]
+
+    def _measure_failures():
+        m = measure(**cfg)
+        failures = list(m["schema_failures"])
+        if m["overhead_pct"] > threshold:
+            failures.append(
+                f"telemetry overhead {m['overhead_pct']:.2f}% of tick "
+                f"wall-clock exceeds the {threshold:.0f}% budget "
+                f"(host {m['traced']['host_per_tick_ms']:.3f} traced vs "
+                f"{m['plain']['host_per_tick_ms']:.3f} plain ms/tick on "
+                f"a {m['plain']['per_tick_ms']:.3f} ms tick)")
+        for name in ("plain", "traced"):
+            if m[name]["compiled_ticks"] != 1:
+                failures.append(
+                    f"{name} engine compiled {m[name]['compiled_ticks']} "
+                    "tick traces (expected exactly 1) — telemetry must "
+                    "not perturb the zero-retrace contract")
+        return failures
+
+    failures = _measure_failures()
+    if failures:
+        failures = _measure_failures()   # only a reproduced failure gates
+    return failures
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", choices=["quick", "full"], default="full")
+    ap.add_argument("--check", action="store_true")
+    args = ap.parse_args()
+    if args.check:
+        fails = check(args.budget)
+        for fmsg in fails:
+            print(f"CHECK FAIL: {fmsg}")
+        raise SystemExit(1 if fails else 0)
+    print("name,us_per_call,derived")
+    for row in run(args.budget):
+        print(row.csv())

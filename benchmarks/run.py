@@ -25,15 +25,20 @@ BENCH_*.json and exits non-zero on regression:
              ratio (2 pools / 1 pool, 4 pools / 1 pool) against a replay
              of the committed mixed-S Poisson trace (run under
              XLA_FLAGS=--xla_force_host_platform_device_count=8 for the
-             sharded pool meshes).
+             sharded pool meshes);
+  obs        telemetry (full JSONL span tracing vs the registry-only
+             default) costing more than 2% of a steady tick's wall-clock
+             on a replay of the committed trace, either engine
+             recompiling its tick, or the traced replay's JSONL failing
+             the span schema / retirement-order reconstruction.
 
-Both gates are wired into scripts/tier1.sh so hot-path and serving
+All gates are wired into scripts/tier1.sh so hot-path and serving
 regressions can't land silently.
 
 ``--record`` re-runs the recording suites (sampler + scheduler + autoplan
-— with ``--suite all`` exactly those three, the paper modules don't write
-BENCH files), REWRITES the committed BENCH_*.json baselines in one
-command, and
++ fleet + obs — with ``--suite all`` exactly those, the paper modules
+don't write BENCH files), REWRITES the committed BENCH_*.json baselines
+in one command, and
 appends a dated summary entry to BENCH_HISTORY.md so the perf trajectory
 is tracked across PRs.
 
@@ -65,10 +70,12 @@ SUITES = {
     "scheduler": ["benchmarks.scheduler_throughput"],
     "autoplan": ["benchmarks.autoplan_search"],
     "fleet": ["benchmarks.fleet_throughput"],
+    "obs": ["benchmarks.obs_overhead"],
     "all": PAPER_MODULES + ["benchmarks.sampler_overhead",
                             "benchmarks.scheduler_throughput",
                             "benchmarks.autoplan_search",
-                            "benchmarks.fleet_throughput"],
+                            "benchmarks.fleet_throughput",
+                            "benchmarks.obs_overhead"],
 }
 
 # suites whose run() rewrites a committed BENCH_*.json (and so support
@@ -78,7 +85,8 @@ RECORDING = {"sampler": ("benchmarks.sampler_overhead", "BENCH_sampler.json"),
                            "BENCH_scheduler.json"),
              "autoplan": ("benchmarks.autoplan_search",
                           "BENCH_autoplan.json"),
-             "fleet": ("benchmarks.fleet_throughput", "BENCH_fleet.json")}
+             "fleet": ("benchmarks.fleet_throughput", "BENCH_fleet.json"),
+             "obs": ("benchmarks.obs_overhead", "BENCH_obs.json")}
 
 
 def _history_entry(root: str) -> str:
@@ -134,6 +142,16 @@ def _history_entry(root: str) -> str:
                      f"wall, grid {bench['grid_size']}, "
                      f"{bench['executor_traces']} executor traces / "
                      f"{bench['executor_calls']} rollouts")
+    op = os.path.join(root, "BENCH_obs.json")
+    if os.path.exists(op):
+        with open(op) as f:
+            bench = json.load(f)
+        lines.append(
+            f"- obs/telemetry: {bench['overhead_pct']:.2f}% of tick "
+            f"wall-clock (host {bench['traced']['host_per_tick_ms']:.3f} "
+            f"traced vs {bench['plain']['host_per_tick_ms']:.3f} plain "
+            f"ms/tick on a {bench['plain']['per_tick_ms']:.3f} ms tick, "
+            f"{bench['traced']['events']} span events)")
     return "\n".join(lines) + "\n"
 
 

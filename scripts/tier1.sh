@@ -37,3 +37,8 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # fails on >25% drop of any aggregate samples/s scaling ratio (x2, x4)
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.run --suite fleet --check
+# telemetry overhead gate (ISSUE 7): full span tracing may cost at most
+# 2% of a steady tick's wall-clock vs the registry-only default, must not
+# perturb the one-compiled-tick contract, and the replay's JSONL must
+# reconstruct the exact admission/retire ordering
+python -m benchmarks.run --suite obs --check

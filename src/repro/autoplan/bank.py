@@ -23,7 +23,7 @@ import dataclasses
 import json
 import math
 import os
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.schedules import NoiseSchedule
 from repro.sampling import SamplerPlan, SigmaSpec, TauSpec, X0Policy
@@ -220,7 +220,9 @@ class PlanBank:
                margin: float = 0.9, *,
                deterministic: Optional[bool] = None,
                max_order: Optional[int] = None,
-               clip: object = _UNSET) -> Optional[SamplerPlan]:
+               clip: object = _UNSET,
+               on_outcome: Optional[Callable] = None
+               ) -> Optional[SamplerPlan]:
         """Deadline-aware row pick: the largest NFE that FITS the budget.
 
         ``headroom_s`` is the caller's remaining time (deadline - now;
@@ -231,17 +233,38 @@ class PlanBank:
         measurement yet (``per_step_s`` None/0) a finite deadline picks
         the SMALLEST compatible plan (nothing is known, be conservative);
         an infinite headroom always picks the quality end.
+
+        ``on_outcome(outcome, plan)`` — selection-policy telemetry hook,
+        called exactly once per select with WHY this row was picked:
+
+        * ``"quality"``      — no deadline: quality end of the frontier
+        * ``"conservative"`` — deadline but no latency measurement yet:
+          smallest compatible row
+        * ``"fit"``          — largest row fitting the deadline headroom
+        * ``"degraded"``     — nothing fits: smallest compatible row
+          (serve the cheapest thing known rather than nothing)
+        * ``"none"``         — no compatible row at all (plan is None)
         """
+        def done(outcome: str, plan: Optional[SamplerPlan]):
+            if on_outcome is not None:
+                on_outcome(outcome, plan)
+            return plan
+
+        cands = self.compatible(deterministic, max_order, clip)
+        if not cands:
+            return done("none", None)
         if math.isinf(headroom_s):
-            return self.best(None, deterministic=deterministic,
-                             max_order=max_order, clip=clip)
+            return done("quality",
+                        self.plan(max(cands, key=lambda e: e.nfe).nfe))
         if not per_step_s:
-            cands = self.compatible(deterministic, max_order, clip)
-            return self.plan(min(cands, key=lambda e: e.nfe).nfe) \
-                if cands else None
+            return done("conservative",
+                        self.plan(min(cands, key=lambda e: e.nfe).nfe))
         fit = int(max(headroom_s, 0.0) * margin / per_step_s)
-        return self.best(fit, deterministic=deterministic,
-                         max_order=max_order, clip=clip)
+        fits = [e for e in cands if e.nfe <= fit]
+        if fits:
+            return done("fit", self.plan(max(fits, key=lambda e: e.nfe).nfe))
+        return done("degraded",
+                    self.plan(min(cands, key=lambda e: e.nfe).nfe))
 
     # --------------------------------------------------------- persistence
     def to_json(self) -> Dict:

@@ -12,7 +12,11 @@ lockstep batches or through the continuous-batching scheduler.
 ``--scheduler`` serves a mixed-step-budget request stream through
 serving/scheduler: each request samples at its OWN S (--s-mix cycles),
 slots refill mid-flight, and per-request latency is reported alongside
-engine occupancy/throughput stats (docs/serving.md).
+engine occupancy/throughput stats (docs/serving.md). Telemetry flags
+(docs/observability.md): ``--dash`` live per-pool dashboard,
+``--trace-out`` per-request JSONL spans, ``--prom-out`` Prometheus
+snapshot, ``--profile`` jax.profiler tick annotations; every replay ends
+with a p50/p95/p99 latency + miss/drop summary table.
 """
 from __future__ import annotations
 
@@ -25,10 +29,63 @@ import numpy as np
 from repro import configs
 from repro.core import make_schedule
 from repro.models import get_api, unet
+from repro.obs import (JsonlSink, Observability, render_dashboard,
+                       render_summary, summarize_results)
 from repro.sampling import SamplerPlan, SigmaSpec, TauSpec
 from repro.serving import (ARGenerator, DiffusionSampler, GenRequest,
                            SampleRequest)
 from repro.training import checkpoint
+
+
+def _make_obs(args) -> tuple:
+    """The CLI's telemetry handle + the JSONL trace path (or None)."""
+    obs = Observability(profile=args.profile)
+    trace_path = args.trace_out or None
+    if trace_path:
+        obs.add_sink(JsonlSink(trace_path))
+    return obs, trace_path
+
+
+def _drain(server, dash: bool, every: int = 25):
+    """Drain a scheduler engine or fleet, optionally live-dashboarding.
+
+    ``server`` is anything with tick()/stats() and a busy predicate
+    (PoolFleet has ``.busy``; the engine is busy while queued + resident
+    work remains). With ``dash`` the per-pool table re-renders every
+    ``every`` ticks and once at exit.
+    """
+    busy = ((lambda: server.busy) if hasattr(server, "busy")
+            else (lambda: len(server.queue) > 0 or server.active > 0))
+    results = []
+    n = 0
+    while busy():
+        results.extend(server.tick())
+        n += 1
+        if dash and n % every == 0:
+            print(render_dashboard(server.stats()))
+    if dash:
+        print(render_dashboard(server.stats()))
+    return results
+
+
+def _finish_replay(results, server, obs, trace_path, args) -> None:
+    """Replay exit: summary table (+ dashboard), flush trace, exporters."""
+    if not args.dash:               # --dash already rendered the table
+        print(render_dashboard(server.stats()))
+    obs.close()                     # flush + close the JSONL sink
+    print(render_summary(summarize_results(results), trace_path))
+    if args.prom_out:
+        render = getattr(server, "render_prometheus", None)
+        text = (render() if render is not None
+                else server.obs.render_prometheus())
+        with open(args.prom_out, "w") as f:
+            f.write(text)
+        print(f"metrics    {args.prom_out}")
+    if args.out:
+        done = [r for r in sorted(results, key=lambda r: r.request_id)
+                if r.x0 is not None]
+        np.save(args.out, np.stack([r.x0 for r in done]))
+        print(f"saved -> {args.out}")
 
 
 def serve_lm(args):
@@ -137,8 +194,9 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
     if args.pools > 1:
         return serve_unet_fleet(args, svc, stochastic=stochastic,
                                 max_order=max_order, clip_x0=clip_x0)
+    obs, trace_path = _make_obs(args)
     eng = svc.continuous(slots=args.slots, stochastic=stochastic,
-                         max_order=max_order, clip_x0=clip_x0)
+                         max_order=max_order, clip_x0=clip_x0, obs=obs)
 
     def plan_for(i: int) -> SamplerPlan:
         S = s_mix[i % len(s_mix)]
@@ -183,7 +241,12 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
         reqs = [SampleRequest(request_id=i, plan=plan_for(i),
                               deadline=deadline_for(i), seed=args.seed + i)
                 for i in range(args.n_samples)]
-    results = eng.serve(reqs)
+    if args.dash:
+        for r in reqs:
+            eng.submit(r)
+        results = _drain(eng, dash=True)
+    else:
+        results = eng.serve(reqs)
     by_id = {r.request_id: r for r in results}
     for i in sorted(by_id):
         r = by_id[i]
@@ -195,18 +258,7 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
               f"wait={r.queue_wait_s*1e3:.1f}ms "
               f"service={r.service_s*1e3:.1f}ms "
               f"latency={r.latency_s*1e3:.1f}ms{sel}")
-    st = eng.stats()
-    print(f"scheduler: {st['completed']} done in {st['ticks']} ticks "
-          f"(occupancy={st['occupancy']:.2f}, "
-          f"{st['steps_per_s']:.1f} slot-steps/s, "
-          f"compiled_ticks={st['compiled_ticks']}, "
-          f"max_order={st['max_order']}, "
-          f"bank_selected={st['bank_selected']})")
-    if args.out:
-        done = [r for r in sorted(results, key=lambda r: r.request_id)
-                if r.x0 is not None]
-        np.save(args.out, np.stack([r.x0 for r in done]))
-        print(f"saved -> {args.out}")
+    _finish_replay(results, eng, obs, trace_path, args)
 
 
 def serve_unet_fleet(args, svc: DiffusionSampler, *, stochastic,
@@ -229,41 +281,32 @@ def serve_unet_fleet(args, svc: DiffusionSampler, *, stochastic,
     if n_dev >= 2 * args.pools and n_dev % args.pools == 0:
         from repro.launch.mesh import make_fleet_mesh
         meshes = make_fleet_mesh(args.pools)
+    obs, trace_path = _make_obs(args)
     fleet = PoolFleet.build(
         svc.schedule, svc.eps_fn,
         (args.image_size, args.image_size, 3), n_pools=args.pools,
         slots=args.slots, meshes=meshes, dtype=svc.dtype,
         stochastic=stochastic, max_order=max_order, clip_x0=clip_x0,
-        plan_bank=svc.plan_bank)
+        plan_bank=svc.plan_bank, obs=obs)
     # warm every pool's tick before stamping latencies
     fleet.serve([SampleRequest(request_id=-1 - p, S=min(s_mix), seed=0)
                  for p in range(args.pools)], now=0.0)
-    for p in fleet.pools:
-        p.engine.reset_stats()
+    fleet.reset_stats()
     reqs = [SampleRequest(request_id=i, S=s_mix[i % len(s_mix)],
                           eta=args.eta, seed=args.seed + i,
                           affinity_key=i % (2 * args.pools))
             for i in range(args.n_samples)]
-    results = fleet.serve(reqs)
+    if args.dash:
+        for r in reqs:
+            fleet.submit(r)
+        results = _drain(fleet, dash=True)
+    else:
+        results = fleet.serve(reqs)
     for r in sorted(results, key=lambda r: r.request_id):
         print(f"req{r.request_id}: S={r.S} pool={r.pool_id} "
               f"wait={r.queue_wait_s*1e3:.1f}ms "
               f"latency={r.latency_s*1e3:.1f}ms")
-    st = fleet.stats()
-    print(f"fleet: {st['completed']} done across {st['n_pools']} pools "
-          f"(occupancy={st['occupancy']:.2f}, dropped={st['dropped']})")
-    for ps in st["pools"]:
-        mesh = ps["mesh"] or "unsharded"
-        print(f"  pool {ps['pool_id']}: {ps['completed']} done, "
-              f"{ps['ticks']} ticks, ewma="
-              + (f"{ps['tick_ewma_s']*1e3:.1f}ms"
-                 if ps["tick_ewma_s"] else "n/a")
-              + f", compiled_ticks={ps['compiled_ticks']}, mesh={mesh}")
-    if args.out:
-        done = [r for r in sorted(results, key=lambda r: r.request_id)
-                if r.x0 is not None]
-        np.save(args.out, np.stack([r.x0 for r in done]))
-        print(f"saved -> {args.out}")
+    _finish_replay(results, fleet, obs, trace_path, args)
 
 
 def main():
@@ -307,6 +350,19 @@ def main():
                     help="comma list of relative deadlines in seconds to "
                     "cycle across --scheduler requests (with --plan-bank: "
                     "drives the per-request NFE selection)")
+    ap.add_argument("--dash", action="store_true",
+                    help="with --scheduler: live per-pool console "
+                    "dashboard re-rendered during the replay")
+    ap.add_argument("--trace-out", default=None,
+                    help="with --scheduler: write per-request trace spans "
+                    "(structured JSONL, repro.obs) to this path")
+    ap.add_argument("--prom-out", default=None,
+                    help="with --scheduler: write a Prometheus text "
+                    "metrics snapshot at replay exit")
+    ap.add_argument("--profile", action="store_true",
+                    help="with --scheduler: wrap ticks in jax.profiler "
+                    "trace annotations (repro/tick/<variant>) so a "
+                    "device profile attributes time per tick variant")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()

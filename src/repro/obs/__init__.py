@@ -1,0 +1,36 @@
+"""Serving telemetry: metrics registry, trace spans, profiling hooks.
+
+Host-side only by contract — no module in this package issues a JAX op on
+the tick path, so attaching telemetry cannot add traces or perturb the
+one-compiled-tick / bit-identity guarantees (tests/test_obs.py holds the
+line; benchmarks/obs_overhead.py bounds the wall-clock cost at 2%).
+
+Entry point is :class:`Observability`: pass one to
+``ContinuousBatchingEngine`` / ``PoolFleet.build`` and the engine's
+``stats()`` becomes a view over real instruments, ``add_sink`` turns on
+per-request JSONL spans, and ``profile=True`` wraps tick variants in
+``jax.profiler`` annotations.
+"""
+from .core import Observability
+from .dashboard import render_dashboard, render_summary, summarize_results
+from .profiling import annotate, format_hbm_table, modeled_hbm_table
+from .registry import (Counter, Gauge, Histogram, LATENCY_BUCKETS_S,
+                       MetricsRegistry, SLACK_BUCKETS_S, render_prometheus)
+from .schema import ENGINE_STATS_KEYS, FLEET_STATS_KEYS, POOL_STATS_KEYS
+from .trace import (EVENT_KINDS, JsonlSink, ListSink, TraceContext, Tracer,
+                    check_spans, ordering, plan_digest, read_jsonl, spans)
+
+__all__ = [
+    "Observability",
+    # metrics plane
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "LATENCY_BUCKETS_S", "SLACK_BUCKETS_S", "render_prometheus",
+    # span plane
+    "Tracer", "TraceContext", "JsonlSink", "ListSink", "EVENT_KINDS",
+    "plan_digest", "read_jsonl", "spans", "check_spans", "ordering",
+    # profiling plane
+    "annotate", "modeled_hbm_table", "format_hbm_table",
+    # exporter contracts
+    "ENGINE_STATS_KEYS", "POOL_STATS_KEYS", "FLEET_STATS_KEYS",
+    "render_dashboard", "summarize_results", "render_summary",
+]

@@ -1,0 +1,91 @@
+"""Console dashboard + replay summary over the stats()/trace feeds.
+
+Render-only: everything here consumes the documented ``stats()`` schemas
+(obs/schema.py) and completed SampleResults — no engine internals. Used
+by ``repro.launch.serve --dash`` for a live per-pool view during replay
+and for the end-of-replay latency summary table.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def _fmt_ms(v: Optional[float]) -> str:
+    return f"{v * 1e3:7.1f}" if v is not None else "    n/a"
+
+
+def render_dashboard(stats: Dict) -> str:
+    """Per-pool live table from an engine OR fleet stats() dict."""
+    pools = stats.get("pools", [stats])
+    head = (f"{'pool':>4} {'state':<8} {'act/slot':>8} {'queue':>5} "
+            f"{'ticks':>7} {'ewma_ms':>8} {'done':>6} {'drop':>5} "
+            f"{'miss':>5} {'occ':>5} {'tick':<9}")
+    lines = [head, "-" * len(head)]
+    for ps in pools:
+        pid = ps.get("pool_id")
+        active = ps["active"]
+        lines.append(
+            f"{('-' if pid is None else pid):>4} "
+            f"{ps.get('state', 'active'):<8} "
+            f"{active:>4}/{ps['slots']:<3} {ps['queued']:>5} "
+            f"{ps['ticks']:>7} {_fmt_ms(ps['tick_ewma_s']):>8} "
+            f"{ps['completed']:>6} {ps['dropped']:>5} "
+            f"{ps['deadline_missed']:>5} {ps['occupancy']:>5.2f} "
+            f"{ps['tick_variant']:<9}")
+    if "pools" in stats:      # fleet: totals row
+        lines.append("-" * len(head))
+        lines.append(
+            f"{'all':>4} {'':8} {'':>8} {stats['queued']:>5} "
+            f"{stats['ticks']:>7} {'':>8} {stats['completed']:>6} "
+            f"{stats['dropped']:>5} {'':>5} {stats['occupancy']:>5.2f} "
+            f"mega={stats['mega_tick_ratio']:.2f}")
+    return "\n".join(lines)
+
+
+def summarize_results(results: Sequence) -> Dict:
+    """Latency/miss/drop summary over a replay's SampleResults."""
+    done = [r for r in results if not r.dropped]
+    lat = np.asarray([r.latency_s for r in done]) if done else None
+    misses = sum(1 for r in results if r.deadline_missed)
+    out = {
+        "requests": len(results),
+        "completed": len(done),
+        "dropped": sum(1 for r in results if r.dropped),
+        "deadline_missed": misses,
+        "miss_rate": misses / max(len(results), 1),
+    }
+    for q in (50, 95, 99):
+        out[f"p{q}_latency_s"] = (float(np.percentile(lat, q))
+                                  if lat is not None else None)
+    if done:
+        out["p50_wait_s"] = float(np.percentile(
+            [r.queue_wait_s for r in done], 50))
+        out["p50_service_s"] = float(np.percentile(
+            [r.service_s for r in done], 50))
+    return out
+
+
+def render_summary(summary: Dict, trace_path: Optional[str] = None) -> str:
+    """The end-of-replay table the serve CLI prints."""
+    lines = [
+        "=== replay summary ===",
+        f"requests   {summary['requests']:>8}",
+        f"completed  {summary['completed']:>8}",
+        f"dropped    {summary['dropped']:>8}",
+        f"missed     {summary['deadline_missed']:>8}  "
+        f"(miss rate {summary['miss_rate'] * 100:.1f}%)",
+    ]
+    for q in (50, 95, 99):
+        v = summary.get(f"p{q}_latency_s")
+        lines.append(f"p{q} latency "
+                     + (f"{v * 1e3:>8.1f} ms" if v is not None
+                        else "     n/a"))
+    if summary.get("p50_wait_s") is not None:
+        lines.append(f"p50 wait   {summary['p50_wait_s'] * 1e3:>8.1f} ms  "
+                     f"/ p50 service "
+                     f"{summary['p50_service_s'] * 1e3:.1f} ms")
+    if trace_path:
+        lines.append(f"trace      {trace_path}")
+    return "\n".join(lines)

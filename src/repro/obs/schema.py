@@ -1,0 +1,32 @@
+"""Documented stats() schemas — the exporter contract.
+
+``ContinuousBatchingEngine.stats()``, ``SlotPool.stats()`` and
+``PoolFleet.stats()`` are registry-backed views whose KEY SETS are frozen
+here and documented in docs/observability.md. Exporters (the Prometheus
+snapshot, the console dashboard, the serve CLI summary) key on these
+names, so adding a key means updating this module + the doc table, and
+removing/renaming one is a breaking change tests/test_obs.py will flag.
+"""
+from __future__ import annotations
+
+ENGINE_STATS_KEYS = frozenset({
+    "pool_id", "mesh", "state_sharded", "slots", "active",
+    "ticks", "tick_variant", "slot_steps", "occupancy",
+    "completed", "dropped", "deadline_missed", "previews_sent",
+    "queued", "queue_rejected",
+    "tick_wall_s", "tick_ewma_s", "steps_per_s", "compiled_ticks",
+    "plan_bank", "bank_selected",
+    "stochastic", "preview", "max_order", "mega_tick", "dtype", "donated",
+})
+
+# a SlotPool's stats() is its engine's plus the lifecycle/load fields
+POOL_STATS_KEYS = ENGINE_STATS_KEYS | frozenset({
+    "state", "drained_requests", "pending_steps",
+})
+
+FLEET_STATS_KEYS = frozenset({
+    "n_pools", "queued", "queue_rejected",
+    "completed", "dropped", "drained_requests",
+    "ticks", "slot_steps", "occupancy", "mega_tick_ratio",
+    "tick_ewma_s", "pools",
+})

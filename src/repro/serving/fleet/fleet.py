@@ -36,6 +36,8 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.schedules import NoiseSchedule
+from repro.obs import Observability
+from repro.obs.registry import render_prometheus as _render_prom
 from repro.serving.scheduler import ContinuousBatchingEngine
 from repro.serving.scheduler.queue import AdmissionQueue
 from repro.serving.scheduler.request import SampleRequest, SampleResult
@@ -45,10 +47,19 @@ from .router import pick_pool
 
 
 class PoolFleet:
-    """N slot pools, one global EDF admission tier."""
+    """N slot pools, one global EDF admission tier.
+
+    Telemetry: the fleet owns an ``Observability`` handle whose registry
+    backs the fleet-tier counters and the global queue's instruments;
+    every pool engine keeps its OWN registry (merged with pool labels at
+    ``render_prometheus``) but shares the fleet's TRACER — a request's
+    span flows submit -> route -> (pool) admit -> retire through one sink
+    set. ``PoolFleet.build(obs=...)`` wires both automatically.
+    """
 
     def __init__(self, pools: Sequence[SlotPool],
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 obs: Optional[Observability] = None):
         if not pools:
             raise ValueError("a fleet needs at least one pool")
         self.pools = list(pools)
@@ -66,15 +77,21 @@ class PoolFleet:
                     f"{self.pools[0].pool_id} in serving capabilities "
                     "(schedule/shape/dtype/stochastic/clip/max_order); "
                     "fleet pools must be homogeneous")
-        self.queue = AdmissionQueue(max_queue)
-        self.dropped = 0              # dropped at the FLEET tier
-        self.drained_requests = 0     # re-routed by pool drains
+        self.obs = obs if obs is not None else Observability()
+        self.queue = AdmissionQueue(max_queue, obs=self.obs)
+        reg = self.obs.registry
+        self._c_dropped = reg.counter(
+            "fleet_dropped_total", "requests dropped at the fleet tier")
+        self._c_drained = reg.counter(
+            "fleet_drained_total", "queued requests re-routed by drains")
 
     # ------------------------------------------------------- construction
     @classmethod
     def build(cls, schedule: NoiseSchedule, eps_fn, sample_shape,
               *, n_pools: int, slots: int, meshes: Optional[Sequence] = None,
-              max_queue: Optional[int] = None, **engine_kw) -> "PoolFleet":
+              max_queue: Optional[int] = None,
+              obs: Optional[Observability] = None,
+              **engine_kw) -> "PoolFleet":
         """Build n_pools homogeneous pools over one model.
 
         ``eps_fn`` is either a plain eps callable shared by every pool,
@@ -82,20 +99,23 @@ class PoolFleet:
         path: each pool places its weights on its own mesh — see
         serving.fleet.sharded and launch.mesh.make_fleet_mesh).
         ``meshes`` gives pool i its mesh (None entries = unsharded).
+        ``obs`` becomes the fleet's telemetry handle; each pool engine
+        gets ``obs.child()`` (private registry, SHARED tracer).
         """
         if meshes is not None and len(meshes) != n_pools:
             raise ValueError(f"got {len(meshes)} meshes for {n_pools} "
                              "pools")
         meshes = list(meshes) if meshes is not None else [None] * n_pools
         factory = _is_factory(eps_fn)
+        obs = obs if obs is not None else Observability()
         pools = []
         for pid in range(n_pools):
             fn = eps_fn(pid, meshes[pid]) if factory else eps_fn
             eng = ContinuousBatchingEngine(
                 schedule, fn, sample_shape, slots, mesh=meshes[pid],
-                pool_id=pid, **engine_kw)
+                pool_id=pid, obs=obs.child(), **engine_kw)
             pools.append(SlotPool(pid, eng))
-        return cls(pools, max_queue=max_queue)
+        return cls(pools, max_queue=max_queue, obs=obs)
 
     # ---------------------------------------------------------- admission
     def submit(self, req: SampleRequest,
@@ -104,7 +124,19 @@ class PoolFleet:
         # pools are homogeneous: one pool's capability check stands for all
         self.pools[0].engine.validate_request(req)
         now = time.perf_counter() if now is None else now
+        self.obs.trace_submit(req, now, deadline=req.deadline)
         return self.queue.submit(req, now)
+
+    # --------------------------------------------- fleet-tier counter views
+    @property
+    def dropped(self) -> int:
+        """Requests dropped at the FLEET tier (pool drops are separate)."""
+        return int(self._c_dropped.value)
+
+    @property
+    def drained_requests(self) -> int:
+        """Queued requests re-routed through the global queue by drains."""
+        return int(self._c_drained.value)
 
     def dispatch(self, now: float) -> List[SampleResult]:
         """Move queued requests to pools while capacity exists.
@@ -118,15 +150,22 @@ class PoolFleet:
         while len(self.queue) and any(p.capacity > 0 for p in self.pools):
             req, missed = self.queue.pop(now)
             for m in missed:
-                self.dropped += 1
+                self._c_dropped.inc()
+                if m.trace is not None:
+                    m.trace.emit("drop", now, reason="expired")
                 results.append(SampleResult.drop(m, now))
             if req is None:
                 break
-            pool = pick_pool(self.pools, req)
+            pool, why = pick_pool(self.pools, req, explain=True)
             if pool is None:      # raced out of capacity: requeue, stop
-                self.queue.submit(req, now)
-                self.queue.submitted -= 1   # a re-queue, not a new arrival
+                self.queue.requeue(req, now)
                 break
+            self.obs.registry.counter(
+                "fleet_routed_total", "dispatches by routing decision",
+                reason=why).inc()
+            if req.trace is not None:
+                req.trace.pool_id = pool.pool_id
+                req.trace.emit("route", now, reason=why)
             pool.dispatch(req, now)
         return results
 
@@ -169,7 +208,7 @@ class PoolFleet:
             if not self.submit(r, now=now):
                 t = time.perf_counter() if now is None else now
                 r.submit_t = t if r.submit_t is None else r.submit_t
-                self.dropped += 1
+                self._c_dropped.inc()
                 results.append(SampleResult.drop(r, t, missed=False))
         results.extend(self.run())
         return results
@@ -182,9 +221,8 @@ class PoolFleet:
         now = time.perf_counter() if now is None else now
         pending = self.pools[pool_id].drain()
         for r in pending:
-            self.queue.submit(r, now)       # submit_t already stamped
-            self.queue.submitted -= 1       # a re-route, not a new arrival
-        self.drained_requests += len(pending)
+            self.queue.requeue(r, now)   # a re-route, not a new arrival
+        self._c_drained.inc(len(pending))
         return len(pending)
 
     def restore_pool(self, pool_id: int) -> None:
@@ -192,11 +230,24 @@ class PoolFleet:
         self.pools[pool_id].restore()
 
     # ------------------------------------------------------------- stats
+    def reset_stats(self) -> None:
+        """Fleet-wide counter reset: delegate to every pool's engine and
+        zero the fleet-tier aggregates (drops, drains, routing counters).
+        Same keeps as the engine's reset: compiled-trace counts, tick
+        EWMAs, and queue arrival counters survive — warm-up state the
+        selection policy and routing still need."""
+        for p in self.pools:
+            p.reset_stats()
+        for inst in self.obs.registry.instruments():
+            if inst.name.startswith("fleet_"):
+                inst.reset()
+
     def stats(self) -> Dict:
         per_pool = [p.stats() for p in self.pools]
         ticks = sum(s["ticks"] for s in per_pool)
         slot_steps = sum(s["slot_steps"] for s in per_pool)
         cap = sum(s["ticks"] * s["slots"] for s in per_pool)
+        mega = sum(s["ticks"] for s in per_pool if s["mega_tick"])
         return {
             "n_pools": len(self.pools),
             "queued": len(self.queue),
@@ -207,10 +258,20 @@ class PoolFleet:
             "ticks": ticks,
             "slot_steps": slot_steps,
             "occupancy": slot_steps / max(cap, 1),
+            "mega_tick_ratio": mega / max(ticks, 1),
             "tick_ewma_s": {s["pool_id"]: s["tick_ewma_s"]
                             for s in per_pool},
             "pools": per_pool,
         }
+
+    def render_prometheus(self) -> str:
+        """One Prometheus text snapshot over the whole fleet: the fleet
+        tier's registry plus every pool engine's, the latter labeled
+        ``{pool="<id>"}`` at render time (engines never relabel)."""
+        parts = [(self.obs.registry, {"tier": "fleet"})]
+        parts += [(p.engine.obs.registry, {"pool": p.pool_id})
+                  for p in self.pools]
+        return _render_prom(parts)
 
 
 def _is_factory(fn) -> bool:

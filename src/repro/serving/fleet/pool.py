@@ -101,6 +101,13 @@ class SlotPool:
         self._maybe_stop()
         return results
 
+    def reset_stats(self) -> None:
+        """Zero this pool's throughput telemetry: the engine's instruments
+        (keeping compile counts + tick EWMA, see engine.reset_stats) and
+        the pool-level drain counter. State/lifecycle is untouched."""
+        self.engine.reset_stats()
+        self.drained_requests = 0
+
     def stats(self) -> Dict:
         st = self.engine.stats()
         st["state"] = self.state.value

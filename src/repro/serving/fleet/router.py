@@ -32,20 +32,31 @@ def _default_tick_s(pools: Sequence[SlotPool]) -> float:
     return sum(known) / len(known) if known else 1.0
 
 
-def pick_pool(pools: Sequence[SlotPool], req) -> Optional[SlotPool]:
+def pick_pool(pools: Sequence[SlotPool], req, explain: bool = False):
     """The dispatch decision for one popped request.
 
     Returns None when no active pool has capacity (the fleet stops
     popping — the request stays in the global EDF queue rather than
     deep-queueing behind one backend, which would re-order deadlines).
+
+    ``explain=True`` returns ``(pool, reason)`` instead, with reason one
+    of ``"affinity"`` (sticky preference honored), ``"least-loaded"``
+    (ranked by backlog-absorption time), or ``"full"`` (pool is None) —
+    the label the fleet stamps on its routing counters and ``route``
+    trace events.
     """
     cands: List[SlotPool] = [p for p in pools if p.capacity > 0]
-    if not cands:
-        return None
-    key = getattr(req, "affinity_key", None)
-    if key is not None:
-        pref = pools[affinity_pool(key, len(pools))]
-        if pref.capacity > 0:
-            return pref
-    default = _default_tick_s(pools)
-    return min(cands, key=lambda p: (p.load_eta_s(default), p.pool_id))
+    pool: Optional[SlotPool] = None
+    reason = "full"
+    if cands:
+        key = getattr(req, "affinity_key", None)
+        pref = (pools[affinity_pool(key, len(pools))]
+                if key is not None else None)
+        if pref is not None and pref.capacity > 0:
+            pool, reason = pref, "affinity"
+        else:
+            default = _default_tick_s(pools)
+            pool = min(cands,
+                       key=lambda p: (p.load_eta_s(default), p.pool_id))
+            reason = "least-loaded"
+    return (pool, reason) if explain else pool

@@ -38,6 +38,7 @@ per request plus engine-level throughput/occupancy stats.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -49,6 +50,10 @@ import numpy as np
 
 from repro.core import NoiseSchedule, StepStates
 from repro.core.sampler import slot_tile_step
+from repro.obs import Observability
+from repro.obs.profiling import annotate
+from repro.obs.registry import SLACK_BUCKETS_S
+from repro.obs.trace import plan_digest as _plan_digest
 from repro.sampling import MAX_ORDER, SamplerPlan
 # the kernel's murmur3 finalizer is plain operator arithmetic — it mixes
 # host-side numpy uint32 arrays just as well, so the per-tick seed stream
@@ -143,6 +148,18 @@ class ContinuousBatchingEngine:
         placement (the default, bit-identical to pre-fleet behavior).
       pool_id: fleet identity surfaced in ``stats()`` and stamped on
         every SampleResult this engine produces.
+      obs: a ``repro.obs.Observability`` telemetry handle. The engine's
+        throughput counters/histograms live in ``obs.registry`` (the
+        ``stats()`` dict is a thin view over them, so callers see the
+        same numbers either way); attaching a trace sink turns on
+        per-request span events (submit/admit/first_tick/preview/retire/
+        drop) through the request's TraceContext; ``profile=True`` wraps
+        the tick in a ``jax.profiler`` trace annotation named
+        ``repro/tick/<variant>``. All telemetry is host-side by contract
+        — no JAX op is ever added to the tick program, so the
+        one-compiled-tick and bit-identity guarantees are unaffected
+        (tests/test_obs.py). None builds a private, sink-less handle:
+        metrics only, near-zero cost.
     """
 
     def __init__(self, schedule: NoiseSchedule, eps_fn: Callable,
@@ -156,7 +173,8 @@ class ContinuousBatchingEngine:
                  use_mega: Optional[bool] = None,
                  plan_bank=None, select_margin: float = 0.9,
                  tick_ewma_alpha: float = 0.2,
-                 mesh=None, pool_id: Optional[int] = None):
+                 mesh=None, pool_id: Optional[int] = None,
+                 obs: Optional[Observability] = None):
         from repro.kernels.sampler_step import ops as tile_ops
 
         if not 1 <= max_order <= MAX_ORDER:
@@ -183,7 +201,6 @@ class ContinuousBatchingEngine:
         self.select_margin = float(select_margin)
         self.tick_ewma_alpha = float(tick_ewma_alpha)
         self.tick_ewma_s: Optional[float] = None
-        self.bank_selected = 0
         if plan_bank is not None:
             from repro.sampling.plan import _schedule_digest
             if (_schedule_digest(plan_bank.schedule)
@@ -196,6 +213,57 @@ class ContinuousBatchingEngine:
         self.mesh = mesh
         self.pool_id = pool_id
         self.use_mega = self._resolve_mega(use_mega)
+        self.tick_variant = ("mega" if self.use_mega else
+                             "multistep" if self.max_order > 1 else "rows")
+        # telemetry (repro.obs): registry instruments back every counter
+        # stats() reports. Host-side int/numpy state only — attaching
+        # telemetry can never add a JAX op to the tick program.
+        self.obs = obs if obs is not None else Observability()
+        reg = self.obs.registry
+        self._c_ticks = reg.counter("engine_ticks_total",
+                                    "engine ticks executed",
+                                    variant=self.tick_variant)
+        self._c_slot_steps = reg.counter(
+            "engine_slot_steps_total", "active slot-steps advanced")
+        self._c_completed = reg.counter(
+            "engine_completed_total", "requests retired with a sample")
+        self._c_dropped = reg.counter(
+            "engine_dropped_total",
+            "requests dropped (expiry or back-pressure)")
+        self._c_previews = reg.counter(
+            "engine_previews_total", "x0 previews delivered")
+        self._c_bank_selected = reg.counter(
+            "engine_bank_selected_total",
+            "auto_plan requests served a bank row")
+        self._c_compiled = reg.counter(
+            "engine_compiled_ticks_total",
+            "tick traces compiled (the zero-retrace contract: 1)")
+        self._c_miss = reg.counter(
+            "engine_deadline_miss_total",
+            "requests finished or dropped past their deadline")
+        self._c_wall = reg.counter(
+            "engine_tick_wall_seconds",
+            "accumulated wall time inside the jitted tick")
+        self._g_active = reg.gauge(
+            "engine_active_slots", "resident requests after the last tick")
+        self._g_ewma = reg.gauge(
+            "engine_tick_ewma_seconds",
+            "EWMA per-tick latency (compile ticks excluded)")
+        self._h_tick = reg.histogram(
+            "engine_tick_seconds",
+            "per-tick wall latency (compile ticks excluded)")
+        self._h_wait = reg.histogram(
+            "engine_queue_wait_seconds", "submit -> admit queue wait")
+        self._h_service = reg.histogram(
+            "engine_service_seconds", "admit -> retire service time")
+        self._h_latency = reg.histogram(
+            "engine_request_latency_seconds",
+            "submit -> retire end-to-end latency")
+        self._h_slack = reg.histogram(
+            "engine_deadline_slack_seconds",
+            "deadline - finish at retirement (negative = missed)",
+            edges=SLACK_BUCKETS_S)
+        self._last_outcome: Optional[str] = None
         self._n = int(np.prod(self.shape))
         self._rps = tile_ops.slot_rows(self.shape)
         self._tile_c = tile_ops.TILE_C
@@ -228,7 +296,7 @@ class ContinuousBatchingEngine:
             self._hist2 = jax.device_put(self._hist2, self._hist_sharding)
         self._slots: List[Optional[_Slot]] = [None] * self.slots
         self._free: List[int] = list(range(self.slots))[::-1]
-        self.queue = AdmissionQueue(max_queue)
+        self.queue = AdmissionQueue(max_queue, obs=self.obs)
         self._tables: Dict[SamplerPlan, Dict[str, np.ndarray]] = {}
         self._schedule_digest = None   # filled lazily from the first plan
         self._traces = 0
@@ -241,17 +309,44 @@ class ContinuousBatchingEngine:
                               sqrt_a_t=1.0,
                               sqrt_1m_a_t=1.0 if clip_x0 is not None
                               else 0.0)
-        # counters
-        self.ticks = 0
-        self.slot_steps = 0          # active slot-steps actually advanced
-        self.completed = 0
-        self.dropped = 0
-        self.previews_sent = 0
-        self._tick_wall_s = 0.0
-
         self._tick_fn = self._make_tick()
         self._write_fn = self._make_write()
         self._xT_fn = self._make_xT()
+
+    # ----------------------------------- registry-backed counters (views)
+    # The legacy counter attributes read straight from the obs instruments
+    # so existing callers (and the stats() dict) see identical numbers.
+    @property
+    def ticks(self) -> int:
+        return int(self._c_ticks.value)
+
+    @property
+    def slot_steps(self) -> int:
+        return int(self._c_slot_steps.value)
+
+    @property
+    def completed(self) -> int:
+        return int(self._c_completed.value)
+
+    @property
+    def dropped(self) -> int:
+        return int(self._c_dropped.value)
+
+    @property
+    def previews_sent(self) -> int:
+        return int(self._c_previews.value)
+
+    @property
+    def bank_selected(self) -> int:
+        return int(self._c_bank_selected.value)
+
+    @property
+    def deadline_missed(self) -> int:
+        return int(self._c_miss.value)
+
+    @property
+    def _tick_wall_s(self) -> float:
+        return float(self._c_wall.value)
 
     # ------------------------------------------------------- jitted pieces
     def _resolve_mega(self, use_mega: Optional[bool]) -> bool:
@@ -310,6 +405,7 @@ class ContinuousBatchingEngine:
 
             def tick(x2, states):
                 self._traces += 1   # host side effect: fires once per trace
+                self._c_compiled.inc()
                 row_coefs = tile_ops.expand_slot_coefs(
                     states.coef_matrix(), rps)
                 return self._constrain(mega_ops.megastep_rows(
@@ -322,6 +418,7 @@ class ContinuousBatchingEngine:
         if self.max_order == 1:
             def tick(x2, states):
                 self._traces += 1   # host side effect: fires once per trace
+                self._c_compiled.inc()
                 out = slot_tile_step(
                     self.eps_fn, x2, states, shape, clip_x0=self.clip_x0,
                     stochastic=self.stochastic, want_x0=self.preview,
@@ -336,6 +433,7 @@ class ContinuousBatchingEngine:
 
         def tick(x2, hist2, states):
             self._traces += 1       # host side effect: fires once per trace
+            self._c_compiled.inc()
             out, new_hist2 = slot_tile_step(
                 self.eps_fn, x2, states, shape, hist2=hist2,
                 clip_x0=self.clip_x0, stochastic=self.stochastic,
@@ -436,6 +534,7 @@ class ContinuousBatchingEngine:
         """Enqueue a request; False means rejected (queue back-pressure)."""
         self.validate_request(req)
         now = time.perf_counter() if now is None else now
+        self.obs.trace_submit(req, now, deadline=req.deadline)
         return self.queue.submit(req, now)
 
     # ------------------------------------------------- deadline-aware bank
@@ -460,7 +559,23 @@ class ContinuousBatchingEngine:
         return self.plan_bank.select(
             headroom, self.tick_ewma_s, margin=self.select_margin,
             deterministic=None if self.stochastic else True,
-            max_order=self.max_order, clip=self.clip_x0)
+            max_order=self.max_order, clip=self.clip_x0,
+            on_outcome=self._bank_outcome)
+
+    def _bank_outcome(self, outcome: str, plan) -> None:
+        """PlanBank.select telemetry hook: count WHY each row was picked
+        (quality / conservative / fit / degraded / none) and WHAT it was
+        (per-NFE counter) — the selection-policy feed ROADMAP item 4's
+        background re-search reads."""
+        self._last_outcome = outcome
+        reg = self.obs.registry
+        reg.counter("engine_bank_outcome_total",
+                    "auto_plan selections by policy outcome",
+                    outcome=outcome).inc()
+        if plan is not None:
+            reg.counter("engine_bank_nfe_total",
+                        "auto_plan selections by chosen NFE",
+                        nfe=plan.S).inc()
 
     @property
     def active(self) -> int:
@@ -481,9 +596,16 @@ class ContinuousBatchingEngine:
         rem += sum(r.steps for r in self.queue.pending_requests())
         return rem
 
-    def _drop(self, req: SampleRequest, now: float,
-              missed: bool = True) -> SampleResult:
-        self.dropped += 1
+    def _drop(self, req: SampleRequest, now: float, missed: bool = True,
+              reason: Optional[str] = None) -> SampleResult:
+        """Account one never-ran request. ``reason`` set emits the span's
+        terminal ``drop`` event; back-pressure drops pass None because the
+        queue already closed the span with ``reject``."""
+        self._c_dropped.inc()
+        if missed:
+            self._c_miss.inc()
+        if reason is not None and req.trace is not None:
+            req.trace.emit("drop", now, reason=reason)
         return SampleResult.drop(req, now, missed=missed,
                                  pool_id=self.pool_id)
 
@@ -494,12 +616,18 @@ class ContinuousBatchingEngine:
         one."""
         if req.auto_plan and req.plan is None:
             req.plan = self._select_plan(req, now)
-            self.bank_selected += 1
+            self._c_bank_selected.inc()
+            ctx = req.trace
+            if ctx is not None and req.plan is not None:
+                ctx.nfe = req.plan.S
+                ctx.plan_digest = _plan_digest(req.plan)
+                ctx.emit("select", now, outcome=self._last_outcome)
 
     def _admit(self, now: float, results: List[SampleResult]) -> None:
         while self._free and len(self.queue):
             req, missed = self.queue.pop(now, select=self._fill_auto_plan)
-            results.extend(self._drop(m, now) for m in missed)
+            results.extend(self._drop(m, now, reason="expired")
+                           for m in missed)
             if req is None:
                 break
             headroom = (req.deadline - now if req.deadline is not None
@@ -509,6 +637,19 @@ class ContinuousBatchingEngine:
                                    k=0, admit_t=now, headroom_s=headroom)
             self._x2 = self._write_fn(self._x2, self._xT_fn(req.seed),
                                       b * self._rps)
+            wait = (now - req.submit_t if req.submit_t is not None else 0.0)
+            self._h_wait.observe(wait)
+            ctx = req.trace
+            if ctx is not None:
+                if self.pool_id is not None:
+                    ctx.pool_id = self.pool_id
+                if ctx.nfe is None:
+                    ctx.nfe = req.steps
+                if ctx.plan_digest is None:
+                    ctx.plan_digest = _plan_digest(
+                        req.resolved_plan(self.schedule, self.clip_x0))
+                ctx.emit("admit", now, slot=b, wait_s=wait,
+                         headroom_s=headroom)
 
     def _states(self) -> StepStates:
         B = self.slots
@@ -556,7 +697,7 @@ class ContinuousBatchingEngine:
             rows = rows.astype(jnp.float32)
         return np.asarray(rows).ravel()[:self._n].reshape(self.shape)
 
-    def _deliver_previews(self, x0_2) -> None:
+    def _deliver_previews(self, x0_2, now: float) -> None:
         for b, slot in enumerate(self._slots):
             if slot is None:
                 continue
@@ -567,7 +708,9 @@ class ContinuousBatchingEngine:
                 x0 = np.asarray(rows).ravel()[:self._n].reshape(self.shape)
                 req.on_preview(req.request_id, done, x0)
                 slot.previews += 1
-                self.previews_sent += 1
+                self._c_previews.inc()
+                if req.trace is not None:
+                    req.trace.emit("preview", now, k=done)
 
     # ----------------------------------------------------------- the loop
     def tick(self, now: Optional[float] = None) -> List[SampleResult]:
@@ -586,36 +729,44 @@ class ContinuousBatchingEngine:
         states = self._states()
         traces0 = self._traces
         t0 = time.perf_counter()
-        if self.max_order == 1:
-            out = self._tick_fn(self._x2, states)
-        else:
-            out, self._hist2 = self._tick_fn(self._x2, self._hist2, states)
-        self._x2, x0_2 = out if self.preview else (out, None)
-        jax.block_until_ready(self._x2)
+        with (annotate(f"repro/tick/{self.tick_variant}")
+              if self.obs.profile else contextlib.nullcontext()):
+            if self.max_order == 1:
+                out = self._tick_fn(self._x2, states)
+            else:
+                out, self._hist2 = self._tick_fn(self._x2, self._hist2,
+                                                 states)
+            self._x2, x0_2 = out if self.preview else (out, None)
+            jax.block_until_ready(self._x2)
         t1 = time.perf_counter()
-        self._tick_wall_s += t1 - t0
+        self._c_wall.inc(t1 - t0)
         # EWMA per-step tick latency — the deadline-selection policy's
         # latency input (a resident request advances one step per tick).
         # Compile ticks are excluded: XLA tracing is a one-off 100-1000x
         # a steady tick, and folding it in would make deadline admissions
         # pick the cheapest bank row for dozens of requests afterwards.
+        # (The tick-latency histogram gates the same way.)
         if self._traces == traces0:
+            self._h_tick.observe(t1 - t0)
             if self.tick_ewma_s is None:
                 self.tick_ewma_s = t1 - t0
             else:
                 a = self.tick_ewma_alpha
                 self.tick_ewma_s = (a * (t1 - t0)
                                     + (1.0 - a) * self.tick_ewma_s)
+            self._g_ewma.set(self.tick_ewma_s)
         if wall:
             now = t1
-        self.ticks += 1
-        self.slot_steps += self.active
+        self._c_ticks.inc()
+        self._c_slot_steps.inc(self.active)
         if x0_2 is not None:
-            self._deliver_previews(x0_2)
+            self._deliver_previews(x0_2, now)
         for b, slot in enumerate(self._slots):
             if slot is None:
                 continue
             slot.k += 1
+            if slot.k == 1 and slot.req.trace is not None:
+                slot.req.trace.emit("first_tick", now)
             if slot.k >= slot.req.steps:
                 req = slot.req
                 missed = (req.deadline is not None and now > req.deadline)
@@ -626,9 +777,21 @@ class ContinuousBatchingEngine:
                     previews=slot.previews, deadline_missed=missed,
                     deadline_headroom_s=slot.headroom_s,
                     auto_plan=req.auto_plan, pool_id=self.pool_id))
-                self.completed += 1
+                self._c_completed.inc()
+                if missed:
+                    self._c_miss.inc()
+                service = now - slot.admit_t
+                self._h_service.observe(service)
+                if req.submit_t is not None:
+                    self._h_latency.observe(now - req.submit_t)
+                if req.deadline is not None:
+                    self._h_slack.observe(req.deadline - now)
+                if req.trace is not None:
+                    req.trace.emit("retire", now, service_s=service,
+                                   missed=True if missed else None)
                 self._slots[b] = None
                 self._free.append(b)
+        self._g_active.set(self.active)
         return results
 
     def run(self, max_ticks: Optional[int] = None,
@@ -661,15 +824,20 @@ class ContinuousBatchingEngine:
         return results
 
     def reset_stats(self) -> None:
-        """Zero the throughput counters (e.g. after a warm-up trace).
+        """Zero the throughput instruments (e.g. after a warm-up trace).
 
         Keeps what warm-up exists to build: the compiled-program cache,
-        ``compiled_ticks``, and the measured ``tick_ewma_s`` the
-        deadline-selection policy consults.
+        ``compiled_ticks``, the measured ``tick_ewma_s`` the deadline-
+        selection policy consults, and the live gauges (occupancy/EWMA
+        mirrors — re-set every tick). Queue arrival counters are the
+        queue's own and are untouched, matching the pre-registry
+        behavior.
         """
-        self.ticks = self.slot_steps = self.completed = 0
-        self.dropped = self.previews_sent = self.bank_selected = 0
-        self._tick_wall_s = 0.0
+        keep = {"engine_compiled_ticks_total"}
+        for inst in self.obs.registry.instruments():
+            if (inst.name.startswith("engine_") and inst.kind != "gauge"
+                    and inst.name not in keep):
+                inst.reset()
 
     def stats(self) -> Dict:
         denom = max(self.ticks * self.slots, 1)
@@ -681,11 +849,14 @@ class ContinuousBatchingEngine:
                               and any(ax is not None for ax in
                                       self._state_sharding.spec)),
             "slots": self.slots,
+            "active": self.active,
             "ticks": self.ticks,
+            "tick_variant": self.tick_variant,
             "slot_steps": self.slot_steps,
             "occupancy": self.slot_steps / denom,
             "completed": self.completed,
             "dropped": self.dropped,
+            "deadline_missed": self.deadline_missed,
             "previews_sent": self.previews_sent,
             "queued": len(self.queue),
             "queue_rejected": self.queue.rejected,

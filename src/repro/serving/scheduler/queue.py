@@ -13,6 +13,14 @@ slot-pool fleet each pool pops from its own queue and passes its own
 tick-EWMA-backed hook — the DESTINATION pool's estimate, never a global
 one (a fast pool must not inherit a slow pool's conservative NFE pick,
 nor the reverse).
+
+Telemetry: the submitted/rejected/expired counters and the live depth
+gauge are registry instruments (repro.obs) — pass the owning tier's
+``Observability`` so they land in that tier's registry; the legacy
+``.submitted`` / ``.rejected`` / ``.expired`` attributes remain as
+read-only views. The queue also emits the span events it alone can see:
+``reject`` at the depth bound and ``expire`` at pop-time expiry, through
+the request's carried TraceContext (``SampleRequest.trace``).
 """
 from __future__ import annotations
 
@@ -21,33 +29,69 @@ import itertools
 import math
 from typing import Callable, List, Optional, Tuple
 
+from repro.obs import Observability
+
 from .request import SampleRequest
 
 
 class AdmissionQueue:
     """EDF-ordered admission queue with optional depth bound."""
 
-    def __init__(self, max_depth: Optional[int] = None):
+    def __init__(self, max_depth: Optional[int] = None,
+                 obs: Optional[Observability] = None):
         self.max_depth = max_depth
         self._heap: List[Tuple[float, int, SampleRequest]] = []
         self._seq = itertools.count()
-        self.submitted = 0
-        self.rejected = 0
-        self.expired = 0
+        self.obs = obs if obs is not None else Observability()
+        reg = self.obs.registry
+        self._c_submitted = reg.counter(
+            "queue_submitted_total", "requests accepted by the queue")
+        self._c_rejected = reg.counter(
+            "queue_rejected_total", "submissions refused at the depth bound")
+        self._c_expired = reg.counter(
+            "queue_expired_total", "requests expired un-served at pop")
+        self._g_depth = reg.gauge(
+            "queue_depth", "current admission-queue depth")
+
+    # --------------------------------------------- legacy counter views
+    @property
+    def submitted(self) -> int:
+        return int(self._c_submitted.value)
+
+    @property
+    def rejected(self) -> int:
+        return int(self._c_rejected.value)
+
+    @property
+    def expired(self) -> int:
+        return int(self._c_expired.value)
 
     def __len__(self) -> int:
         return len(self._heap)
 
+    def _push(self, req: SampleRequest) -> None:
+        key = req.deadline if req.deadline is not None else math.inf
+        heapq.heappush(self._heap, (key, next(self._seq), req))
+        self._g_depth.set(len(self._heap))
+
     def submit(self, req: SampleRequest, now: float) -> bool:
         """Enqueue; False means rejected for depth (back-pressure)."""
         if self.max_depth is not None and len(self._heap) >= self.max_depth:
-            self.rejected += 1
+            self._c_rejected.inc()
+            if req.trace is not None:
+                req.trace.emit("reject", now, reason="queue-full")
             return False
         req.submit_t = now if req.submit_t is None else req.submit_t
-        key = req.deadline if req.deadline is not None else math.inf
-        heapq.heappush(self._heap, (key, next(self._seq), req))
-        self.submitted += 1
+        self._push(req)
+        self._c_submitted.inc()
         return True
+
+    def requeue(self, req: SampleRequest, now: float) -> None:
+        """Re-enter a previously accepted request (routing race, pool
+        drain) WITHOUT counting a new arrival or re-running the depth
+        bound — the request already holds a submission slot and its
+        ``submit_t`` stamp, so latency accounting spans the detour."""
+        self._push(req)
 
     def pop(self, now: float,
             select: Optional[Callable[[SampleRequest, float], None]] = None
@@ -59,16 +103,21 @@ class AdmissionQueue:
         request's plan from its bank using ITS OWN tick-EWMA estimate.
         """
         missed: List[SampleRequest] = []
+        out = None
         while self._heap:
             _, _, req = heapq.heappop(self._heap)
             if req.deadline is not None and req.deadline < now:
                 missed.append(req)
-                self.expired += 1
+                self._c_expired.inc()
+                if req.trace is not None:
+                    req.trace.emit("expire", now, deadline=req.deadline)
                 continue
             if select is not None:
                 select(req, now)
-            return req, missed
-        return None, missed
+            out = req
+            break
+        self._g_depth.set(len(self._heap))
+        return out, missed
 
     def pending_requests(self) -> List[SampleRequest]:
         """Queued requests in EDF order (non-destructive, for load probes)."""
@@ -84,4 +133,5 @@ class AdmissionQueue:
         """
         out = [req for _, _, req in sorted(self._heap)]
         self._heap.clear()
+        self._g_depth.set(0)
         return out

@@ -50,6 +50,12 @@ class SampleRequest:
     #                                     (session/user stickiness); falls
     #                                     back to least-loaded when that
     #                                     pool is draining or full
+    trace: Optional[object] = None     # obs.TraceContext: the request's
+    #                                     span head, created by whichever
+    #                                     telemetry-enabled tier first sees
+    #                                     the request and carried through
+    #                                     queue / routing / engine; None =
+    #                                     untraced (events cost nothing)
 
     @property
     def stochastic(self) -> bool:
@@ -93,7 +99,15 @@ class SampleRequest:
 
 @dataclasses.dataclass
 class SampleResult:
-    """Completed (or dropped) request with latency accounting."""
+    """Completed (or dropped) request with latency accounting.
+
+    The derived latency fields decompose exactly:
+    ``queue_wait_s + service_s == latency_s`` for every result —
+    completed requests split at ``admit_t``; requests dropped before
+    admission count their whole life as queue wait (service 0). The obs
+    summary tables and the trace-span wait_s/service_s event fields are
+    built on this identity (asserted in tests/test_obs.py).
+    """
 
     request_id: int
     x0: Optional[np.ndarray]           # None iff dropped before running
