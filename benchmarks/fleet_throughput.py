@@ -36,8 +36,8 @@ import time
 import jax
 import numpy as np
 
-from benchmarks._common import ROOT, Row
-from benchmarks.scheduler_throughput import _percentiles, make_trace
+from benchmarks._common import (ROOT, Row, percentiles as _percentiles,
+                                poisson_trace as make_trace)
 from repro.core import make_schedule
 from repro.serving.fleet import (PoolFleet, make_sharded_eps,
                                  make_trunk_params, make_unsharded_eps)

@@ -30,14 +30,23 @@ BENCH_*.json and exits non-zero on regression:
              default) costing more than 2% of a steady tick's wall-clock
              on a replay of the committed trace, either engine
              recompiling its tick, or the traced replay's JSONL failing
-             the span schema / retirement-order reconstruction.
+             the span schema / retirement-order reconstruction;
+  gateway    the committed BENCH_gateway.json no longer demonstrating
+             the acceptance bar (overload goodput >= 0.90x the
+             no-overload ceiling, sheds present, zero shed-ordering
+             violations), or a fresh live-HTTP replay losing steady
+             traffic, never shedding under the overload wave, violating
+             lowest-deadline-headroom-first shed ordering, retracing a
+             pool tick, or its goodput ratio regressing >25% below the
+             committed one.
 
 All gates are wired into scripts/tier1.sh so hot-path and serving
 regressions can't land silently.
 
 ``--record`` re-runs the recording suites (sampler + scheduler + autoplan
-+ fleet + obs — with ``--suite all`` exactly those, the paper modules
-don't write BENCH files), REWRITES the committed BENCH_*.json baselines
++ fleet + obs + gateway — with ``--suite all`` exactly those, the paper
+modules don't write BENCH files), REWRITES the committed BENCH_*.json
+baselines
 in one command, and
 appends a dated summary entry to BENCH_HISTORY.md so the perf trajectory
 is tracked across PRs.
@@ -71,11 +80,13 @@ SUITES = {
     "autoplan": ["benchmarks.autoplan_search"],
     "fleet": ["benchmarks.fleet_throughput"],
     "obs": ["benchmarks.obs_overhead"],
+    "gateway": ["benchmarks.gateway_load"],
     "all": PAPER_MODULES + ["benchmarks.sampler_overhead",
                             "benchmarks.scheduler_throughput",
                             "benchmarks.autoplan_search",
                             "benchmarks.fleet_throughput",
-                            "benchmarks.obs_overhead"],
+                            "benchmarks.obs_overhead",
+                            "benchmarks.gateway_load"],
 }
 
 # suites whose run() rewrites a committed BENCH_*.json (and so support
@@ -86,7 +97,8 @@ RECORDING = {"sampler": ("benchmarks.sampler_overhead", "BENCH_sampler.json"),
              "autoplan": ("benchmarks.autoplan_search",
                           "BENCH_autoplan.json"),
              "fleet": ("benchmarks.fleet_throughput", "BENCH_fleet.json"),
-             "obs": ("benchmarks.obs_overhead", "BENCH_obs.json")}
+             "obs": ("benchmarks.obs_overhead", "BENCH_obs.json"),
+             "gateway": ("benchmarks.gateway_load", "BENCH_gateway.json")}
 
 
 def _history_entry(root: str) -> str:
@@ -152,6 +164,18 @@ def _history_entry(root: str) -> str:
             f"traced vs {bench['plain']['host_per_tick_ms']:.3f} plain "
             f"ms/tick on a {bench['plain']['per_tick_ms']:.3f} ms tick, "
             f"{bench['traced']['events']} span events)")
+    gw = os.path.join(root, "BENCH_gateway.json")
+    if os.path.exists(gw):
+        with open(gw) as f:
+            bench = json.load(f)
+        ov = bench["overload"]
+        lines.append(
+            f"- gateway/overload: goodput {bench['goodput_ratio']:.2f}x "
+            f"the no-overload ceiling under a "
+            f"{bench['config']['overload_base_factor'] * bench['config']['peak_ratio']:.1f}x-peak diurnal wave "
+            f"(shed {ov['shed']}/{ov['offered']}, "
+            f"{bench['ordering_violations']} ordering violations, "
+            f"p95 {ov['p95_s']:.3f} s over live HTTP/SSE)")
     return "\n".join(lines) + "\n"
 
 

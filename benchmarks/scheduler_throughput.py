@@ -42,7 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks._common import ROOT, Row
+from benchmarks._common import ROOT, Row, percentiles, poisson_trace
 from repro.core import SamplerConfig, make_schedule
 
 SCH = make_schedule("linear", T=1000)
@@ -68,21 +68,11 @@ def make_eps(dim: int, hidden: int, seed: int = 0):
     return eps_fn
 
 
-def make_trace(n_requests, s_menu, rate_per_s, seed=0):
-    """Poisson arrivals (virtual seconds) with per-request S off the menu."""
-    rng = np.random.RandomState(seed)
-    gaps = rng.exponential(1.0 / rate_per_s, size=n_requests)
-    arrivals = np.cumsum(gaps)
-    s_choices = rng.choice(s_menu, size=n_requests)
-    return [dict(request_id=i, arrival=float(arrivals[i]),
-                 S=int(s_choices[i])) for i in range(n_requests)]
-
-
-def _percentiles(latencies):
-    a = np.asarray(latencies)
-    return dict(p50_s=float(np.percentile(a, 50)),
-                p95_s=float(np.percentile(a, 95)),
-                mean_s=float(a.mean()))
+# Shared with fleet_throughput/gateway_load; kept under the historical
+# local names so committed-bench replays and downstream imports are
+# unchanged (same RandomState algorithm, bit-identical traces).
+make_trace = poisson_trace
+_percentiles = percentiles
 
 
 def _ladder(slots: int):

@@ -1,0 +1,133 @@
+"""Streaming a diffusion sample over the gateway's SSE front door.
+
+The async gateway (src/repro/serving/gateway, docs/gateway.md) exposes
+the slot-pool fleet as HTTP: POST /v1/sample with ``"stream": true``
+answers with a Server-Sent-Events stream —
+
+  event: accepted   {"request_id": 0}
+  event: preview    {"request_id": 0, "step": 4, "x0": {...}}   (repeats)
+  event: result     {"request_id": 0, "x0": {...}, "latency_s": ...}
+
+so a client watches x0 sharpen WHILE the request's remaining DDIM steps
+run, instead of blocking on the finished sample. This example is the
+wire-protocol walkthrough: it starts an in-process two-model gateway
+over a small MLP eps-trunk (no checkpoint needed — swap in your own
+``eps_apply``/weights), streams one request per model, and prints every
+SSE event as it arrives. Point ``--url`` at an already-running
+``python -m repro.launch.serve --arch unet --gateway`` to stream from a
+real server instead.
+
+  PYTHONPATH=src python examples/gateway_sse.py
+  PYTHONPATH=src python examples/gateway_sse.py --url http://127.0.0.1:8807
+  PYTHONPATH=src python examples/gateway_sse.py --smoke   # tier-1 guard
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+
+import numpy as np
+
+
+async def stream_one(sess, url: str, spec: dict) -> dict:
+    """POST one streaming request; print each SSE event, return a tally.
+
+    The SSE wire format is line-based: ``event: <name>`` then ``data:
+    <json>`` then a blank line. x0 payloads arrive flattened as
+    ``{"shape": [...], "data": [floats]}`` — ``np.reshape`` restores the
+    array.
+    """
+    tally = {"previews": 0, "result": None, "error": None}
+    async with sess.post(f"{url}/v1/sample",
+                         json={**spec, "stream": True}) as resp:
+        name = None
+        async for raw in resp.content:
+            line = raw.decode("utf-8").strip()
+            if line.startswith("event: "):
+                name = line[len("event: "):]
+                continue
+            if not line.startswith("data: "):
+                continue                       # blank separator line
+            ev = json.loads(line[len("data: "):])
+            if name == "accepted":
+                print(f"  accepted  request_id={ev['request_id']}")
+            elif name == "preview":
+                x0 = np.reshape(ev["x0"]["data"], ev["x0"]["shape"])
+                tally["previews"] += 1
+                print(f"  preview   step={ev['step']:>3}  "
+                      f"|x0|={float(np.abs(x0).mean()):.3f}")
+            elif name == "result":
+                tally["result"] = ev
+                print(f"  result    S={ev['S']} pool={ev['pool_id']} "
+                      f"latency={ev['latency_s'] * 1e3:.1f}ms "
+                      f"previews={ev['previews']}")
+            elif name == "error":
+                tally["error"] = ev
+                print(f"  error     {ev['code']}: {ev['message']}")
+    return tally
+
+
+async def run_client(url: str, S: int) -> bool:
+    import aiohttp
+    ok = True
+    async with aiohttp.ClientSession() as sess:
+        async with sess.get(f"{url}/v1/models") as resp:
+            models = await resp.json()
+        print(f"models: {json.dumps(models)}")
+        for i, name in enumerate(sorted(models)):
+            print(f"streaming model '{name}':")
+            tally = await stream_one(sess, url, {
+                "model": name, "S": S, "seed": i,
+                "preview_every": max(S // 4, 1)})
+            ok = ok and tally["result"] is not None \
+                and tally["previews"] > 0 and tally["error"] is None
+    return ok
+
+
+async def run_in_process(S: int) -> bool:
+    """No server around: spin a tiny two-model gateway and stream from it.
+
+    The fleet's MLP eps-trunk (serving.fleet.make_trunk_params) keeps the
+    demo checkpoint-free and the tick compile fast; a real deployment
+    passes its own ``eps_apply`` + weight pytrees to GatewayCore.build.
+    """
+    from repro.core import make_schedule
+    from repro.serving.fleet import make_trunk_params, trunk_apply
+    from repro.serving.gateway import (GatewayCore, OverloadPolicy,
+                                       start_gateway, stop_gateway)
+
+    schedule = make_schedule("linear", T=1000)
+    dim, hidden = 8, 64
+    core = GatewayCore.build(
+        schedule, trunk_apply, (dim,),
+        models={"base": make_trunk_params(schedule, dim, hidden, seed=0),
+                "alt": make_trunk_params(schedule, dim, hidden, seed=1)},
+        slots=2, policy=OverloadPolicy())
+    runner, bridge, port = await start_gateway(core, port=0)
+    try:
+        return await run_client(f"http://127.0.0.1:{port}", S)
+    finally:
+        await stop_gateway(runner, bridge)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--url", default=None,
+                    help="gateway base URL (default: start one in-process)")
+    ap.add_argument("--S", type=int, default=12,
+                    help="DDIM step budget per streamed request")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tier-1 mode: exit non-zero unless every stream "
+                    "delivered previews and a terminal result")
+    args = ap.parse_args()
+    if args.url:
+        ok = asyncio.run(run_client(args.url, args.S))
+    else:
+        ok = asyncio.run(run_in_process(args.S))
+    print(f"gateway sse example: {'OK' if ok else 'FAIL'}")
+    return 0 if ok else (1 if args.smoke else 0)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

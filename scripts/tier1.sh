@@ -42,3 +42,17 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # perturb the one-compiled-tick contract, and the replay's JSONL must
 # reconstruct the exact admission/retire ordering
 python -m benchmarks.run --suite obs --check
+# gateway smoke (ISSUE 8): live HTTP/SSE traffic against a 2-model fleet —
+# steady load completes with streamed previews, an overload wave sheds in
+# lowest-deadline-headroom-first order, and no pool tick retraces
+python -m benchmarks.gateway_load --smoke
+# gateway launch-path smokes: serve.py --gateway round-trips a live client
+# against the U-Net fleet, and the SSE example streams previews + results
+# from both models of an in-process gateway (examples can't rot)
+python -m repro.launch.serve --arch unet --gateway --smoke
+python examples/gateway_sse.py --smoke
+# gateway regression gate: the committed BENCH_gateway.json must hold the
+# acceptance bar (overload goodput >= 0.90x the no-overload ceiling with
+# zero shed-ordering violations) and a fresh live replay must reproduce
+# the behavior within the noise band
+python -m benchmarks.run --suite gateway --check

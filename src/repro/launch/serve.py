@@ -8,6 +8,15 @@ lockstep batches or through the continuous-batching scheduler.
       --ckpt results/unet/ckpt_00000300.npz --S 20 --eta 0.0
   PYTHONPATH=src python -m repro.launch.serve --arch unet --scheduler \
       --slots 4 --s-mix 10,20,50 --n-samples 12
+  PYTHONPATH=src python -m repro.launch.serve --arch unet --gateway \
+      --port 8807       # async HTTP/SSE front door (docs/gateway.md)
+
+``--gateway`` serves the U-Net fleet behind the async front door
+(serving/gateway): POST /v1/sample with ``"stream": true`` streams x0
+previews + the terminal result over SSE, /v1/models lists the routable
+models, and POST /v1/models/{name}/rollout hot-swaps staged weights
+without dropping in-flight work. ``--gateway --smoke`` round-trips a
+live client and exits (the tier-1 launch-path guard).
 
 ``--scheduler`` serves a mixed-step-budget request stream through
 serving/scheduler: each request samples at its OWN S (--s-mix cycles),
@@ -119,7 +128,100 @@ def serve_lm(args):
           f"throughput={results[0].tokens_per_s:.1f} tok/s")
 
 
+def serve_unet_gateway(args):
+    """--gateway: serve the U-Net through the async HTTP/SSE front door.
+
+    Builds a multi-model GatewayCore (serving/gateway) over slot pools:
+    with --ckpt the checkpoint's 'ema' and 'raw' weight sets become two
+    routable models (same trunk, hot-swap-compatible); without one, two
+    differently-seeded inits stand in ('base'/'alt'). Serves on --port
+    until Ctrl-C. --smoke binds an ephemeral port, round-trips one JSON
+    and one streaming SSE request per model through a live aiohttp
+    client, prints a one-line verdict, and exits non-zero on failure —
+    the tier-1 guard that this launch path can't rot.
+    """
+    import asyncio
+
+    from repro.serving.gateway import HAVE_HTTP
+    if not HAVE_HTTP:
+        raise SystemExit("--gateway requires aiohttp for the HTTP/SSE "
+                         "transport (serving/gateway/http.py)")
+    from repro.serving.gateway import (GatewayCore, OverloadPolicy,
+                                       start_gateway, stop_gateway)
+
+    ucfg = configs.TOY_UNET
+    schedule = make_schedule("linear", T=args.T)
+    base = unet.init_params(jax.random.PRNGKey(args.seed), ucfg)
+    if args.ckpt:
+        ref = {"params": base, "ema": base}
+        restored, _ = checkpoint.restore(args.ckpt, ref)
+        models = {"ema": restored["ema"], "raw": restored["params"]}
+    else:
+        models = {"base": base,
+                  "alt": unet.init_params(jax.random.PRNGKey(args.seed + 1),
+                                          ucfg)}
+    obs, _ = _make_obs(args)
+    core = GatewayCore.build(
+        schedule, lambda p, x, t: unet.forward(p, ucfg, x, t),
+        (args.image_size, args.image_size, 3),
+        models=models, pools_per_model=max(1, args.pools),
+        slots=args.slots, policy=OverloadPolicy(), obs=obs)
+
+    async def _smoke_client(port: int) -> bool:
+        import aiohttp
+        url = f"http://127.0.0.1:{port}"
+        async with aiohttp.ClientSession() as sess:
+            async with sess.get(f"{url}/v1/models") as r:
+                names = sorted(await r.json())
+            # JSON round-trip on one model, SSE previews on the other
+            spec = {"model": names[0], "S": 4, "seed": args.seed}
+            async with sess.post(f"{url}/v1/sample", json=spec) as r:
+                body = await r.json()
+                ok = r.status == 200 and body["event"] == "result"
+            spec = {"model": names[-1], "S": 6, "seed": args.seed + 1,
+                    "stream": True, "preview_every": 2}
+            previews = results = 0
+            async with sess.post(f"{url}/v1/sample", json=spec) as r:
+                async for raw in r.content:
+                    line = raw.decode("utf-8").strip()
+                    if line == "event: preview":
+                        previews += 1
+                    elif line == "event: result":
+                        results += 1
+            ok = ok and results == 1 and previews > 0
+            async with sess.get(f"{url}/v1/stats") as r:
+                st = await r.json()
+        print(f"gateway smoke: models={names} json+sse round-trips "
+              f"previews={previews} requests={st['requests']} "
+              f"({'OK' if ok else 'FAIL'})")
+        return ok
+
+    async def _serve() -> int:
+        runner, bridge, port = await start_gateway(
+            core, port=0 if args.smoke else args.port)
+        if args.smoke:
+            ok = await _smoke_client(port)
+            await stop_gateway(runner, bridge)
+            return 0 if ok else 1
+        print(f"gateway listening on http://127.0.0.1:{port} "
+              f"(models: {sorted(models)}; Ctrl-C to stop)")
+        try:
+            await asyncio.Event().wait()
+        finally:
+            await stop_gateway(runner, bridge)
+        return 0
+
+    try:
+        rc = asyncio.run(_serve())
+    except KeyboardInterrupt:
+        rc = 0
+    if rc:
+        raise SystemExit(rc)
+
+
 def serve_unet(args):
+    if args.gateway:
+        return serve_unet_gateway(args)
     ucfg = configs.TOY_UNET
     schedule = make_schedule("linear", T=args.T)
     params = unet.init_params(jax.random.PRNGKey(args.seed), ucfg)
@@ -332,6 +434,13 @@ def main():
                     "--scheduler every 3rd request upgrades to it")
     ap.add_argument("--scheduler", action="store_true",
                     help="serve through the continuous-batching scheduler")
+    ap.add_argument("--gateway", action="store_true",
+                    help="unet: serve through the async HTTP/SSE gateway "
+                    "(serving/gateway) instead of a local replay; with "
+                    "--smoke, round-trip a live client and exit")
+    ap.add_argument("--port", type=int, default=8807,
+                    help="--gateway: TCP port to bind (--smoke always "
+                    "uses an ephemeral port)")
     ap.add_argument("--slots", type=int, default=4,
                     help="resident scheduler slots (--scheduler; per pool "
                     "with --pools)")
@@ -366,6 +475,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.gateway and args.arch != "unet":
+        ap.error("--gateway serves the diffusion fleet; use --arch unet")
     if args.order > 1 and args.eta > 0.0 and not args.scheduler:
         # multistep integrates the deterministic ODE view; the scheduler
         # path downgrades per request, the lockstep path must reject

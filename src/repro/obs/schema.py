@@ -21,7 +21,7 @@ ENGINE_STATS_KEYS = frozenset({
 
 # a SlotPool's stats() is its engine's plus the lifecycle/load fields
 POOL_STATS_KEYS = ENGINE_STATS_KEYS | frozenset({
-    "state", "drained_requests", "pending_steps",
+    "state", "model", "drained_requests", "pending_steps", "weight_swaps",
 })
 
 FLEET_STATS_KEYS = frozenset({
@@ -29,4 +29,12 @@ FLEET_STATS_KEYS = frozenset({
     "completed", "dropped", "drained_requests",
     "ticks", "slot_steps", "occupancy", "mega_tick_ratio",
     "tick_ewma_s", "pools",
+})
+
+# the gateway tier's stats() (serving/gateway/core.py) — front-door
+# admission/overload/stream counters plus the wrapped fleet's stats dict
+GATEWAY_STATS_KEYS = frozenset({
+    "requests", "rejected", "shed", "expired",
+    "streams", "previews_streamed", "results_streamed",
+    "swaps", "models", "queue_depth", "fleet",
 })

@@ -1,8 +1,10 @@
 from .engine import ARGenerator, DiffusionSampler, GenRequest, GenResult
+from .errors import RejectCode, RequestError
 from .fleet import PoolFleet, PoolState, SlotPool
 from .scheduler import (AdmissionQueue, ContinuousBatchingEngine,
                         SampleRequest, SampleResult)
 
 __all__ = ["ARGenerator", "AdmissionQueue", "ContinuousBatchingEngine",
            "DiffusionSampler", "GenRequest", "GenResult", "PoolFleet",
-           "PoolState", "SampleRequest", "SampleResult", "SlotPool"]
+           "PoolState", "RejectCode", "RequestError", "SampleRequest",
+           "SampleResult", "SlotPool"]

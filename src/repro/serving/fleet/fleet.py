@@ -38,6 +38,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 from repro.core.schedules import NoiseSchedule
 from repro.obs import Observability
 from repro.obs.registry import render_prometheus as _render_prom
+from repro.serving.errors import RejectCode, RequestError
 from repro.serving.scheduler import ContinuousBatchingEngine
 from repro.serving.scheduler.queue import AdmissionQueue
 from repro.serving.scheduler.request import SampleRequest, SampleResult
@@ -118,11 +119,31 @@ class PoolFleet:
         return cls(pools, max_queue=max_queue, obs=obs)
 
     # ---------------------------------------------------------- admission
+    def _validation_pool(self, req: SampleRequest):
+        """The pool whose capability check stands for ``req``.
+
+        Single-model requests (model=None) validate against pool 0 —
+        pools are capability-homogeneous. A model-routed request must
+        validate against (and later be dispatched to) a pool actually
+        serving that checkpoint; an unknown model is a typed 404 at the
+        front door.
+        """
+        model = getattr(req, "model", None)
+        if model is None:
+            return self.pools[0]
+        for p in self.pools:
+            if p.model == model:
+                return p
+        raise RequestError(
+            RejectCode.UNKNOWN_MODEL,
+            f"request {req.request_id}: no resident pool serves model "
+            f"'{model}' (resident: "
+            f"{sorted({p.model for p in self.pools if p.model})})")
+
     def submit(self, req: SampleRequest,
                now: Optional[float] = None) -> bool:
         """Enqueue into the global EDF queue; False = back-pressure."""
-        # pools are homogeneous: one pool's capability check stands for all
-        self.pools[0].engine.validate_request(req)
+        self._validation_pool(req).engine.validate_request(req)
         now = time.perf_counter() if now is None else now
         self.obs.trace_submit(req, now, deadline=req.deadline)
         return self.queue.submit(req, now)
@@ -147,6 +168,7 @@ class PoolFleet:
         admission with its own tick EWMA.
         """
         results: List[SampleResult] = []
+        deferred: List[SampleRequest] = []
         while len(self.queue) and any(p.capacity > 0 for p in self.pools):
             req, missed = self.queue.pop(now)
             for m in missed:
@@ -157,9 +179,16 @@ class PoolFleet:
             if req is None:
                 break
             pool, why = pick_pool(self.pools, req, explain=True)
-            if pool is None:      # raced out of capacity: requeue, stop
-                self.queue.requeue(req, now)
-                break
+            if pool is None:
+                # no ELIGIBLE pool has capacity (raced out, or every pool
+                # serving this request's model is busy/draining). Set the
+                # request aside and keep popping: one model's backlog must
+                # not head-of-line-block another model's dispatchable work
+                # behind it in the global EDF order. Per model the EDF
+                # order is preserved — capacity only shrinks within one
+                # dispatch round, so later same-model pops defer too.
+                deferred.append(req)
+                continue
             self.obs.registry.counter(
                 "fleet_routed_total", "dispatches by routing decision",
                 reason=why).inc()
@@ -167,6 +196,8 @@ class PoolFleet:
                 req.trace.pool_id = pool.pool_id
                 req.trace.emit("route", now, reason=why)
             pool.dispatch(req, now)
+        for req in deferred:      # back into the global queue, stamps kept
+            self.queue.requeue(req, now)
         return results
 
     # --------------------------------------------------------------- loop

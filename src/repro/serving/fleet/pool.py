@@ -23,12 +23,27 @@ class PoolState(enum.Enum):
 
 
 class SlotPool:
-    """Lifecycle + telemetry wrapper around one engine (one slot pool)."""
+    """Lifecycle + telemetry wrapper around one engine (one slot pool).
 
-    def __init__(self, pool_id: int, engine: ContinuousBatchingEngine):
+    Public lifecycle API (docs/gateway.md): ``drain()`` stops new routing
+    and hands queued work back, residents finish in place and the pool
+    parks STOPPED; ``install(params)`` hot-swaps the engine's weights on
+    a STOPPED pool (the only state where no resident can observe the
+    swap mid-trajectory); ``restore()`` makes it routable again. The
+    gateway's rolling weight rollout is exactly drain -> install ->
+    restore per pool.
+
+    ``model`` names the resident checkpoint this pool serves (multi-model
+    fleets route ``SampleRequest.model`` to matching pools); None = the
+    anonymous single-model fleet.
+    """
+
+    def __init__(self, pool_id: int, engine: ContinuousBatchingEngine,
+                 model: Optional[str] = None):
         engine.pool_id = pool_id
         self.pool_id = pool_id
         self.engine = engine
+        self.model = model
         self.state = PoolState.ACTIVE
         self.drained_requests = 0     # queued work handed back at drain
 
@@ -87,6 +102,22 @@ class SlotPool:
         """Reactivate a draining/stopped pool (refill: routable again)."""
         self.state = PoolState.ACTIVE
 
+    def install(self, params) -> None:
+        """Hot-swap this pool's resident weights (STOPPED pools only).
+
+        Delegates to ``engine.install_eps_params`` (same-treedef/shape/
+        dtype pytrees reuse the compiled tick — zero retrace); the STOPPED
+        gate guarantees no in-flight request ever mixes weights: residents
+        admitted before a drain finish on the OLD weights, requests routed
+        after the restore run on the NEW ones.
+        """
+        if self.state is not PoolState.STOPPED:
+            raise RuntimeError(
+                f"pool {self.pool_id} is {self.state.value}; weights may "
+                "only be installed on a STOPPED pool (drain it first so "
+                "no resident request can straddle the swap)")
+        self.engine.install_eps_params(params)
+
     def _maybe_stop(self) -> None:
         if self.state is PoolState.DRAINING and not self.busy:
             self.state = PoolState.STOPPED
@@ -108,9 +139,17 @@ class SlotPool:
         self.engine.reset_stats()
         self.drained_requests = 0
 
+    @property
+    def weight_swaps(self) -> int:
+        """Weight installs this pool's engine has absorbed (lifecycle
+        telemetry — survives reset_stats like the compile count)."""
+        return self.engine.weight_installs
+
     def stats(self) -> Dict:
         st = self.engine.stats()
         st["state"] = self.state.value
+        st["model"] = self.model
         st["drained_requests"] = self.drained_requests
         st["pending_steps"] = self.engine.pending_steps()
+        st["weight_swaps"] = self.weight_swaps
         return st

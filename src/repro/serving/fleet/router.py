@@ -45,13 +45,20 @@ def pick_pool(pools: Sequence[SlotPool], req, explain: bool = False):
     the label the fleet stamps on its routing counters and ``route``
     trace events.
     """
-    cands: List[SlotPool] = [p for p in pools if p.capacity > 0]
+    model = getattr(req, "model", None)
+    eligible: List[SlotPool] = ([p for p in pools if p.model == model]
+                                if model is not None else list(pools))
+    cands: List[SlotPool] = [p for p in eligible if p.capacity > 0]
     pool: Optional[SlotPool] = None
     reason = "full"
     if cands:
         key = getattr(req, "affinity_key", None)
-        pref = (pools[affinity_pool(key, len(pools))]
-                if key is not None else None)
+        # affinity hashes over the model-ELIGIBLE subset: the sticky pick
+        # must be a pool that can serve the request's checkpoint, and the
+        # mapping stays stable for a given (key, model) pair even as other
+        # models' pools drain and restore
+        pref = (eligible[affinity_pool(key, len(eligible))]
+                if key is not None and eligible else None)
         if pref is not None and pref.capacity > 0:
             pool, reason = pref, "affinity"
         else:

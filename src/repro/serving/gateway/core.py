@@ -1,0 +1,474 @@
+"""GatewayCore — the synchronous heart of the serving front door.
+
+Everything the HTTP layer does maps onto three calls here, all executed
+on ONE thread (the bridge's engine thread — see gateway/bridge.py), so
+the fleet, pools, and engines never see concurrent access:
+
+* ``submit(spec, on_event)`` — parse a wire-format request dict into a
+  ``SampleRequest``, validate it against the fleet (typed
+  ``RequestError`` refusals with HTTP statuses), enqueue it, and
+  register the caller's event callback.
+* ``pump()`` — one serving round: shed overload victims from the global
+  queue (admission.OverloadPolicy — BEFORE dispatch, so doomed work
+  never costs a tick), advance the fleet one tick, deliver terminal
+  results/drops to their callbacks, and step the rolling weight-swap
+  state machine.
+* ``hot_swap(model)`` — start a rolling rollout of the model's STAGED
+  checkpoint: drain one pool at a time, install on STOPPED (zero
+  retrace — see engine.install_eps_params), restore, move to the next;
+  promote the registry version when the last pool is done. In-flight
+  requests on a draining pool complete on the OLD weights; queued work
+  re-routes through the global queue.
+
+Events delivered to ``on_event`` callbacks (invoked on the engine
+thread; the HTTP layer trampolines them onto the asyncio loop):
+
+  {"event": "preview", "request_id", "step", "x0"}        (np.ndarray)
+  {"event": "result",  "request_id", "x0", "S", "pool_id",
+   "latency_s", "queue_wait_s", "service_s",
+   "deadline_missed", "previews"}                          (terminal)
+  {"event": "error",   "request_id", "code", "message", "status"}
+                                                           (terminal)
+
+Every request gets EXACTLY one terminal event. The x0 payloads stay
+numpy here — serialization belongs to the transport.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, Dict, List, Optional
+
+from repro.obs import Observability
+from repro.obs.registry import render_prometheus as _render_prom
+from repro.serving.errors import RejectCode, RequestError
+from repro.serving.fleet import PoolFleet, PoolState, SlotPool
+from repro.serving.scheduler import (ContinuousBatchingEngine,
+                                     SampleRequest)
+
+from .admission import OverloadPolicy
+from .registry import ModelRegistry
+
+# wire-format request fields (POST /v1/sample body). "stream" is consumed
+# by the HTTP layer but tolerated here so specs can be passed through.
+_SPEC_FIELDS = {
+    "model": (str, type(None)),
+    "S": (int,),
+    "eta": (int, float),
+    "tau": (str,),
+    "seed": (int,),
+    "deadline_s": (int, float, type(None)),
+    "preview_every": (int,),
+    "auto_plan": (bool,),
+    "affinity_key": (int, str, type(None)),
+    "stream": (bool,),
+}
+_TAU_KINDS = ("linear", "quadratic")
+
+
+def parse_spec(spec: Dict, request_id: int, now: float) -> SampleRequest:
+    """Wire dict -> SampleRequest; every refusal is a typed BAD_REQUEST."""
+    if not isinstance(spec, dict):
+        raise RequestError(RejectCode.BAD_REQUEST,
+                           "request body must be a JSON object")
+    for key, val in spec.items():
+        if key not in _SPEC_FIELDS:
+            raise RequestError(
+                RejectCode.BAD_REQUEST,
+                f"unknown request field '{key}' (allowed: "
+                f"{sorted(_SPEC_FIELDS)})")
+        if not isinstance(val, _SPEC_FIELDS[key]):
+            raise RequestError(
+                RejectCode.BAD_REQUEST,
+                f"field '{key}' must be "
+                f"{'/'.join(t.__name__ for t in _SPEC_FIELDS[key])}, "
+                f"got {type(val).__name__}")
+    tau = spec.get("tau", "linear")
+    if tau not in _TAU_KINDS:
+        raise RequestError(RejectCode.BAD_REQUEST,
+                           f"tau must be one of {_TAU_KINDS}, got '{tau}'")
+    deadline_s = spec.get("deadline_s")
+    preview_every = spec.get("preview_every", 0)
+    if preview_every < 0:
+        raise RequestError(RejectCode.BAD_REQUEST,
+                           "preview_every must be >= 0")
+    affinity = spec.get("affinity_key")
+    return SampleRequest(
+        request_id=request_id,
+        S=spec.get("S", 20),
+        eta=float(spec.get("eta", 0.0)),
+        tau_kind=tau,
+        auto_plan=spec.get("auto_plan", False),
+        seed=spec.get("seed", 0),
+        deadline=(now + float(deadline_s)
+                  if deadline_s is not None else None),
+        preview_every=preview_every,
+        affinity_key=affinity,
+        model=spec.get("model"),
+    )
+
+
+class _SwapJob:
+    """One rolling weight rollout: the pools still to walk + the pool
+    currently draining (None between pools)."""
+
+    __slots__ = ("model", "pending", "current")
+
+    def __init__(self, model: str, pool_ids: List[int]):
+        self.model = model
+        self.pending = list(pool_ids)
+        self.current: Optional[int] = None
+
+
+class GatewayCore:
+    """Front-door state machine over a PoolFleet + ModelRegistry.
+
+    Single-threaded by contract: construct it, then hand it to an
+    EngineBridge and interact only through ``bridge.call/acall`` (the
+    HTTP layer does). Telemetry: the gateway owns the top-level
+    ``Observability``; the fleet and every pool engine run on
+    ``obs.child()`` handles — own registries, one shared tracer — merged
+    with tier/pool labels in ``render_prometheus``.
+    """
+
+    def __init__(self, fleet: PoolFleet, registry: ModelRegistry,
+                 policy: Optional[OverloadPolicy] = None,
+                 obs: Optional[Observability] = None):
+        self.fleet = fleet
+        self.registry = registry
+        self.policy = policy if policy is not None else OverloadPolicy()
+        self.obs = obs if obs is not None else Observability()
+        self._ids = itertools.count()
+        self._handlers: Dict[int, Callable] = {}
+        self._requests: Dict[int, SampleRequest] = {}
+        self._swap: Optional[_SwapJob] = None
+        self.shed_log: List[Dict] = []   # per-shed audit records (the
+        #                                  load bench's ordering oracle)
+        reg = self.obs.registry
+        self._c_requests = reg.counter(
+            "gateway_requests_total", "requests accepted at the front door")
+        self._c_previews = reg.counter(
+            "gateway_previews_streamed_total",
+            "x0 preview events delivered to clients")
+        self._c_results = reg.counter(
+            "gateway_results_streamed_total",
+            "terminal results delivered to clients")
+        self._c_expired = reg.counter(
+            "gateway_expired_total",
+            "queued requests expired before admission")
+        self._c_swaps = reg.counter(
+            "gateway_swaps_total", "completed weight rollouts")
+        self._g_streams = reg.gauge(
+            "gateway_streams", "requests with a live event stream")
+
+    # ----------------------------------------------------------- plumbing
+    def _sum_counter(self, name: str) -> int:
+        return int(sum(i.value for i in self.obs.registry.instruments()
+                       if i.name == name))
+
+    def _count_reject(self, code: RejectCode) -> None:
+        self.obs.registry.counter(
+            "gateway_rejected_total",
+            "typed front-door refusals by reject code",
+            code=code.value).inc()
+
+    def _tick_estimate(self) -> Optional[float]:
+        known = [p.tick_ewma_s for p in self.fleet.pools
+                 if p.tick_ewma_s is not None]
+        return (sum(known) / len(known)) if known else None
+
+    @property
+    def busy(self) -> bool:
+        """Whether pump() still has work: fleet activity, undelivered
+        streams, or a rollout mid-walk."""
+        return (self.fleet.busy or self._swap is not None
+                or bool(self._handlers))
+
+    # ---------------------------------------------------------- admission
+    def submit(self, spec: Dict, on_event: Callable[[Dict], None],
+               now: Optional[float] = None) -> int:
+        """Accept one wire-format request; returns its request_id.
+
+        Raises RequestError (typed code + HTTP status) on any refusal —
+        unknown field, unknown model, capability mismatch, or the global
+        queue's depth bound. On success ``on_event`` will receive zero or
+        more previews and exactly one terminal event.
+        """
+        now = time.perf_counter() if now is None else now
+        rid = next(self._ids)
+        try:
+            req = parse_spec(spec, rid, now)
+        except RequestError as e:
+            self._count_reject(e.code)
+            raise
+        if req.preview_every > 0:
+            req.on_preview = self._on_preview
+        try:
+            accepted = self.fleet.submit(req, now=now)
+        except RequestError as e:
+            self._count_reject(e.code)
+            raise
+        if not accepted:
+            self._count_reject(RejectCode.QUEUE_FULL)
+            raise RequestError(
+                RejectCode.QUEUE_FULL,
+                f"request {rid}: global admission queue at its depth "
+                "bound — retry with backoff")
+        self._handlers[rid] = on_event
+        self._requests[rid] = req
+        self._c_requests.inc()
+        self._g_streams.set(len(self._handlers))
+        return rid
+
+    def _on_preview(self, request_id: int, step: int, x0) -> None:
+        h = self._handlers.get(request_id)
+        if h is None:
+            return
+        self._c_previews.inc()
+        h({"event": "preview", "request_id": request_id, "step": step,
+           "x0": x0})
+
+    def _terminal(self, request_id: int, event: Dict) -> None:
+        h = self._handlers.pop(request_id, None)
+        self._requests.pop(request_id, None)
+        self._g_streams.set(len(self._handlers))
+        if h is not None:
+            h(event)
+
+    # ----------------------------------------------------------- overload
+    def _shed(self, now: float) -> int:
+        """The pre-dispatch overload sweep (see admission.OverloadPolicy):
+        remove victims from the global queue, close their spans with a
+        terminal ``drop`` (reason="shed"), deliver their error events,
+        and append audit records to ``shed_log``."""
+        pending = self.fleet.queue.pending_requests()
+        if not pending:
+            return 0
+        plan = self.policy.plan_shed(pending, now, self._tick_estimate())
+        if not plan:
+            return 0
+        victims = {id(r): code for r, code in plan}
+        removed = self.fleet.queue.remove_if(lambda r: id(r) in victims)
+        kept_deadlines = [r.deadline - now
+                          for r in self.fleet.queue.pending_requests()
+                          if r.deadline is not None]
+        kept_min = min(kept_deadlines) if kept_deadlines else None
+        for req in removed:
+            code = victims[id(req)]
+            headroom = (req.deadline - now
+                        if req.deadline is not None else None)
+            self.obs.registry.counter(
+                "gateway_shed_total",
+                "overload sheds by reject code", code=code.value).inc()
+            if req.trace is not None:
+                req.trace.emit("drop", now, reason="shed",
+                               code=code.value)
+            self.shed_log.append({
+                "t": now, "request_id": req.request_id,
+                "code": code.value, "headroom_s": headroom,
+                "kept_min_headroom_s": kept_min,
+            })
+            self._terminal(req.request_id, {
+                "event": "error", "request_id": req.request_id,
+                "code": code.value,
+                "message": (f"request {req.request_id} shed under "
+                            f"overload ({code.value})"),
+                "status": code.http_status,
+            })
+        return len(removed)
+
+    # --------------------------------------------------------------- loop
+    def pump(self, now: Optional[float] = None) -> int:
+        """One serving round; returns how many terminal events fired.
+
+        Order matters: shed FIRST (victims must never reach dispatch),
+        then the fleet tick (dispatch + every pool's engine tick, which
+        also fires preview callbacks), then terminal delivery, then the
+        swap state machine (drained pools observed after their tick).
+        """
+        wall = now is None
+        t = time.perf_counter() if wall else now
+        delivered = self._shed(t)
+        results = self.fleet.tick(now)
+        for r in results:
+            if r.request_id not in self._handlers:
+                continue            # warm-up / foreign traffic
+            if r.dropped:
+                self._c_expired.inc()
+                code = RejectCode.EXPIRED
+                self._terminal(r.request_id, {
+                    "event": "error", "request_id": r.request_id,
+                    "code": code.value,
+                    "message": (f"request {r.request_id} expired in the "
+                                "queue before admission"),
+                    "status": code.http_status,
+                })
+            else:
+                self._c_results.inc()
+                self._terminal(r.request_id, {
+                    "event": "result", "request_id": r.request_id,
+                    "x0": r.x0, "S": r.S, "pool_id": r.pool_id,
+                    "latency_s": r.latency_s,
+                    "queue_wait_s": r.queue_wait_s,
+                    "service_s": r.service_s,
+                    "deadline_missed": r.deadline_missed,
+                    "previews": r.previews,
+                })
+            delivered += 1
+        self._advance_swap(time.perf_counter() if wall else now)
+        return delivered
+
+    def run_until_idle(self, max_pumps: Optional[int] = None,
+                       now_fn: Optional[Callable[[], float]] = None
+                       ) -> int:
+        """Pump until nothing is in flight (tests / trace replays)."""
+        n = 0
+        while self.busy:
+            if max_pumps is not None and n >= max_pumps:
+                break
+            self.pump(now_fn() if now_fn else None)
+            n += 1
+        return n
+
+    # ----------------------------------------------------------- hot swap
+    def hot_swap(self, model: str, params=None,
+                 now: Optional[float] = None) -> int:
+        """Start a rolling rollout of ``model``'s staged checkpoint.
+
+        ``params`` given stages it first (registry-validated). Returns
+        the number of pools the rollout will walk. The walk itself
+        happens across subsequent ``pump`` calls — one pool drains while
+        the rest keep serving, so the model stays available throughout
+        (with a single pool, its requests wait in the global queue and
+        dispatch after the restore).
+        """
+        now = time.perf_counter() if now is None else now
+        if params is not None:
+            self.registry.stage(model, params)
+        if model not in self.registry:
+            raise RequestError(
+                RejectCode.UNKNOWN_MODEL,
+                f"rollout: model '{model}' is not registered")
+        if self.registry.staged_params(model) is None:
+            raise ValueError(f"rollout: model '{model}' has no staged "
+                             "checkpoint (stage one first)")
+        if self._swap is not None:
+            raise RuntimeError(
+                f"a rollout of '{self._swap.model}' is already in "
+                "progress; one rolling swap at a time")
+        pool_ids = [p.pool_id for p in self.fleet.pools
+                    if p.model == model]
+        if not pool_ids:
+            raise RequestError(
+                RejectCode.UNKNOWN_MODEL,
+                f"rollout: no pool serves model '{model}'")
+        self._swap = _SwapJob(model, pool_ids)
+        self._advance_swap(now)
+        return len(pool_ids)
+
+    @property
+    def swapping(self) -> Optional[str]:
+        return self._swap.model if self._swap is not None else None
+
+    def _advance_swap(self, now: float) -> None:
+        """Step the rollout as far as the fleet's state allows: start
+        draining the next pool, or — once the draining pool has parked
+        STOPPED — install + restore and move on. Runs every pump."""
+        job = self._swap
+        while job is not None:
+            if job.current is None:
+                if not job.pending:
+                    self.registry.promote(job.model)
+                    self._c_swaps.inc()
+                    self._swap = None
+                    return
+                job.current = job.pending.pop(0)
+                self.fleet.drain_pool(job.current, now=now)
+                continue
+            pool = self.fleet.pools[job.current]
+            if pool.state is not PoolState.STOPPED:
+                return               # residents still finishing; next pump
+            pool.install(self.registry.staged_params(job.model))
+            self.obs.registry.counter(
+                "gateway_swap_pools_total",
+                "pools walked by completed rollouts",
+                model=job.model).inc()
+            self.fleet.restore_pool(job.current)
+            job.current = None
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> Dict:
+        """The gateway-tier stats dict (obs/schema.GATEWAY_STATS_KEYS)."""
+        return {
+            "requests": int(self._c_requests.value),
+            "rejected": self._sum_counter("gateway_rejected_total"),
+            "shed": self._sum_counter("gateway_shed_total"),
+            "expired": int(self._c_expired.value),
+            "streams": len(self._handlers),
+            "previews_streamed": int(self._c_previews.value),
+            "results_streamed": int(self._c_results.value),
+            "swaps": int(self._c_swaps.value),
+            "models": self.registry.describe(),
+            "queue_depth": len(self.fleet.queue),
+            "fleet": self.fleet.stats(),
+        }
+
+    def reset_stats(self) -> None:
+        """Zero gateway + fleet throughput telemetry (post-warm-up); the
+        shed log and swap counters are lifecycle audit state and keep."""
+        self.fleet.reset_stats()
+        keep = {"gateway_swaps_total", "gateway_swap_pools_total"}
+        for inst in self.obs.registry.instruments():
+            if (inst.name.startswith("gateway_") and inst.kind != "gauge"
+                    and inst.name not in keep):
+                inst.reset()
+
+    def render_prometheus(self) -> str:
+        """One text snapshot over gateway + fleet + every pool engine."""
+        parts = [(self.obs.registry, {"tier": "gateway"}),
+                 (self.fleet.obs.registry, {"tier": "fleet"})]
+        parts += [(p.engine.obs.registry, {"pool": p.pool_id})
+                  for p in self.fleet.pools]
+        return _render_prom(parts)
+
+    # -------------------------------------------------------- construction
+    @classmethod
+    def build(cls, schedule, eps_apply, sample_shape, *,
+              models: Dict[str, object], pools_per_model: int = 1,
+              slots: int = 4, max_queue: Optional[int] = None,
+              policy: Optional[OverloadPolicy] = None,
+              obs: Optional[Observability] = None,
+              warm: bool = True, **engine_kw) -> "GatewayCore":
+        """A multi-model gateway over fresh pools.
+
+        ``eps_apply(params, x, t)`` is the shared trunk; ``models`` maps
+        name -> weight pytree (all install-compatible — same trunk).
+        Every model gets ``pools_per_model`` pools whose engines hold its
+        weights as hot-swappable ``eps_params``. Engines compile the
+        preview tick by default (SSE x0 streaming); pass preview=False
+        to opt out. ``warm=True`` traces every pool's tick with a 1-step
+        request and resets throughput stats, so the first real request
+        never pays (or mis-measures) compilation.
+        """
+        obs = obs if obs is not None else Observability()
+        registry = ModelRegistry()
+        preview = engine_kw.pop("preview", True)
+        pools = []
+        pid = 0
+        for name in sorted(models):
+            registry.register(name, models[name])
+            for _ in range(pools_per_model):
+                eng = ContinuousBatchingEngine(
+                    schedule, eps_apply, sample_shape, slots,
+                    eps_params=models[name], preview=preview,
+                    pool_id=pid, obs=obs.child(), **engine_kw)
+                pools.append(SlotPool(pid, eng, model=name))
+                pid += 1
+        fleet = PoolFleet(pools, max_queue=max_queue, obs=obs.child())
+        core = cls(fleet, registry, policy=policy, obs=obs)
+        if warm:
+            for p in pools:
+                p.engine.serve([SampleRequest(request_id=-1 - p.pool_id,
+                                              S=1, seed=0)])
+            core.reset_stats()
+        return core

@@ -1,0 +1,107 @@
+"""ModelRegistry — resident checkpoints behind the gateway's front door.
+
+A gateway serves N named models over one capability-homogeneous fleet:
+each model owns one or more slot pools whose engines hold its weights as
+a hot-swappable ``eps_params`` pytree. The registry is the host-side
+source of truth for WHICH weights are resident: ``register`` installs a
+model at version 1, ``stage`` parks a candidate checkpoint (validated
+against the resident tree/shapes — the same condition under which an
+engine swap is zero-retrace), and ``promote`` makes the staged weights
+current once the gateway's rolling drain -> install -> restore has
+walked every pool (serving/gateway/core.py).
+
+The registry never touches an engine itself — it is bookkeeping the
+gateway's swap state machine reads; pools are the unit of installation.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _check_like(name: str, resident, candidate) -> None:
+    """A staged checkpoint must be install-compatible with the resident
+    one: same treedef, same per-leaf shapes/dtypes (the zero-retrace
+    swap condition, checked here at the API edge so a bad checkpoint
+    fails at stage time, not mid-rollout)."""
+    old_l, old_t = jax.tree_util.tree_flatten(resident)
+    new_l, new_t = jax.tree_util.tree_flatten(candidate)
+    if old_t != new_t:
+        raise ValueError(
+            f"model '{name}': staged checkpoint tree structure differs "
+            f"from the resident weights ({new_t} vs {old_t})")
+    for i, (o, n) in enumerate(zip(old_l, new_l)):
+        if (jnp.shape(o) != jnp.shape(n)
+                or jnp.result_type(o) != jnp.result_type(n)):
+            raise ValueError(
+                f"model '{name}': staged leaf {i} is "
+                f"{jnp.shape(n)}/{jnp.result_type(n)}, resident is "
+                f"{jnp.shape(o)}/{jnp.result_type(o)} — a rollout must "
+                "preserve shapes/dtypes to reuse the compiled ticks")
+
+
+class ModelRegistry:
+    """Named resident checkpoints + staged candidates with versioning."""
+
+    def __init__(self):
+        self._resident: Dict[str, object] = {}
+        self._staged: Dict[str, object] = {}
+        self._version: Dict[str, int] = {}
+
+    # ------------------------------------------------------------ queries
+    @property
+    def names(self) -> List[str]:
+        return sorted(self._resident)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._resident
+
+    def __len__(self) -> int:
+        return len(self._resident)
+
+    def params(self, name: str):
+        """The RESIDENT weights for ``name`` (what active pools serve)."""
+        return self._resident[name]
+
+    def staged_params(self, name: str):
+        """The staged candidate for ``name`` (None = nothing staged)."""
+        return self._staged.get(name)
+
+    def version(self, name: str) -> int:
+        return self._version[name]
+
+    # ---------------------------------------------------------- lifecycle
+    def register(self, name: str, params) -> None:
+        """Install a new model at version 1 (gateway build time)."""
+        if name in self._resident:
+            raise ValueError(f"model '{name}' is already registered; "
+                             "stage + promote to replace its weights")
+        self._resident[name] = params
+        self._version[name] = 1
+
+    def stage(self, name: str, params) -> None:
+        """Park a candidate checkpoint for a future rollout."""
+        if name not in self._resident:
+            raise KeyError(f"model '{name}' is not registered")
+        _check_like(name, self._resident[name], params)
+        self._staged[name] = params
+
+    def promote(self, name: str) -> int:
+        """Staged -> resident (the rollout's final step); returns the new
+        version. The gateway calls this only after every pool serving
+        ``name`` has drained, installed, and restored."""
+        staged = self._staged.pop(name, None)
+        if staged is None:
+            raise ValueError(f"model '{name}' has no staged checkpoint "
+                             "to promote")
+        self._resident[name] = staged
+        self._version[name] += 1
+        return self._version[name]
+
+    def describe(self) -> Dict[str, Dict]:
+        """The /v1/models payload: per-model version + staged flag."""
+        return {name: {"version": self._version[name],
+                       "staged": name in self._staged}
+                for name in self.names}

@@ -60,6 +60,7 @@ from repro.sampling import MAX_ORDER, SamplerPlan
 # can never drift from the kernel/oracle definition
 from repro.kernels.sampler_step.kernel import _GOLDEN, _fmix32
 
+from ..errors import RejectCode, RequestError
 from .queue import AdmissionQueue
 from .request import SampleRequest, SampleResult
 
@@ -112,6 +113,15 @@ class ContinuousBatchingEngine:
         carry a (max_order-1, R, C) eps-history stack and let slots mix
         solver orders freely (order-1 slots ride along with weight rows
         [1, 0, ...]).
+      eps_params: a pytree of model weights passed INTO the jitted tick
+        as an argument (eps_fn signature becomes ``eps(params, x, t)``).
+        None (the default) keeps the closure-captured convention —
+        weights bake into the compiled tick as constants. Passing a
+        pytree makes the weights HOT-SWAPPABLE: ``install_eps_params``
+        replaces them between ticks, and because a same-treedef/
+        shape/dtype pytree hits the existing jit cache, a swap never
+        retraces the tick (the gateway's drain -> install -> restore
+        rollout is built on this; see docs/gateway.md).
       max_queue: admission-queue depth bound (None = unbounded).
       donate: donate the slot state into the tick (default: on TPU/GPU).
       interpret: Pallas interpret mode; None = compiled on TPU only.
@@ -167,6 +177,7 @@ class ContinuousBatchingEngine:
                  dtype=jnp.float32, *, stochastic: bool = False,
                  clip_x0: Optional[float] = None, preview: bool = False,
                  max_order: int = 1,
+                 eps_params=None,
                  max_queue: Optional[int] = None,
                  donate: Optional[bool] = None,
                  interpret: Optional[bool] = None,
@@ -212,6 +223,7 @@ class ContinuousBatchingEngine:
 
         self.mesh = mesh
         self.pool_id = pool_id
+        self.eps_params = eps_params
         self.use_mega = self._resolve_mega(use_mega)
         self.tick_variant = ("mega" if self.use_mega else
                              "multistep" if self.max_order > 1 else "rows")
@@ -241,6 +253,9 @@ class ContinuousBatchingEngine:
         self._c_miss = reg.counter(
             "engine_deadline_miss_total",
             "requests finished or dropped past their deadline")
+        self._c_installs = reg.counter(
+            "engine_weight_installs_total",
+            "eps_params hot-swaps installed (zero-retrace each)")
         self._c_wall = reg.counter(
             "engine_tick_wall_seconds",
             "accumulated wall time inside the jitted tick")
@@ -345,6 +360,10 @@ class ContinuousBatchingEngine:
         return int(self._c_miss.value)
 
     @property
+    def weight_installs(self) -> int:
+        return int(self._c_installs.value)
+
+    @property
     def _tick_wall_s(self) -> float:
         return float(self._c_wall.value)
 
@@ -365,7 +384,11 @@ class ContinuousBatchingEngine:
         from repro.kernels import megastep as mega_ops
 
         spec = getattr(self.eps_fn, "mega_spec", None)
-        if self.stochastic or self.preview or self.max_order > 1:
+        if self.eps_params is not None:
+            ok, why = False, ("megakernel tick bakes its trunk weights "
+                              "into the VMEM spec; a hot-swappable "
+                              "eps_params engine runs the unfused tick")
+        elif self.stochastic or self.preview or self.max_order > 1:
             ok, why = False, ("megakernel tick is deterministic/order-1/"
                               "preview-free only")
         else:
@@ -395,6 +418,55 @@ class ContinuousBatchingEngine:
             return hist2
         return jax.lax.with_sharding_constraint(hist2, self._hist_sharding)
 
+    def _bind_eps(self, params):
+        """The eps callable a tick trace sees: the raw closure-weight fn,
+        or — on an eps_params engine — a partial binding the (traced)
+        params argument, preserving the ``slot_tile_aware`` marker the
+        slot-tile step dispatches on."""
+        if params is None:
+            return self.eps_fn
+        raw = self.eps_fn
+
+        def bound(x, t):
+            return raw(params, x, t)
+
+        bound.slot_tile_aware = getattr(raw, "slot_tile_aware", False)
+        return bound
+
+    def install_eps_params(self, new_params) -> None:
+        """Hot-swap the model weights WITHOUT retracing the tick.
+
+        Only legal on an engine built with ``eps_params=`` (closure
+        weights are baked into the compiled program). The replacement
+        pytree must match the resident one in treedef and per-leaf
+        shape/dtype — that is exactly the condition under which the next
+        tick hits the existing jit cache entry, so the zero-retrace
+        contract (``stats()['compiled_ticks']``) is preserved by
+        construction. The fleet tier swaps only on a drained (STOPPED)
+        pool; see SlotPool.install.
+        """
+        if self.eps_params is None:
+            raise RuntimeError(
+                "engine has no eps_params to swap: closure-captured "
+                "weights are compiled into the tick — build the engine "
+                "with eps_params= to make weights installable")
+        old_l, old_t = jax.tree_util.tree_flatten(self.eps_params)
+        new_l, new_t = jax.tree_util.tree_flatten(new_params)
+        if old_t != new_t:
+            raise ValueError(
+                "install_eps_params: new pytree structure differs from "
+                f"the resident weights ({new_t} vs {old_t})")
+        for i, (o, n) in enumerate(zip(old_l, new_l)):
+            if (jnp.shape(o) != jnp.shape(n)
+                    or jnp.result_type(o) != jnp.result_type(n)):
+                raise ValueError(
+                    f"install_eps_params: leaf {i} is "
+                    f"{jnp.shape(n)}/{jnp.result_type(n)}, resident is "
+                    f"{jnp.shape(o)}/{jnp.result_type(o)} — a swap must "
+                    "preserve shapes/dtypes to reuse the compiled tick")
+        self.eps_params = new_params
+        self._c_installs.inc()
+
     def _make_tick(self):
         shape = self.shape
 
@@ -416,11 +488,12 @@ class ContinuousBatchingEngine:
             return jax.jit(tick, **kw)
 
         if self.max_order == 1:
-            def tick(x2, states):
+            def tick(x2, states, params=None):
                 self._traces += 1   # host side effect: fires once per trace
                 self._c_compiled.inc()
                 out = slot_tile_step(
-                    self.eps_fn, x2, states, shape, clip_x0=self.clip_x0,
+                    self._bind_eps(params), x2, states, shape,
+                    clip_x0=self.clip_x0,
                     stochastic=self.stochastic, want_x0=self.preview,
                     hw_prng=self.hw_prng, interpret=self.interpret)
                 if self.preview:
@@ -428,14 +501,16 @@ class ContinuousBatchingEngine:
                             self._constrain(out[1]))
                 return self._constrain(out)
 
+            # weights are a tick ARGUMENT, never donated: they are reused
+            # verbatim by every subsequent tick until a swap replaces them
             kw = dict(donate_argnums=(0,)) if self.donate else {}
             return jax.jit(tick, **kw)
 
-        def tick(x2, hist2, states):
+        def tick(x2, hist2, states, params=None):
             self._traces += 1       # host side effect: fires once per trace
             self._c_compiled.inc()
             out, new_hist2 = slot_tile_step(
-                self.eps_fn, x2, states, shape, hist2=hist2,
+                self._bind_eps(params), x2, states, shape, hist2=hist2,
                 clip_x0=self.clip_x0, stochastic=self.stochastic,
                 want_x0=self.preview, hw_prng=self.hw_prng,
                 interpret=self.interpret)
@@ -481,16 +556,19 @@ class ContinuousBatchingEngine:
             from repro.sampling.plan import _schedule_digest
             self._schedule_digest = _schedule_digest(self.schedule)
         if plan.schedule_digest() != self._schedule_digest:
-            raise ValueError(
+            raise RequestError(
+                RejectCode.SCHEDULE_MISMATCH,
                 f"request {req.request_id}: plan built on a different "
                 "noise schedule than this engine serves")
         if plan.clip_x0 != self.clip_x0:
-            raise ValueError(
+            raise RequestError(
+                RejectCode.CLIP_MISMATCH,
                 f"request {req.request_id}: plan clip_x0={plan.clip_x0} != "
                 f"engine clip_x0={self.clip_x0} (the clip is a compile-time "
                 "slot-pool property)")
         if plan.order > self.max_order:
-            raise ValueError(
+            raise RequestError(
+                RejectCode.ORDER_UNSUPPORTED,
                 f"request {req.request_id}: plan order={plan.order} exceeds "
                 f"engine max_order={self.max_order} (build the engine with "
                 "max_order >= the largest solver order it must serve)")
@@ -498,36 +576,48 @@ class ContinuousBatchingEngine:
     def validate_request(self, req: SampleRequest) -> None:
         """Raise if this engine can never serve ``req`` (capability check).
 
+        Public API (docs/gateway.md): every refusal is a typed
+        :class:`repro.serving.errors.RequestError` whose ``.code`` is a
+        stable :class:`RejectCode` and whose ``.status`` is the HTTP
+        status a gateway maps it to. RequestError subclasses ValueError,
+        so pre-gateway callers keep working.
+
         Shared with the fleet tier: a PoolFleet validates against one pool
         at submit (pools are capability-homogeneous) so an unservable
         request fails loudly at the front door, not at dispatch.
         """
         if req.auto_plan:
             if req.plan is not None:
-                raise ValueError(
+                raise RequestError(
+                    RejectCode.AUTO_PLAN_CONFLICT,
                     f"request {req.request_id}: auto_plan=True and an "
                     "explicit plan are mutually exclusive (the engine "
                     "fills plan in at admission)")
             if self.plan_bank is None:
-                raise ValueError(
+                raise RequestError(
+                    RejectCode.NO_PLAN_BANK,
                     f"request {req.request_id}: auto_plan=True needs an "
                     "engine built with plan_bank=")
             if self._bank_candidates() == 0:
-                raise ValueError(
+                raise RequestError(
+                    RejectCode.BANK_INCOMPATIBLE,
                     f"request {req.request_id}: the plan bank has no entry "
                     "compatible with this engine (stochastic rows need a "
                     f"stochastic engine; order <= max_order="
                     f"{self.max_order}; clip == {self.clip_x0})")
         else:
             if req.stochastic and not self.stochastic:
-                raise ValueError(
+                raise RequestError(
+                    RejectCode.STOCHASTIC_UNSUPPORTED,
                     f"request {req.request_id}: a stochastic plan (sigma > "
                     "0 somewhere) needs a stochastic=True engine "
                     "(deterministic tick has no PRNG)")
             self._validate_plan(req)
             if not 1 <= req.steps <= self.schedule.T:
-                raise ValueError(f"request {req.request_id}: S={req.steps} "
-                                 f"outside [1, T={self.schedule.T}]")
+                raise RequestError(
+                    RejectCode.BAD_STEPS,
+                    f"request {req.request_id}: S={req.steps} "
+                    f"outside [1, T={self.schedule.T}]")
 
     def submit(self, req: SampleRequest,
                now: Optional[float] = None) -> bool:
@@ -732,10 +822,16 @@ class ContinuousBatchingEngine:
         with (annotate(f"repro/tick/{self.tick_variant}")
               if self.obs.profile else contextlib.nullcontext()):
             if self.max_order == 1:
-                out = self._tick_fn(self._x2, states)
+                out = (self._tick_fn(self._x2, states)
+                       if self.eps_params is None
+                       else self._tick_fn(self._x2, states,
+                                          self.eps_params))
             else:
-                out, self._hist2 = self._tick_fn(self._x2, self._hist2,
-                                                 states)
+                out, self._hist2 = (
+                    self._tick_fn(self._x2, self._hist2, states)
+                    if self.eps_params is None
+                    else self._tick_fn(self._x2, self._hist2, states,
+                                       self.eps_params))
             self._x2, x0_2 = out if self.preview else (out, None)
             jax.block_until_ready(self._x2)
         t1 = time.perf_counter()
@@ -833,7 +929,8 @@ class ContinuousBatchingEngine:
         queue's own and are untouched, matching the pre-registry
         behavior.
         """
-        keep = {"engine_compiled_ticks_total"}
+        keep = {"engine_compiled_ticks_total",
+                "engine_weight_installs_total"}
         for inst in self.obs.registry.instruments():
             if (inst.name.startswith("engine_") and inst.kind != "gauge"
                     and inst.name not in keep):

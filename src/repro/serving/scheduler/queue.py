@@ -119,6 +119,24 @@ class AdmissionQueue:
         self._g_depth.set(len(self._heap))
         return out, missed
 
+    def remove_if(self, pred: Callable[[SampleRequest], bool]
+                  ) -> List[SampleRequest]:
+        """Remove every queued request matching ``pred``; return them in
+        EDF order. The overload-shedding primitive (docs/gateway.md): a
+        gateway sheds doomed work from the queue BEFORE it reaches a
+        slot, so an overloaded fleet never spends ticks on requests it
+        will drop anyway. Kept requests preserve their heap entries
+        (seq numbers and submit stamps), so FIFO-among-equal-deadlines
+        ordering survives the sweep."""
+        removed, kept = [], []
+        for entry in self._heap:
+            (removed if pred(entry[2]) else kept).append(entry)
+        if removed:
+            heapq.heapify(kept)
+            self._heap = kept
+            self._g_depth.set(len(kept))
+        return [r for _, _, r in sorted(removed)]
+
     def pending_requests(self) -> List[SampleRequest]:
         """Queued requests in EDF order (non-destructive, for load probes)."""
         return [req for _, _, req in sorted(self._heap)]

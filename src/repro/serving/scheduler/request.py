@@ -50,6 +50,11 @@ class SampleRequest:
     #                                     (session/user stickiness); falls
     #                                     back to least-loaded when that
     #                                     pool is draining or full
+    model: Optional[str] = None        # multi-model routing: restrict this
+    #                                     request to pools serving the named
+    #                                     resident checkpoint (gateway
+    #                                     ModelRegistry); None = any pool
+    #                                     (single-model fleets ignore it)
     trace: Optional[object] = None     # obs.TraceContext: the request's
     #                                     span head, created by whichever
     #                                     telemetry-enabled tier first sees
