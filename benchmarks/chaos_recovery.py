@@ -1,0 +1,376 @@
+"""Chaos recovery benchmark: seeded faults against the supervised gateway.
+
+A deterministic virtual-clock replay (cf. scheduler_throughput) of one
+seeded Poisson trace against a 3-pool supervised GatewayCore, twice:
+
+  fault-free  injector off — the goodput ceiling of this exact trace on
+              this exact path.
+  chaos       the SAME trace with a seeded FaultPlan injected: pool tick
+              exceptions (quarantine + migrate), a NaN-poisoned eps
+              (typed 5xx, never streamed), injected tick latency (costs
+              virtual time), and mid-stream SSE disconnects (the client
+              vanishes; the harness cancels like the HTTP layer would).
+
+Both runs advance time as ``t += PUMP_DT`` per pump (plus any injected
+latency), so the replay is bit-deterministic: same seed, same faults,
+same pump the quarantine lands on — the gates below are exact checks,
+not statistical ones, and they hold on any machine.
+
+Gates (``check`` replays and enforces; tier-1 runs it via
+``--suite chaos --check``):
+
+  zero lost work       every accepted, non-cancelled request gets
+                       EXACTLY one terminal event (result or typed
+                       error); cancelled requests get none and free
+                       their slot.
+  goodput under faults chaos completed-samples/virtual-second is at
+                       least ``GOODPUT_FLOOR`` x the fault-free run.
+  bounded recovery     after the trace drains, every breaker returns to
+                       CLOSED within ``RECOVERY_PUMPS`` extra pumps.
+  exact migration      a trajectory interrupted mid-flight by a pool
+                       fault and resumed from its checkpoint on ANOTHER
+                       pool produces the bit-identical eta=0 order-1
+                       sample (DDIM's deterministic process: state
+                       ``(x_t, k)`` determines everything that remains).
+  zero retrace         every pool still reports compiled_ticks == 1:
+                       quarantine, migration, and checkpoint restore
+                       never recompile the tick.
+
+  PYTHONPATH=src python -m benchmarks.run --suite chaos          # record
+  PYTHONPATH=src python -m benchmarks.run --suite chaos --check  # CI gate
+  PYTHONPATH=src python -m benchmarks.chaos_recovery --smoke     # tier-1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks._common import ROOT, Row, percentiles, poisson_trace
+from repro.core import make_schedule
+from repro.serving.errors import RequestError
+from repro.serving.fleet import make_trunk_params, trunk_apply
+from repro.serving.gateway import GatewayCore
+from repro.serving.resilience import (BreakerPolicy, Fault, FaultInjector,
+                                      FaultPlan)
+
+SCH = make_schedule("linear", T=1000)
+PUMP_DT = 0.01          # virtual seconds per pump (one fleet round)
+GOODPUT_FLOOR = 0.75    # chaos goodput >= floor x fault-free goodput
+RECOVERY_PUMPS = 200    # breaker-recovery bound after the trace drains
+DISCONNECT_AFTER = 3    # pumps between accept and the simulated drop
+
+
+def _config(budget: str) -> dict:
+    base = dict(dim=16, hidden=64, n_pools=3, slots=2, max_queue=64,
+                s_menu=(8, 12, 16), rate_per_s=30.0, seed=0,
+                checkpoint_every=2, backoff_pumps=6, probe_ticks=2,
+                n_tick_errors=2, n_nan=1, n_latency=2,
+                latency_s=5 * PUMP_DT, n_disconnects=1)
+    if budget == "smoke":
+        base.update(n_requests=16, horizon_ticks=30)
+    else:
+        base.update(n_requests=48, horizon_ticks=80)
+    return base
+
+
+def _build_core(cfg: dict, injector=None) -> GatewayCore:
+    params = make_trunk_params(SCH, cfg["dim"], cfg["hidden"], seed=0)
+    return GatewayCore.build(
+        SCH, trunk_apply, (cfg["dim"],), models={"m": params},
+        pools_per_model=cfg["n_pools"], slots=cfg["slots"],
+        max_queue=cfg["max_queue"], supervise=True,
+        checkpoint_every=cfg["checkpoint_every"], injector=injector,
+        breaker=BreakerPolicy(backoff_pumps=cfg["backoff_pumps"],
+                              probe_ticks=cfg["probe_ticks"]))
+
+
+def _plan(cfg: dict) -> FaultPlan:
+    return FaultPlan.seeded(
+        cfg["seed"], n_pools=cfg["n_pools"],
+        horizon_ticks=cfg["horizon_ticks"],
+        n_tick_errors=cfg["n_tick_errors"], n_nan=cfg["n_nan"],
+        n_latency=cfg["n_latency"], latency_s=cfg["latency_s"],
+        n_disconnects=cfg["n_disconnects"],
+        n_requests=cfg["n_requests"])
+
+
+# ------------------------------------------------------- the replay loop
+def _replay(cfg: dict, injector=None) -> dict:
+    """Drive one seeded trace through a supervised core on the virtual
+    clock; returns the audit (per-request events + timings + stats)."""
+    core = _build_core(cfg, injector=injector)
+    trace = poisson_trace(cfg["n_requests"], cfg["s_menu"],
+                          cfg["rate_per_s"], seed=cfg["seed"])
+    events: dict = {}            # rid -> [event, ...]
+    accepted, refused = [], []
+    cancel_at: dict = {}         # rid -> pump index of the simulated drop
+    cancelled = []
+    t, pump_i, next_req = 0.0, 0, 0
+    t0_first = None
+
+    while next_req < len(trace) or core.busy or cancel_at:
+        # arrivals due at this virtual instant
+        while (next_req < len(trace)
+               and trace[next_req]["arrival"] <= t):
+            r = trace[next_req]
+            rid_holder = {}
+            try:
+                rid = core.submit(
+                    {"model": "m", "S": r["S"], "seed": next_req,
+                     "preview_every": 3},
+                    lambda ev, h=rid_holder: events.setdefault(
+                        h["rid"], []).append(ev),
+                    now=t)
+            except RequestError as e:  # typed refusal (queue-full etc.)
+                refused.append({"request_id": r["request_id"],
+                                "code": e.code.value,
+                                "retry_after_s": e.retry_after_s})
+                next_req += 1
+                continue
+            rid_holder["rid"] = rid
+            if t0_first is None:
+                t0_first = t
+            accept_index = len(accepted)
+            accepted.append(rid)
+            if (injector is not None
+                    and injector.should_disconnect(accept_index)):
+                cancel_at[rid] = pump_i + DISCONNECT_AFTER
+            next_req += 1
+        # simulated mid-stream disconnects (what the HTTP layer does
+        # when the SSE connection drops: core.cancel on the bridge)
+        for rid in [r for r, p in cancel_at.items() if p <= pump_i]:
+            if core.cancel(rid, now=t):
+                cancelled.append(rid)
+            del cancel_at[rid]
+        core.pump(now=t)
+        pump_i += 1
+        t += PUMP_DT
+        if injector is not None and core.supervisor is not None:
+            t += core.supervisor.take_injected_delay()
+        if pump_i > 50_000:
+            raise RuntimeError("chaos replay did not drain")
+    # recovery: pump until every breaker is CLOSED again (bounded)
+    recovery_pumps = 0
+    sup = core.supervisor
+    while sup.degraded and recovery_pumps < RECOVERY_PUMPS:
+        core.pump(now=t)
+        t += PUMP_DT
+        recovery_pumps += 1
+    results = {rid: [e for e in evs if e["event"] == "result"]
+               for rid, evs in events.items()}
+    completed = sum(1 for evs in results.values() if evs)
+    makespan = max(t - (t0_first or 0.0), 1e-9)
+    lat = [e["latency_s"] for evs in results.values() for e in evs]
+    return dict(
+        core=core, events=events, accepted=accepted, refused=refused,
+        cancelled=cancelled, completed=completed,
+        goodput_per_s=completed / makespan, makespan_s=makespan,
+        recovery_pumps=recovery_pumps, recovered=not sup.degraded,
+        supervisor=sup.stats(),
+        compiled_ticks=[p.engine.stats()["compiled_ticks"]
+                        for p in core.fleet.pools],
+        latency=(percentiles(lat) if lat else None),
+    )
+
+
+def _audit_terminals(out: dict) -> list:
+    """Zero-lost-work gate: exactly one terminal per accepted request
+    (none for cancelled ones). Returns failure strings."""
+    failures = []
+    cancelled = set(out["cancelled"])
+    for rid in out["accepted"]:
+        terms = [e for e in out["events"].get(rid, [])
+                 if e["event"] in ("result", "error")]
+        if rid in cancelled:
+            if terms:
+                failures.append(
+                    f"cancelled request {rid} still got a terminal "
+                    f"event: {[e['event'] for e in terms]}")
+        elif len(terms) != 1:
+            failures.append(
+                f"request {rid}: expected exactly one terminal event, "
+                f"got {[e['event'] for e in terms]}")
+    return failures
+
+
+# ------------------------------------------------- migration bit-identity
+def migration_identity(cfg: dict) -> dict:
+    """Interrupt one trajectory mid-flight; resume it on another pool;
+    compare bit-for-bit against the uninterrupted run."""
+    S, seed = 16, 7
+    ref_core = _build_core(dict(cfg, n_pools=1))
+    ref_events = []
+    ref_core.submit({"model": "m", "S": S, "seed": seed},
+                    ref_events.append, now=0.0)
+    t = 0.0
+    while ref_core.busy:
+        ref_core.pump(now=t)
+        t += PUMP_DT
+    inj = FaultInjector(FaultPlan([
+        Fault(kind="tick-error", pool=0, tick=4)]))
+    mig_cfg = dict(cfg, n_pools=2, checkpoint_every=1,
+                   backoff_pumps=1000)   # pool 0 stays out: must migrate
+    core = _build_core(mig_cfg, injector=inj)
+    mig_events = []
+    core.submit({"model": "m", "S": S, "seed": seed},
+                mig_events.append, now=0.0)
+    t = 0.0
+    while core.busy:
+        core.pump(now=t)
+        t += PUMP_DT
+    ref, mig = ref_events[-1], mig_events[-1]
+    identical = (ref["event"] == mig["event"] == "result"
+                 and np.array_equal(np.asarray(ref["x0"]),
+                                    np.asarray(mig["x0"])))
+    return dict(
+        identical=bool(identical),
+        migrated_pool=mig.get("pool_id"),
+        resumed=int(core.supervisor.stats()["migrated"]) >= 1,
+        interrupted_at_k=4,
+        compiled_ticks=[p.engine.stats()["compiled_ticks"]
+                        for p in core.fleet.pools])
+
+
+# ----------------------------------------------------------- run / check
+def _gates(free, chaos, mig, cfg, plan) -> list:
+    failures = []
+    failures += [f"fault-free: {f}" for f in _audit_terminals(free)]
+    failures += [f"chaos: {f}" for f in _audit_terminals(chaos)]
+    ratio = chaos["goodput_per_s"] / max(free["goodput_per_s"], 1e-9)
+    if ratio < GOODPUT_FLOOR:
+        failures.append(
+            f"goodput under faults {ratio:.3f} < {GOODPUT_FLOOR} x "
+            f"fault-free ({chaos['goodput_per_s']:.2f} vs "
+            f"{free['goodput_per_s']:.2f} samples/virtual-s)")
+    if not chaos["recovered"]:
+        failures.append(
+            f"breakers not CLOSED within {RECOVERY_PUMPS} pumps of the "
+            f"trace draining: {chaos['supervisor']['breakers']}")
+    if chaos["supervisor"]["quarantines"] < cfg["n_tick_errors"]:
+        failures.append(
+            f"expected >= {cfg['n_tick_errors']} quarantines (one per "
+            f"injected tick-error), saw "
+            f"{chaos['supervisor']['quarantines']}")
+    n_cancel = len([f for f in plan if f.kind == "sse-disconnect"])
+    if len(chaos["cancelled"]) != n_cancel:
+        failures.append(
+            f"expected {n_cancel} cancelled requests, saw "
+            f"{len(chaos['cancelled'])}")
+    if not mig["identical"]:
+        failures.append("migrated eta=0 trajectory is NOT bit-identical "
+                        "to the uninterrupted run")
+    if not mig["resumed"]:
+        failures.append("migration path never attached a checkpoint")
+    for name, out in (("fault-free", free), ("chaos", chaos)):
+        if any(c != 1 for c in out["compiled_ticks"]):
+            failures.append(f"{name}: compiled_ticks per pool "
+                            f"{out['compiled_ticks']} != all 1 "
+                            "(quarantine/migration retraced the tick)")
+    return failures
+
+
+def _strip(out: dict) -> dict:
+    """The JSON-safe slice of a replay audit."""
+    return {k: out[k] for k in
+            ("completed", "goodput_per_s", "makespan_s", "refused",
+             "cancelled", "recovery_pumps", "recovered", "supervisor",
+             "compiled_ticks", "latency")}
+
+
+def run(budget: str = "full"):
+    cfg = _config(budget)
+    plan = _plan(cfg)
+    free = _replay(cfg, injector=None)
+    chaos = _replay(cfg, injector=FaultInjector(plan))
+    mig = migration_identity(cfg)
+    failures = _gates(free, chaos, mig, cfg, plan)
+    ratio = chaos["goodput_per_s"] / max(free["goodput_per_s"], 1e-9)
+    payload = {
+        "bench": "chaos_recovery",
+        "config": {k: v for k, v in cfg.items()},
+        "fault_plan": [vars(f) for f in plan],
+        "gates": {"goodput_floor": GOODPUT_FLOOR,
+                  "recovery_pumps": RECOVERY_PUMPS,
+                  "failures": failures},
+        "fault_free": _strip(free),
+        "chaos": _strip(chaos),
+        "goodput_ratio": ratio,
+        "migration": mig,
+        "note": ("virtual-clock replay (PUMP_DT per pump + injected "
+                 "latency): counts and the goodput ratio are "
+                 "deterministic for a given seed/plan, so the gates are "
+                 "exact and machine-independent"),
+    }
+    if budget != "smoke":
+        with open(os.path.join(ROOT, "BENCH_chaos.json"), "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    if failures:
+        raise SystemExit("chaos_recovery gates FAILED:\n  "
+                         + "\n  ".join(failures))
+    sup = chaos["supervisor"]
+    return [
+        Row("chaos_recovery/fault_free",
+            free["latency"]["p50_s"] * 1e6 if free["latency"] else 0.0,
+            f"goodput_per_s={free['goodput_per_s']:.3f};"
+            f"completed={free['completed']}"),
+        Row("chaos_recovery/chaos",
+            chaos["latency"]["p50_s"] * 1e6 if chaos["latency"] else 0.0,
+            f"goodput_per_s={chaos['goodput_per_s']:.3f};"
+            f"goodput_ratio={ratio:.3f};"
+            f"quarantines={sup['quarantines']};"
+            f"migrated={sup['migrated']};"
+            f"recovery_pumps={chaos['recovery_pumps']};"
+            f"migration_identical={mig['identical']}"),
+    ]
+
+
+def check(budget: str = "full", tolerance: float = 0.10):
+    """Replay the committed configuration and re-enforce every gate.
+
+    The replay is virtual-clock deterministic, so beyond the absolute
+    gates (zero lost work, goodput floor, recovery, bit-identical
+    migration, zero retrace) the fresh goodput RATIO must match the
+    committed one within ``tolerance`` — drift means the fault/recovery
+    path itself changed behavior, not the machine."""
+    path = os.path.join(ROOT, "BENCH_chaos.json")
+    with open(path) as f:
+        committed = json.load(f)
+    cfg = dict(committed["config"])
+    plan = _plan(cfg)
+    free = _replay(cfg, injector=None)
+    chaos = _replay(cfg, injector=FaultInjector(plan))
+    mig = migration_identity(cfg)
+    failures = _gates(free, chaos, mig, cfg, plan)
+    ratio = chaos["goodput_per_s"] / max(free["goodput_per_s"], 1e-9)
+    old = committed["goodput_ratio"]
+    if abs(ratio - old) > tolerance:
+        failures.append(
+            f"goodput ratio drifted {old:.3f} -> {ratio:.3f} "
+            f"(> {tolerance} on a deterministic replay: the recovery "
+            "path changed behavior)")
+    return failures
+
+
+def smoke() -> int:
+    """Tiny chaos replay for scripts/tier1.sh (gates only, no JSON)."""
+    rows = run("smoke")
+    print("chaos smoke: " + "; ".join(r.csv() for r in rows) + " (OK)")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny tier-1 replay; exits nonzero on failure")
+    ap.add_argument("--budget", choices=["quick", "full"],
+                    default="full")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    print("name,us_per_call,derived")
+    for row in run(args.budget):
+        print(row.csv())

@@ -38,7 +38,15 @@ BENCH_*.json and exits non-zero on regression:
              traffic, never shedding under the overload wave, violating
              lowest-deadline-headroom-first shed ordering, retracing a
              pool tick, or its goodput ratio regressing >25% below the
-             committed one.
+             committed one;
+  chaos      a deterministic virtual-clock replay of the committed
+             seeded fault plan losing work (any accepted non-cancelled
+             request without exactly one terminal event), goodput under
+             faults below 0.75x the fault-free run, breakers not
+             recovering within the bounded pump budget, a migrated
+             eta=0 trajectory not bit-identical to the uninterrupted
+             one, any pool retracing its tick, or the goodput ratio
+             drifting >0.10 from the committed (deterministic) value.
 
 All gates are wired into scripts/tier1.sh so hot-path and serving
 regressions can't land silently.
@@ -81,12 +89,14 @@ SUITES = {
     "fleet": ["benchmarks.fleet_throughput"],
     "obs": ["benchmarks.obs_overhead"],
     "gateway": ["benchmarks.gateway_load"],
+    "chaos": ["benchmarks.chaos_recovery"],
     "all": PAPER_MODULES + ["benchmarks.sampler_overhead",
                             "benchmarks.scheduler_throughput",
                             "benchmarks.autoplan_search",
                             "benchmarks.fleet_throughput",
                             "benchmarks.obs_overhead",
-                            "benchmarks.gateway_load"],
+                            "benchmarks.gateway_load",
+                            "benchmarks.chaos_recovery"],
 }
 
 # suites whose run() rewrites a committed BENCH_*.json (and so support
@@ -98,7 +108,8 @@ RECORDING = {"sampler": ("benchmarks.sampler_overhead", "BENCH_sampler.json"),
                           "BENCH_autoplan.json"),
              "fleet": ("benchmarks.fleet_throughput", "BENCH_fleet.json"),
              "obs": ("benchmarks.obs_overhead", "BENCH_obs.json"),
-             "gateway": ("benchmarks.gateway_load", "BENCH_gateway.json")}
+             "gateway": ("benchmarks.gateway_load", "BENCH_gateway.json"),
+             "chaos": ("benchmarks.chaos_recovery", "BENCH_chaos.json")}
 
 
 def _history_entry(root: str) -> str:
@@ -176,6 +187,18 @@ def _history_entry(root: str) -> str:
             f"(shed {ov['shed']}/{ov['offered']}, "
             f"{bench['ordering_violations']} ordering violations, "
             f"p95 {ov['p95_s']:.3f} s over live HTTP/SSE)")
+    ch = os.path.join(root, "BENCH_chaos.json")
+    if os.path.exists(ch):
+        with open(ch) as f:
+            bench = json.load(f)
+        sup = bench["chaos"]["supervisor"]
+        lines.append(
+            f"- chaos/recovery: goodput {bench['goodput_ratio']:.2f}x "
+            f"fault-free under {len(bench['fault_plan'])} injected "
+            f"faults ({sup['quarantines']} quarantines, "
+            f"{sup['migrated']} migrations, recovery in "
+            f"{bench['chaos']['recovery_pumps']} extra pumps, migration "
+            f"bit-identical={bench['migration']['identical']})")
     return "\n".join(lines) + "\n"
 
 

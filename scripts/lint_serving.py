@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Exception-hygiene lint for the serving stack.
+
+The resilience layer (docs/resilience.md) turns pool failures into
+quarantine + migrate and transport failures into typed refusals — which
+only works if NOTHING in ``src/repro/serving/`` swallows errors with a
+blanket handler before they reach the fault boundary. This lint fails
+on:
+
+  * bare ``except:`` clauses, and
+  * any ``except`` whose type expression mentions ``Exception``
+    (including ``Exception`` inside a tuple or ``(Exception, ...)``).
+
+Handlers must name the exception types they expect (``RequestError``,
+``ValueError``, ``queue.Empty``, ...). ``except BaseException`` IS
+allowed, but only at the two deliberate fault boundaries (the
+supervisor's tick guard and the bridge's pump guard) where the caught
+exception is re-recorded — it re-raises or re-routes, never swallows.
+That pattern survives this lint precisely so the boundaries stay
+greppable: anything broad enough to catch an InjectedFault must be one
+of the places the chaos harness exercises.
+
+Run from the repo root (scripts/tier1.sh does):
+
+    python scripts/lint_serving.py            # exit 1 + file:line list
+    python scripts/lint_serving.py --list     # show scanned files
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TARGET = os.path.join(ROOT, "src", "repro", "serving")
+
+
+def _mentions_exception(node) -> bool:
+    """Whether an except-clause type expression names bare Exception."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id == "Exception":
+            return True
+        # guard the attribute form too (builtins.Exception)
+        if isinstance(sub, ast.Attribute) and sub.attr == "Exception":
+            return True
+    return False
+
+
+def lint_file(path: str) -> list:
+    with open(path) as f:
+        src = f.read()
+    tree = ast.parse(src, filename=path)
+    rel = os.path.relpath(path, ROOT)
+    problems = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            problems.append(
+                f"{rel}:{node.lineno}: bare 'except:' — name the "
+                "exception types this handler expects")
+        elif _mentions_exception(node.type):
+            problems.append(
+                f"{rel}:{node.lineno}: 'except Exception' — too broad "
+                "for the serving stack; catch the typed errors you "
+                "expect (or BaseException at a re-recording fault "
+                "boundary)")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="print the scanned files")
+    args = ap.parse_args()
+    files = sorted(
+        os.path.join(d, f)
+        for d, _, names in os.walk(TARGET)
+        for f in names if f.endswith(".py"))
+    if not files:
+        print(f"lint_serving: nothing to scan under {TARGET}",
+              file=sys.stderr)
+        return 1
+    problems = []
+    for path in files:
+        if args.list:
+            print(os.path.relpath(path, ROOT))
+        problems.extend(lint_file(path))
+    if problems:
+        print("serving exception-hygiene lint FAILED:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"serving exception-hygiene lint OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -56,3 +56,16 @@ python examples/gateway_sse.py --smoke
 # zero shed-ordering violations) and a fresh live replay must reproduce
 # the behavior within the noise band
 python -m benchmarks.run --suite gateway --check
+# exception-hygiene lint (ISSUE 9 satellite): nothing in the serving
+# stack may swallow errors with a bare/blanket except — faults must
+# reach the supervisor/bridge boundaries so quarantine + migrate can
+# work; handlers name their types (BaseException allowed only at the
+# re-recording fault boundaries)
+python scripts/lint_serving.py
+# chaos recovery gate (ISSUE 9): deterministic virtual-clock replay of
+# the committed seeded fault plan — zero lost work (exactly one terminal
+# per accepted request), goodput under faults >= 0.75x fault-free,
+# breakers re-close within the bounded pump budget, an interrupted
+# trajectory resumed on another pool is bit-identical (eta=0), and no
+# pool retraces its compiled tick
+python -m benchmarks.run --suite chaos --check

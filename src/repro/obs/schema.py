@@ -12,7 +12,8 @@ from __future__ import annotations
 ENGINE_STATS_KEYS = frozenset({
     "pool_id", "mesh", "state_sharded", "slots", "active",
     "ticks", "tick_variant", "slot_steps", "occupancy",
-    "completed", "dropped", "deadline_missed", "previews_sent",
+    "completed", "dropped", "cancelled", "resumed",
+    "deadline_missed", "previews_sent",
     "queued", "queue_rejected",
     "tick_wall_s", "tick_ewma_s", "steps_per_s", "compiled_ticks",
     "plan_bank", "bank_selected",
@@ -21,7 +22,8 @@ ENGINE_STATS_KEYS = frozenset({
 
 # a SlotPool's stats() is its engine's plus the lifecycle/load fields
 POOL_STATS_KEYS = ENGINE_STATS_KEYS | frozenset({
-    "state", "model", "drained_requests", "pending_steps", "weight_swaps",
+    "state", "model", "health", "drained_requests", "pending_steps",
+    "weight_swaps",
 })
 
 FLEET_STATS_KEYS = frozenset({
@@ -32,9 +34,12 @@ FLEET_STATS_KEYS = frozenset({
 })
 
 # the gateway tier's stats() (serving/gateway/core.py) — front-door
-# admission/overload/stream counters plus the wrapped fleet's stats dict
+# admission/overload/stream counters plus the wrapped fleet's stats dict;
+# "resilience" is the pool supervisor's breaker/quarantine tree (None on
+# an unsupervised core — see serving/resilience and docs/resilience.md)
 GATEWAY_STATS_KEYS = frozenset({
     "requests", "rejected", "shed", "expired",
+    "cancelled", "nonfinite",
     "streams", "previews_streamed", "results_streamed",
-    "swaps", "models", "queue_depth", "fleet",
+    "swaps", "models", "queue_depth", "fleet", "resilience",
 })

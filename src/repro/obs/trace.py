@@ -9,6 +9,14 @@ submission to retirement, each a flat JSON object. The canonical lifecycle
     submit -> [route] -> expire -> drop              (queue-tier expiry)
     reject                                           (back-pressure)
 
+Resilience extends the lifecycle with three kinds (docs/resilience.md):
+``requeue`` marks a re-entry into the global queue (pool drain or
+quarantine migration) and RESETS the span's ordering — events after a
+requeue form a fresh segment that may route/admit again; ``resume``
+records a checkpoint refill at re-admission (only valid after a
+requeue); ``cancel`` is a terminal kind for client-initiated
+cancellation (SSE disconnect), valid at any point in the lifecycle.
+
 Events share the compact key set ``ev`` (kind), ``t`` (caller-clock
 timestamp — wall or virtual, whatever drives the engine), ``req``
 (request id), plus ``pool`` / ``plan`` (plan digest) / ``nfe`` once known,
@@ -31,13 +39,19 @@ import os
 from typing import Dict, List, Optional, Tuple
 
 EVENT_KINDS = ("submit", "reject", "route", "select", "expire", "admit",
-               "first_tick", "preview", "retire", "drop")
+               "resume", "first_tick", "preview", "retire", "drop",
+               "requeue", "cancel")
 
-# events whose relative order defines a well-formed span
+# events whose relative order defines a well-formed span SEGMENT
+# ("requeue" starts a new segment; "cancel" is order-free and terminal).
+# "preview" shares first_tick's rank: the engine delivers a tick's
+# previews before stamping first_tick, so with preview_every=1 the two
+# legally interleave.
 _ORDER = {k: i for i, k in enumerate(
-    ("submit", "route", "select", "expire", "admit", "first_tick",
-     "preview", "retire", "drop"))}
-_TERMINAL = ("retire", "drop", "reject")
+    ("submit", "route", "select", "expire", "admit", "resume",
+     "first_tick", "preview", "retire", "drop"))}
+_ORDER["preview"] = _ORDER["first_tick"]
+_TERMINAL = ("retire", "drop", "reject", "cancel")
 
 
 def plan_digest(plan) -> str:
@@ -154,8 +168,12 @@ def check_spans(events: List[Dict]) -> List[str]:
     """Validate span well-formedness; returns human-readable violations.
 
     Checks per request: known event kinds, required keys, monotone
-    lifecycle order, exactly one terminal event, ``retire`` only after
-    ``admit``. An empty return means the log reconstructs cleanly.
+    lifecycle order WITHIN each requeue-delimited segment (a ``requeue``
+    — drain re-route or quarantine migration — legally restarts the
+    route/admit lifecycle), exactly one terminal event over the whole
+    span, ``retire``/``first_tick`` only after some ``admit``, and
+    ``resume`` only after a ``requeue``. An empty return means the log
+    reconstructs cleanly.
     """
     errors: List[str] = []
     for req, evs in spans(events).items():
@@ -165,9 +183,17 @@ def check_spans(events: List[Dict]) -> List[str]:
                 errors.append(f"req {req}: unknown event kind {e['ev']!r}")
             if "t" not in e:
                 errors.append(f"req {req}: event {e['ev']} missing 't'")
-        ranks = [_ORDER[k] for k in kinds if k in _ORDER]
-        if any(b < a for a, b in zip(ranks, ranks[1:])):
-            errors.append(f"req {req}: out-of-order span {kinds}")
+        segments: List[List[str]] = [[]]
+        for k in kinds:
+            if k == "requeue":
+                segments.append([])
+            elif k in _ORDER:
+                segments[-1].append(k)
+        for seg in segments:
+            ranks = [_ORDER[k] for k in seg]
+            if any(b < a for a, b in zip(ranks, ranks[1:])):
+                errors.append(f"req {req}: out-of-order span {kinds}")
+                break
         terminals = [k for k in kinds if k in _TERMINAL]
         if len(terminals) != 1:
             errors.append(f"req {req}: expected exactly one terminal "
@@ -176,6 +202,8 @@ def check_spans(events: List[Dict]) -> List[str]:
             errors.append(f"req {req}: retire without admit")
         if "first_tick" in kinds and "admit" not in kinds:
             errors.append(f"req {req}: first_tick without admit")
+        if "resume" in kinds and "requeue" not in kinds:
+            errors.append(f"req {req}: resume without a prior requeue")
     return errors
 
 

@@ -1,10 +1,14 @@
 from .engine import ARGenerator, DiffusionSampler, GenRequest, GenResult
 from .errors import RejectCode, RequestError
 from .fleet import PoolFleet, PoolState, SlotPool
+from .resilience import (BreakerPolicy, BreakerState, CheckpointStore,
+                         FaultInjector, FaultPlan, PoolSupervisor)
 from .scheduler import (AdmissionQueue, ContinuousBatchingEngine,
-                        SampleRequest, SampleResult)
+                        SampleRequest, SampleResult, SlotCheckpoint)
 
-__all__ = ["ARGenerator", "AdmissionQueue", "ContinuousBatchingEngine",
-           "DiffusionSampler", "GenRequest", "GenResult", "PoolFleet",
-           "PoolState", "RejectCode", "RequestError", "SampleRequest",
-           "SampleResult", "SlotPool"]
+__all__ = ["ARGenerator", "AdmissionQueue", "BreakerPolicy", "BreakerState",
+           "CheckpointStore", "ContinuousBatchingEngine", "DiffusionSampler",
+           "FaultInjector", "FaultPlan", "GenRequest", "GenResult",
+           "PoolFleet", "PoolState", "PoolSupervisor", "RejectCode",
+           "RequestError", "SampleRequest", "SampleResult", "SlotCheckpoint",
+           "SlotPool"]

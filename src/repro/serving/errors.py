@@ -42,7 +42,11 @@ class RejectCode(enum.Enum):
     SHED_OVERLOAD = "shed-overload"              # depth shed (overload)
     SHED_INFEASIBLE = "shed-infeasible"          # deadline can't be met
     EXPIRED = "expired"                          # deadline passed in queue
-    MODEL_UNAVAILABLE = "model-unavailable"      # all pools draining/stopped
+    MODEL_UNAVAILABLE = "model-unavailable"      # every eligible pool is
+    #                                              quarantined/stopped
+    # --- server faults (5xx): the system failed the request
+    NONFINITE_SAMPLE = "nonfinite-sample"        # NaN/Inf terminal result
+    CANCELLED = "cancelled"                      # client closed the stream
 
     @property
     def http_status(self) -> int:
@@ -65,16 +69,25 @@ _HTTP_STATUS = {
     RejectCode.SHED_INFEASIBLE: 503,
     RejectCode.EXPIRED: 504,
     RejectCode.MODEL_UNAVAILABLE: 503,
+    RejectCode.NONFINITE_SAMPLE: 500,
+    RejectCode.CANCELLED: 499,       # nginx convention: client closed
 }
 
 
 class RequestError(ValueError):
     """A typed request refusal: ``.code`` is the RejectCode, ``.status``
-    the HTTP status a gateway maps it to. str() is the human message."""
+    the HTTP status a gateway maps it to. str() is the human message.
 
-    def __init__(self, code: RejectCode, message: str):
+    ``retry_after_s`` (availability refusals only) is the gateway's
+    backlog-derived retry hint — the HTTP layer surfaces it as a
+    ``Retry-After`` header; None means no estimate was attached.
+    """
+
+    def __init__(self, code: RejectCode, message: str,
+                 retry_after_s: "int | None" = None):
         super().__init__(message)
         self.code = code
+        self.retry_after_s = retry_after_s
 
     @property
     def status(self) -> int:
@@ -82,4 +95,7 @@ class RequestError(ValueError):
 
     def payload(self) -> dict:
         """The structured error body a gateway returns."""
-        return {"error": self.code.value, "message": str(self)}
+        out = {"error": self.code.value, "message": str(self)}
+        if self.retry_after_s is not None:
+            out["retry_after_s"] = self.retry_after_s
+        return out

@@ -43,7 +43,7 @@ from repro.serving.scheduler import ContinuousBatchingEngine
 from repro.serving.scheduler.queue import AdmissionQueue
 from repro.serving.scheduler.request import SampleRequest, SampleResult
 
-from .pool import SlotPool
+from .pool import PoolState, SlotPool
 from .router import pick_pool
 
 
@@ -144,9 +144,43 @@ class PoolFleet:
                now: Optional[float] = None) -> bool:
         """Enqueue into the global EDF queue; False = back-pressure."""
         self._validation_pool(req).engine.validate_request(req)
+        model = getattr(req, "model", None)
+        eligible = [p for p in self.pools
+                    if model is None or p.model == model]
+        if eligible and all(p.state is PoolState.QUARANTINED
+                            for p in eligible):
+            # every pool that could serve this request is tripped out —
+            # queueing would strand it behind an unbounded breaker
+            # horizon; refuse NOW so the client backs off (draining
+            # pools do NOT trigger this: a rollout restores them shortly)
+            raise RequestError(
+                RejectCode.MODEL_UNAVAILABLE,
+                f"request {req.request_id}: every pool serving "
+                f"{'model ' + repr(model) if model else 'this fleet'} "
+                "is quarantined — retry after the breaker re-admits one")
         now = time.perf_counter() if now is None else now
         self.obs.trace_submit(req, now, deadline=req.deadline)
         return self.queue.submit(req, now)
+
+    def cancel(self, request_id,
+               now: Optional[float] = None) -> bool:
+        """Client-initiated cancellation anywhere in the fleet: remove
+        the request from the global queue, or free its slot / local
+        queue entry on whichever pool holds it. Terminal ``cancel`` span
+        either way; False when the request is not in flight here."""
+        now = time.perf_counter() if now is None else now
+        removed = self.queue.remove_if(
+            lambda r: r.request_id == request_id)
+        if removed:
+            for r in removed:
+                if r.trace is not None:
+                    r.trace.emit("cancel", now)
+            self.obs.registry.counter(
+                "fleet_cancelled_total",
+                "requests cancelled out of the global queue").inc()
+            return True
+        return any(p.engine.cancel(request_id, now=now)
+                   for p in self.pools)
 
     # --------------------------------------------- fleet-tier counter views
     @property
@@ -252,6 +286,8 @@ class PoolFleet:
         now = time.perf_counter() if now is None else now
         pending = self.pools[pool_id].drain()
         for r in pending:
+            if r.trace is not None:      # segment reset: may route again
+                r.trace.emit("requeue", now, reason="drain")
             self.queue.requeue(r, now)   # a re-route, not a new arrival
         self._c_drained.inc(len(pending))
         return len(pending)

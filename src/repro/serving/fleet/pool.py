@@ -20,6 +20,9 @@ class PoolState(enum.Enum):
     ACTIVE = "active"        # routable: accepts dispatches
     DRAINING = "draining"    # finishing residents; accepts nothing new
     STOPPED = "stopped"      # drained dry; engine idle (weights resident)
+    QUARANTINED = "quarantined"  # tripped by a tick fault; residents
+    #                              evicted, re-admission via breaker probe
+    #                              only (serving/resilience supervisor)
 
 
 class SlotPool:
@@ -46,6 +49,10 @@ class SlotPool:
         self.model = model
         self.state = PoolState.ACTIVE
         self.drained_requests = 0     # queued work handed back at drain
+        self.health = 1.0             # router weight in (0, 1]: decayed by
+        #                               breaker trips, recovered by clean
+        #                               ticks (serving/resilience writes it;
+        #                               an unsupervised fleet stays at 1.0)
 
     # -------------------------------------------------------------- load
     @property
@@ -98,24 +105,39 @@ class SlotPool:
         self._maybe_stop()
         return pending
 
+    def quarantine(self) -> List[SampleRequest]:
+        """Trip this pool out of service after a tick fault: stop
+        accepting, hand back locally queued work (the supervisor re-routes
+        it AND the evicted residents through the global queue). Unlike
+        ``drain``, a quarantined pool never parks STOPPED on its own —
+        only a breaker probe (``restore``) re-admits it."""
+        self.state = PoolState.QUARANTINED
+        pending = self.engine.queue.drain_pending()
+        self.drained_requests += len(pending)
+        return pending
+
     def restore(self) -> None:
-        """Reactivate a draining/stopped pool (refill: routable again)."""
+        """Reactivate a draining/stopped/quarantined pool (routable
+        again)."""
         self.state = PoolState.ACTIVE
 
     def install(self, params) -> None:
-        """Hot-swap this pool's resident weights (STOPPED pools only).
+        """Hot-swap this pool's resident weights (idle pools only:
+        STOPPED, or QUARANTINED — whose residents were evicted at the
+        trip, so the engine is equally idle).
 
         Delegates to ``engine.install_eps_params`` (same-treedef/shape/
-        dtype pytrees reuse the compiled tick — zero retrace); the STOPPED
+        dtype pytrees reuse the compiled tick — zero retrace); the idle
         gate guarantees no in-flight request ever mixes weights: residents
         admitted before a drain finish on the OLD weights, requests routed
         after the restore run on the NEW ones.
         """
-        if self.state is not PoolState.STOPPED:
+        if self.state not in (PoolState.STOPPED, PoolState.QUARANTINED):
             raise RuntimeError(
                 f"pool {self.pool_id} is {self.state.value}; weights may "
-                "only be installed on a STOPPED pool (drain it first so "
-                "no resident request can straddle the swap)")
+                "only be installed on a STOPPED (or quarantined) pool "
+                "(drain it first so no resident request can straddle "
+                "the swap)")
         self.engine.install_eps_params(params)
 
     def _maybe_stop(self) -> None:
@@ -149,6 +171,7 @@ class SlotPool:
         st = self.engine.stats()
         st["state"] = self.state.value
         st["model"] = self.model
+        st["health"] = self.health
         st["drained_requests"] = self.drained_requests
         st["pending_steps"] = self.engine.pending_steps()
         st["weight_swaps"] = self.weight_swaps

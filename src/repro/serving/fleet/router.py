@@ -13,6 +13,12 @@ which ACTIVE pool takes each one. Two signals:
   OWN measured tick EWMA. Before any pool has a measurement the fleet
   mean (or a neutral constant) stands in, so a half-warmed fleet doesn't
   starve the unmeasured pools.
+* **health** — the supervisor's breaker-derived score (SlotPool.health,
+  1.0 on a fault-free pool) divides the least-loaded rank, so a pool
+  with recent quarantine trips takes proportionally less NEW work while
+  it re-earns trust; affinity stickiness yields to least-loaded when the
+  preferred pool's health is below ``AFFINITY_HEALTH_MIN``. With every
+  health at 1.0 the ranking is order-identical to the health-free one.
 """
 from __future__ import annotations
 
@@ -20,6 +26,11 @@ import zlib
 from typing import List, Optional, Sequence
 
 from .pool import SlotPool
+
+# a sticky preference is only honored while the pool is this healthy —
+# below it the request falls back to the (health-weighted) least-loaded
+# rank rather than following a session key onto a flaky backend
+AFFINITY_HEALTH_MIN = 0.5
 
 
 def affinity_pool(key, n_pools: int) -> int:
@@ -59,11 +70,16 @@ def pick_pool(pools: Sequence[SlotPool], req, explain: bool = False):
         # models' pools drain and restore
         pref = (eligible[affinity_pool(key, len(eligible))]
                 if key is not None and eligible else None)
-        if pref is not None and pref.capacity > 0:
+        if (pref is not None and pref.capacity > 0
+                and pref.health >= AFFINITY_HEALTH_MIN):
             pool, reason = pref, "affinity"
         else:
             default = _default_tick_s(pools)
+            # (load + one tick) / health: a monotone transform of the
+            # load rank when healths are equal, but an unhealthy idle
+            # pool ranks behind a healthy idle one
             pool = min(cands,
-                       key=lambda p: (p.load_eta_s(default), p.pool_id))
+                       key=lambda p: ((p.load_eta_s(default) + default)
+                                      / max(p.health, 1e-3), p.pool_id))
             reason = "least-loaded"
     return (pool, reason) if explain else pool

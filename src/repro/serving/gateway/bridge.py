@@ -17,8 +17,11 @@ daemon thread that does all engine work:
 Event callbacks registered with ``GatewayCore.submit`` fire on THIS
 thread (inside pump); transports must trampoline them onto their own
 loop (``loop.call_soon_threadsafe`` — see gateway/http.py). A pump
-exception is recorded on ``.error`` and re-raised to the next caller
-rather than silently killing the thread.
+exception is offered to the core's ``absorb_pump_error`` hook first
+(supervised cores keep serving through a bounded number of pump
+failures — docs/resilience.md); if declined it is recorded on
+``.error`` and re-raised to the next caller rather than silently
+killing the thread.
 """
 from __future__ import annotations
 
@@ -98,11 +101,16 @@ class EngineBridge:
                 try:
                     self.core.pump()
                 except BaseException as e:
-                    # a pump failure poisons the bridge: record it, stop
-                    # pumping; queued commands fail in the shutdown sweep
-                    # and future call()s raise immediately
-                    self.error = e
-                    self._stop.set()
+                    # ask the core whether this pump failure is
+                    # survivable (supervised cores absorb a bounded
+                    # number — pool faults never get this far); if not,
+                    # poison the bridge: record it, stop pumping, queued
+                    # commands fail in the shutdown sweep and future
+                    # call()s raise immediately
+                    absorb = getattr(self.core, "absorb_pump_error", None)
+                    if absorb is None or not absorb(e):
+                        self.error = e
+                        self._stop.set()
         # shutdown: fail anything still queued
         while True:
             try:

@@ -27,17 +27,21 @@ thread; the HTTP layer trampolines them onto the asyncio loop):
   {"event": "result",  "request_id", "x0", "S", "pool_id",
    "latency_s", "queue_wait_s", "service_s",
    "deadline_missed", "previews"}                          (terminal)
-  {"event": "error",   "request_id", "code", "message", "status"}
-                                                           (terminal)
+  {"event": "error",   "request_id", "code", "message", "status"[,
+   "retry_after_s"]}                                       (terminal)
 
-Every request gets EXACTLY one terminal event. The x0 payloads stay
+Every request gets EXACTLY one terminal event — except a ``cancel()``ed
+request, whose client initiated the teardown and is gone. The x0 payloads stay
 numpy here — serialization belongs to the transport.
 """
 from __future__ import annotations
 
 import itertools
+import math
 import time
 from typing import Callable, Dict, List, Optional
+
+import numpy as np
 
 from repro.obs import Observability
 from repro.obs.registry import render_prometheus as _render_prom
@@ -131,13 +135,22 @@ class GatewayCore:
     with tier/pool labels in ``render_prometheus``.
     """
 
+    #: bridge survivability bound: how many pump exceptions a SUPERVISED
+    #: core absorbs before conceding the bridge is beyond saving (a
+    #: supervisor-contained fault never reaches pump, so anything here is
+    #: gateway-tier breakage — absorb a few, then fail loud)
+    MAX_ABSORBED_PUMP_ERRORS = 8
+
     def __init__(self, fleet: PoolFleet, registry: ModelRegistry,
                  policy: Optional[OverloadPolicy] = None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 supervisor=None):
         self.fleet = fleet
         self.registry = registry
         self.policy = policy if policy is not None else OverloadPolicy()
         self.obs = obs if obs is not None else Observability()
+        self.supervisor = supervisor     # resilience.PoolSupervisor | None
+        self._absorbed = 0               # pump errors absorbed (see above)
         self._ids = itertools.count()
         self._handlers: Dict[int, Callable] = {}
         self._requests: Dict[int, SampleRequest] = {}
@@ -160,6 +173,15 @@ class GatewayCore:
             "gateway_swaps_total", "completed weight rollouts")
         self._g_streams = reg.gauge(
             "gateway_streams", "requests with a live event stream")
+        self._c_cancelled = reg.counter(
+            "gateway_cancelled_total",
+            "client-initiated cancellations (disconnects included)")
+        self._c_nonfinite = reg.counter(
+            "gateway_nonfinite_total",
+            "terminal results refused by the NaN/Inf guard")
+        self._c_handler_errors = reg.counter(
+            "gateway_handler_errors_total",
+            "event callbacks dropped after raising")
 
     # ----------------------------------------------------------- plumbing
     def _sum_counter(self, name: str) -> int:
@@ -176,6 +198,21 @@ class GatewayCore:
         known = [p.tick_ewma_s for p in self.fleet.pools
                  if p.tick_ewma_s is not None]
         return (sum(known) / len(known)) if known else None
+
+    def retry_after_s(self) -> int:
+        """Back-pressure hint for 429/503 refusals (whole seconds, >= 1):
+        the backlog's estimated drain time — resident + queued steps
+        spread over the fleet's slots at the measured tick EWMA. Clients
+        that honor Retry-After re-arrive roughly when capacity exists
+        instead of hammering a saturated front door."""
+        tick = self._tick_estimate()
+        if tick is None:
+            return 1
+        pending = sum(p.engine.pending_steps() for p in self.fleet.pools)
+        pending += sum(r.steps
+                       for r in self.fleet.queue.pending_requests())
+        slots = sum(p.engine.slots for p in self.fleet.pools) or 1
+        return max(1, math.ceil(pending / slots * tick))
 
     @property
     def busy(self) -> bool:
@@ -207,13 +244,17 @@ class GatewayCore:
             accepted = self.fleet.submit(req, now=now)
         except RequestError as e:
             self._count_reject(e.code)
+            if e.code.http_status in (429, 503):
+                # availability refusal: tell the client when to come back
+                e.retry_after_s = self.retry_after_s()
             raise
         if not accepted:
             self._count_reject(RejectCode.QUEUE_FULL)
             raise RequestError(
                 RejectCode.QUEUE_FULL,
                 f"request {rid}: global admission queue at its depth "
-                "bound — retry with backoff")
+                "bound — retry with backoff",
+                retry_after_s=self.retry_after_s())
         self._handlers[rid] = on_event
         self._requests[rid] = req
         self._c_requests.inc()
@@ -225,15 +266,49 @@ class GatewayCore:
         if h is None:
             return
         self._c_previews.inc()
-        h({"event": "preview", "request_id": request_id, "step": step,
-           "x0": x0})
+        try:
+            h({"event": "preview", "request_id": request_id, "step": step,
+               "x0": x0})
+        except RuntimeError:
+            # a broken callback must not poison the engine thread: drop
+            # the handler (the client's stream is already beyond repair)
+            # and let the request finish unobserved
+            self._c_handler_errors.inc()
+            self._handlers.pop(request_id, None)
+            self._g_streams.set(len(self._handlers))
 
     def _terminal(self, request_id: int, event: Dict) -> None:
         h = self._handlers.pop(request_id, None)
         self._requests.pop(request_id, None)
         self._g_streams.set(len(self._handlers))
+        if self.supervisor is not None:
+            self.supervisor.checkpoints.forget(request_id)
         if h is not None:
-            h(event)
+            try:
+                h(event)
+            except RuntimeError:
+                self._c_handler_errors.inc()
+
+    # ------------------------------------------------------- cancellation
+    def cancel(self, request_id: int,
+               now: Optional[float] = None) -> bool:
+        """Client-initiated cancellation (the HTTP layer calls this when
+        an SSE stream disconnects mid-trajectory): release the event
+        handler, free the request wherever it lives — global queue entry,
+        pool-local queue entry, or resident slot — and forget its
+        checkpoint. Terminal ``cancel`` span from the fleet tier; no
+        event is delivered (the client is gone). Returns whether the
+        request was still in flight."""
+        now = time.perf_counter() if now is None else now
+        h = self._handlers.pop(request_id, None)
+        self._requests.pop(request_id, None)
+        self._g_streams.set(len(self._handlers))
+        found = self.fleet.cancel(request_id, now=now)
+        if self.supervisor is not None:
+            self.supervisor.checkpoints.forget(request_id)
+        if h is not None or found:
+            self._c_cancelled.inc()
+        return h is not None or found
 
     # ----------------------------------------------------------- overload
     def _shed(self, now: float) -> int:
@@ -253,6 +328,7 @@ class GatewayCore:
                           for r in self.fleet.queue.pending_requests()
                           if r.deadline is not None]
         kept_min = min(kept_deadlines) if kept_deadlines else None
+        retry_after = self.retry_after_s()
         for req in removed:
             code = victims[id(req)]
             headroom = (req.deadline - now
@@ -274,6 +350,7 @@ class GatewayCore:
                 "message": (f"request {req.request_id} shed under "
                             f"overload ({code.value})"),
                 "status": code.http_status,
+                "retry_after_s": retry_after,
             })
         return len(removed)
 
@@ -289,7 +366,9 @@ class GatewayCore:
         wall = now is None
         t = time.perf_counter() if wall else now
         delivered = self._shed(t)
-        results = self.fleet.tick(now)
+        results = (self.supervisor.tick(now)
+                   if self.supervisor is not None
+                   else self.fleet.tick(now))
         for r in results:
             if r.request_id not in self._handlers:
                 continue            # warm-up / foreign traffic
@@ -301,6 +380,20 @@ class GatewayCore:
                     "code": code.value,
                     "message": (f"request {r.request_id} expired in the "
                                 "queue before admission"),
+                    "status": code.http_status,
+                })
+            elif not np.all(np.isfinite(np.asarray(r.x0))):
+                # terminal NaN/Inf guard: a numerically exploded eps
+                # trunk must surface as a typed 5xx, never stream garbage
+                # to a client as if it were a sample
+                self._c_nonfinite.inc()
+                code = RejectCode.NONFINITE_SAMPLE
+                self._terminal(r.request_id, {
+                    "event": "error", "request_id": r.request_id,
+                    "code": code.value,
+                    "message": (f"request {r.request_id} produced a "
+                                "non-finite sample (pool "
+                                f"{r.pool_id})"),
                     "status": code.http_status,
                 })
             else:
@@ -383,18 +476,77 @@ class GatewayCore:
                     self._swap = None
                     return
                 job.current = job.pending.pop(0)
+                pool = self.fleet.pools[job.current]
+                if pool.state is PoolState.QUARANTINED:
+                    # already tripped out: residents were evicted at the
+                    # quarantine, so the engine is idle and install is
+                    # safe NOW — but do not restore; re-admission belongs
+                    # to the breaker probe, not the rollout
+                    self._install_swap(pool, job)
+                    job.current = None
+                    continue
                 self.fleet.drain_pool(job.current, now=now)
                 continue
             pool = self.fleet.pools[job.current]
+            if pool.state is PoolState.QUARANTINED:
+                # quarantined mid-drain: same as above — install on the
+                # (evicted, idle) engine and leave the breaker in charge
+                self._install_swap(pool, job)
+                job.current = None
+                continue
             if pool.state is not PoolState.STOPPED:
                 return               # residents still finishing; next pump
-            pool.install(self.registry.staged_params(job.model))
-            self.obs.registry.counter(
-                "gateway_swap_pools_total",
-                "pools walked by completed rollouts",
-                model=job.model).inc()
+            self._install_swap(pool, job)
             self.fleet.restore_pool(job.current)
             job.current = None
+
+    def _install_swap(self, pool: SlotPool, job: _SwapJob) -> None:
+        pool.install(self.registry.staged_params(job.model))
+        self.obs.registry.counter(
+            "gateway_swap_pools_total",
+            "pools walked by completed rollouts",
+            model=job.model).inc()
+
+    # ------------------------------------------------------------- health
+    def health(self) -> Dict:
+        """The /healthz body: ``status`` is "ok" unless any breaker is
+        not CLOSED ("degraded" — still serving, capacity reduced), with
+        per-pool detail and the quarantined pools' last errors."""
+        quarantined = []
+        degraded = False
+        sup = self.supervisor
+        if sup is not None and sup.degraded:
+            degraded = True
+            for pid in sup.quarantined_pools:
+                br = sup.breaker(pid)
+                quarantined.append({
+                    "pool": pid, "trips": br.trips,
+                    "last_error": br.last_error,
+                })
+        return {
+            "status": "degraded" if degraded else "ok",
+            "pools": [{"pool": p.pool_id, "state": p.state.value,
+                       "model": p.model, "health": p.health}
+                      for p in self.fleet.pools],
+            "quarantined": quarantined,
+            "queue_depth": len(self.fleet.queue),
+            "absorbed_pump_errors": self._absorbed,
+        }
+
+    def absorb_pump_error(self, exc: BaseException) -> bool:
+        """Bridge survivability hook: the EngineBridge asks whether a
+        pump exception should be absorbed (keep serving) or poison the
+        bridge (legacy behavior). Supervised cores absorb up to
+        MAX_ABSORBED_PUMP_ERRORS — pool faults are already contained by
+        the supervisor, so repeated pump-level failures mean the gateway
+        itself is broken and the bridge should fail loud."""
+        if self.supervisor is None:
+            return False
+        self._absorbed += 1
+        self.obs.registry.counter(
+            "gateway_pump_errors_absorbed_total",
+            "pump exceptions absorbed to keep the bridge alive").inc()
+        return self._absorbed <= self.MAX_ABSORBED_PUMP_ERRORS
 
     # -------------------------------------------------------------- stats
     def stats(self) -> Dict:
@@ -404,6 +556,8 @@ class GatewayCore:
             "rejected": self._sum_counter("gateway_rejected_total"),
             "shed": self._sum_counter("gateway_shed_total"),
             "expired": int(self._c_expired.value),
+            "cancelled": int(self._c_cancelled.value),
+            "nonfinite": int(self._c_nonfinite.value),
             "streams": len(self._handlers),
             "previews_streamed": int(self._c_previews.value),
             "results_streamed": int(self._c_results.value),
@@ -411,6 +565,8 @@ class GatewayCore:
             "models": self.registry.describe(),
             "queue_depth": len(self.fleet.queue),
             "fleet": self.fleet.stats(),
+            "resilience": (self.supervisor.stats()
+                           if self.supervisor is not None else None),
         }
 
     def reset_stats(self) -> None:
@@ -438,7 +594,9 @@ class GatewayCore:
               slots: int = 4, max_queue: Optional[int] = None,
               policy: Optional[OverloadPolicy] = None,
               obs: Optional[Observability] = None,
-              warm: bool = True, **engine_kw) -> "GatewayCore":
+              warm: bool = True, supervise: bool = True,
+              breaker=None, checkpoint_every: int = 8,
+              injector=None, **engine_kw) -> "GatewayCore":
         """A multi-model gateway over fresh pools.
 
         ``eps_apply(params, x, t)`` is the shared trunk; ``models`` maps
@@ -449,6 +607,13 @@ class GatewayCore:
         to opt out. ``warm=True`` traces every pool's tick with a 1-step
         request and resets throughput stats, so the first real request
         never pays (or mis-measures) compilation.
+
+        ``supervise=True`` (the default) pumps through a resilience
+        PoolSupervisor — identical on the happy path, but a pool tick
+        fault quarantines that pool and migrates its work instead of
+        poisoning the bridge (docs/resilience.md). ``breaker`` tunes its
+        BreakerPolicy, ``checkpoint_every`` its snapshot cadence, and
+        ``injector`` threads a FaultInjector through (chaos runs only).
         """
         obs = obs if obs is not None else Observability()
         registry = ModelRegistry()
@@ -465,7 +630,14 @@ class GatewayCore:
                 pools.append(SlotPool(pid, eng, model=name))
                 pid += 1
         fleet = PoolFleet(pools, max_queue=max_queue, obs=obs.child())
-        core = cls(fleet, registry, policy=policy, obs=obs)
+        supervisor = None
+        if supervise:
+            from repro.serving.resilience import PoolSupervisor
+            supervisor = PoolSupervisor(
+                fleet, policy=breaker, checkpoint_every=checkpoint_every,
+                injector=injector)
+        core = cls(fleet, registry, policy=policy, obs=obs,
+                   supervisor=supervisor)
         if warm:
             for p in pools:
                 p.engine.serve([SampleRequest(request_id=-1 - p.pool_id,

@@ -10,20 +10,29 @@ Endpoints (docs/gateway.md has schemas and curl examples):
                                  events; otherwise the handler awaits
                                  the terminal event and returns one JSON
                                  body (errors use the typed HTTP status).
+                                 A client that disconnects mid-stream
+                                 CANCELS its request: the slot frees,
+                                 the span closes with ``cancel``.
   GET  /v1/models                resident models + versions + staged flag
   POST /v1/models/{name}/rollout start a rolling hot-swap of the model's
                                  staged checkpoint (409 when nothing is
                                  staged or a rollout is mid-walk)
   GET  /v1/stats                 the gateway stats() tree as JSON
   GET  /metrics                  Prometheus text (gateway+fleet+pools)
-  GET  /healthz                  liveness (503 once the engine thread
-                                 has failed)
+  GET  /healthz                  liveness + degradation: 200 with
+                                 ``status: ok`` (all breakers closed) or
+                                 ``status: degraded`` (still serving;
+                                 quarantined-pool detail in the body);
+                                 503 ``status: failed`` once the engine
+                                 thread is truly dead
 
 Transport rules: handlers never touch the core directly — every core
 interaction goes through ``bridge.acall`` onto the engine thread, and
 core event callbacks are trampolined back with
 ``loop.call_soon_threadsafe`` into a per-request asyncio queue. x0
 arrays cross the wire as ``{"shape": [...], "data": [flat floats]}``.
+429/503 refusals carry a ``Retry-After`` header derived from the
+fleet's tick EWMA (core.retry_after_s).
 """
 from __future__ import annotations
 
@@ -56,17 +65,35 @@ def _sse(name: str, payload: Dict) -> bytes:
             .encode("utf-8"))
 
 
+def _retry_headers(retry_after_s) -> Optional[Dict[str, str]]:
+    if retry_after_s is None:
+        return None
+    return {"Retry-After": str(int(retry_after_s))}
+
+
 def _error_response(err: RequestError) -> "web.Response":
-    return web.json_response(err.payload(), status=err.status)
+    return web.json_response(err.payload(), status=err.status,
+                             headers=_retry_headers(err.retry_after_s))
 
 
 def build_app(bridge: EngineBridge) -> "web.Application":
     core = bridge.core
 
+    def _cancel(rid: int) -> None:
+        """Best-effort cancellation from transport-level teardown (the
+        bridge may already be stopping — nothing to free then)."""
+        try:
+            bridge.call(core.cancel, rid)
+        except RuntimeError:
+            pass
+
     async def sample(request: "web.Request") -> "web.StreamResponse":
         try:
             spec = await request.json()
-        except Exception:
+        except (ValueError, UnicodeDecodeError):
+            # aiohttp surfaces malformed bodies as json.JSONDecodeError
+            # (a ValueError) or bad encodings — anything else is a bug
+            # we want loud, not a 400
             return web.json_response(
                 {"error": "bad-request", "message": "body must be JSON"},
                 status=400)
@@ -85,13 +112,19 @@ def build_app(bridge: EngineBridge) -> "web.Application":
             return _error_response(e)
 
         if not stream:
-            ev = await events.get()
-            while ev["event"] == "preview":   # non-stream: previews drop
+            try:
                 ev = await events.get()
+                while ev["event"] == "preview":  # non-stream: drop them
+                    ev = await events.get()
+            except asyncio.CancelledError:
+                # client went away while we waited: free the slot
+                _cancel(rid)
+                raise
             if ev["event"] == "error":
                 return web.json_response(
                     {"error": ev["code"], "message": ev["message"],
-                     "request_id": rid}, status=ev["status"])
+                     "request_id": rid}, status=ev["status"],
+                    headers=_retry_headers(ev.get("retry_after_s")))
             return web.json_response(_wire(ev))
 
         resp = web.StreamResponse(
@@ -99,13 +132,22 @@ def build_app(bridge: EngineBridge) -> "web.Application":
                      "Cache-Control": "no-cache",
                      "X-Accel-Buffering": "no"})
         await resp.prepare(request)
-        await resp.write(_sse("accepted", {"request_id": rid}))
-        while True:
-            ev = await events.get()
-            await resp.write(_sse(ev["event"], _wire(ev)))
-            if ev["event"] in ("result", "error"):
-                break
-        await resp.write_eof()
+        try:
+            await resp.write(_sse("accepted", {"request_id": rid}))
+            while True:
+                ev = await events.get()
+                await resp.write(_sse(ev["event"], _wire(ev)))
+                if ev["event"] in ("result", "error"):
+                    break
+            await resp.write_eof()
+        except asyncio.CancelledError:
+            # mid-stream disconnect (client closed the SSE connection):
+            # cancel the in-flight trajectory so its slot frees NOW
+            # instead of ticking to completion for nobody
+            _cancel(rid)
+            raise
+        except ConnectionResetError:
+            _cancel(rid)
         return resp
 
     async def models(request: "web.Request") -> "web.Response":
@@ -138,7 +180,10 @@ def build_app(bridge: EngineBridge) -> "web.Application":
             return web.json_response(
                 {"status": "failed", "error": repr(bridge.error)},
                 status=503)
-        return web.json_response({"status": "ok"})
+        body = await bridge.acall(core.health)
+        # degraded still serves (reduced capacity) — 200 keeps load
+        # balancers routing here; orchestrators read ``status``
+        return web.json_response(body)
 
     app = web.Application()
     app.router.add_post("/v1/sample", sample)

@@ -1,0 +1,38 @@
+"""Latest-checkpoint store for trajectory migration.
+
+One :class:`SlotCheckpoint` per in-flight request — the supervisor's
+periodic sweep overwrites it (only the LATEST snapshot matters: DDIM's
+deterministic process replays the remaining steps exactly from any
+prefix state, so keeping history would buy nothing), and terminal
+events (retire/cancel) forget it. Memory is bounded by
+``n_in_flight * slot_rows_bytes``, independent of trajectory length.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.serving.scheduler.request import SlotCheckpoint
+
+
+class CheckpointStore:
+    """Latest per-request slot checkpoint (host memory)."""
+
+    def __init__(self):
+        self._latest: Dict[object, SlotCheckpoint] = {}
+        self.taken = 0        # snapshots ever stored (sweep telemetry)
+
+    def __len__(self) -> int:
+        return len(self._latest)
+
+    def put(self, ck: SlotCheckpoint) -> None:
+        self._latest[ck.request_id] = ck
+        self.taken += 1
+
+    def latest(self, request_id) -> Optional[SlotCheckpoint]:
+        return self._latest.get(request_id)
+
+    def forget(self, request_id) -> None:
+        self._latest.pop(request_id, None)
+
+    def clear(self) -> None:
+        self._latest.clear()

@@ -6,7 +6,7 @@ streaming. docs/serving.md is the narrative description.
 """
 from .engine import ContinuousBatchingEngine
 from .queue import AdmissionQueue
-from .request import SampleRequest, SampleResult
+from .request import SampleRequest, SampleResult, SlotCheckpoint
 
 __all__ = ["AdmissionQueue", "ContinuousBatchingEngine", "SampleRequest",
-           "SampleResult"]
+           "SampleResult", "SlotCheckpoint"]

@@ -62,7 +62,7 @@ from repro.kernels.sampler_step.kernel import _GOLDEN, _fmix32
 
 from ..errors import RejectCode, RequestError
 from .queue import AdmissionQueue
-from .request import SampleRequest, SampleResult
+from .request import SampleRequest, SampleResult, SlotCheckpoint
 
 
 @dataclasses.dataclass
@@ -256,6 +256,12 @@ class ContinuousBatchingEngine:
         self._c_installs = reg.counter(
             "engine_weight_installs_total",
             "eps_params hot-swaps installed (zero-retrace each)")
+        self._c_cancelled = reg.counter(
+            "engine_cancelled_total",
+            "requests cancelled by the client (slot or queue freed)")
+        self._c_resumed = reg.counter(
+            "engine_resumed_total",
+            "checkpointed trajectories resumed mid-flight")
         self._c_wall = reg.counter(
             "engine_tick_wall_seconds",
             "accumulated wall time inside the jitted tick")
@@ -326,6 +332,8 @@ class ContinuousBatchingEngine:
                               else 0.0)
         self._tick_fn = self._make_tick()
         self._write_fn = self._make_write()
+        self._hist_write_fn = (self._make_hist_write()
+                               if self._hist2 is not None else None)
         self._xT_fn = self._make_xT()
 
     # ----------------------------------- registry-backed counters (views)
@@ -531,6 +539,14 @@ class ContinuousBatchingEngine:
         kw = dict(donate_argnums=(0,)) if self.donate else {}
         return jax.jit(write, **kw)
 
+    def _make_hist_write(self):
+        def write(hist2, rows3, row0):
+            return self._constrain_hist(
+                jax.lax.dynamic_update_slice(hist2, rows3, (0, row0, 0)))
+
+        kw = dict(donate_argnums=(0,)) if self.donate else {}
+        return jax.jit(write, **kw)
+
     def _make_xT(self):
         from repro.kernels.sampler_step import ops as tile_ops
 
@@ -723,10 +739,27 @@ class ContinuousBatchingEngine:
             headroom = (req.deadline - now if req.deadline is not None
                         else None)
             b = self._free.pop()
-            self._slots[b] = _Slot(req=req, table=self._table_for(req),
-                                   k=0, admit_t=now, headroom_s=headroom)
-            self._x2 = self._write_fn(self._x2, self._xT_fn(req.seed),
-                                      b * self._rps)
+            ck = req.resume
+            slot = _Slot(req=req, table=self._table_for(req), k=0,
+                         admit_t=now, headroom_s=headroom)
+            self._slots[b] = slot
+            if ck is None:
+                self._x2 = self._write_fn(self._x2, self._xT_fn(req.seed),
+                                          b * self._rps)
+            else:
+                # mid-trajectory restore: refill the slot's tile rows from
+                # the checkpoint and continue from step k — same tables,
+                # same compiled tick, so the remaining steps are the exact
+                # computation the uninterrupted run would have done
+                req.resume = None
+                if not 0 <= ck.k < req.steps:
+                    raise ValueError(
+                        f"request {req.request_id}: checkpoint k={ck.k} "
+                        f"outside [0, {req.steps})")
+                self.write_slot_rows(b, ck.x_rows, ck.hist_rows)
+                slot.k = int(ck.k)
+                slot.previews = int(ck.previews)
+                self._c_resumed.inc()
             wait = (now - req.submit_t if req.submit_t is not None else 0.0)
             self._h_wait.observe(wait)
             ctx = req.trace
@@ -740,6 +773,9 @@ class ContinuousBatchingEngine:
                         req.resolved_plan(self.schedule, self.clip_x0))
                 ctx.emit("admit", now, slot=b, wait_s=wait,
                          headroom_s=headroom)
+                if ck is not None:
+                    ctx.emit("resume", now, k=int(ck.k),
+                             from_pool=ck.pool_id)
 
     def _states(self) -> StepStates:
         B = self.slots
@@ -786,6 +822,95 @@ class ContinuousBatchingEngine:
         if self.dtype == jnp.bfloat16:   # numpy has no bf16
             rows = rows.astype(jnp.float32)
         return np.asarray(rows).ravel()[:self._n].reshape(self.shape)
+
+    # --------------------------------------- checkpoint / migrate / cancel
+    @property
+    def slot_rows_shape(self) -> Tuple[int, int]:
+        """One slot's tile-row block shape: (rows_per_slot, 256)."""
+        return (self._rps, self._tile_c)
+
+    def resident_requests(self) -> List[Tuple[int, SampleRequest]]:
+        """(slot index, request) for every resident slot."""
+        return [(b, s.req) for b, s in enumerate(self._slots)
+                if s is not None]
+
+    def write_slot_rows(self, b: int, rows, hist_rows=None) -> None:
+        """Overwrite slot ``b``'s tile rows (and optionally its
+        eps-history rows) with host-provided values — the checkpoint
+        restore primitive (also what the fault injector's NaN poison
+        uses). Values round-trip bit-exactly: the rows are written by the
+        same jitted ``dynamic_update_slice`` that admission uses, in the
+        engine's own dtype, so a snapshot written back reproduces the
+        uninterrupted trajectory exactly."""
+        rows = jnp.asarray(np.asarray(rows), self.dtype)
+        if rows.shape != (self._rps, self._tile_c):
+            raise ValueError(
+                f"slot rows must be {(self._rps, self._tile_c)}, got "
+                f"{rows.shape}")
+        self._x2 = self._write_fn(self._x2, rows, b * self._rps)
+        if hist_rows is not None and self._hist_write_fn is not None:
+            h = jnp.asarray(np.asarray(hist_rows), jnp.float32)
+            self._hist2 = self._hist_write_fn(self._hist2, h,
+                                              b * self._rps)
+
+    def snapshot_slot(self, b: int,
+                      now: Optional[float] = None) -> SlotCheckpoint:
+        """Copy slot ``b``'s full trajectory state to the host.
+
+        Reads happen between ticks (single-threaded contract), so the
+        slices observe a settled state; numpy copies preserve the exact
+        bits (bfloat16 included, via ml_dtypes)."""
+        slot = self._slots[b]
+        if slot is None:
+            raise ValueError(f"slot {b} is not resident")
+        lo, hi = b * self._rps, (b + 1) * self._rps
+        hist = (np.asarray(self._hist2[:, lo:hi])
+                if self._hist2 is not None else None)
+        return SlotCheckpoint(
+            request_id=slot.req.request_id, k=slot.k,
+            x_rows=np.asarray(self._x2[lo:hi]), hist_rows=hist,
+            previews=slot.previews, pool_id=self.pool_id, taken_t=now)
+
+    def snapshot_slots(self,
+                       now: Optional[float] = None) -> List[SlotCheckpoint]:
+        """Checkpoint every resident slot (the supervisor's sweep)."""
+        return [self.snapshot_slot(b, now) for b, s in
+                enumerate(self._slots) if s is not None]
+
+    def evict_residents(self) -> List[SampleRequest]:
+        """Free every resident slot and hand back its request (no terminal
+        accounting — the caller re-routes the work, typically with a
+        ``resume`` checkpoint attached; see serving/resilience)."""
+        out: List[SampleRequest] = []
+        for b, slot in enumerate(self._slots):
+            if slot is not None:
+                out.append(slot.req)
+                self._slots[b] = None
+                self._free.append(b)
+        self._g_active.set(self.active)
+        return out
+
+    def cancel(self, request_id, now: Optional[float] = None) -> bool:
+        """Client-initiated cancellation: free the request's slot (or
+        remove it from the local queue). Emits a terminal ``cancel`` span
+        event; returns False when the request is not here (idempotent)."""
+        now = time.perf_counter() if now is None else now
+        for b, slot in enumerate(self._slots):
+            if slot is not None and slot.req.request_id == request_id:
+                self._slots[b] = None
+                self._free.append(b)
+                self._g_active.set(self.active)
+                self._c_cancelled.inc()
+                if slot.req.trace is not None:
+                    slot.req.trace.emit("cancel", now, k=slot.k)
+                return True
+        removed = self.queue.remove_if(
+            lambda r: r.request_id == request_id)
+        for r in removed:
+            self._c_cancelled.inc()
+            if r.trace is not None:
+                r.trace.emit("cancel", now)
+        return bool(removed)
 
     def _deliver_previews(self, x0_2, now: float) -> None:
         for b, slot in enumerate(self._slots):
@@ -953,6 +1078,8 @@ class ContinuousBatchingEngine:
             "occupancy": self.slot_steps / denom,
             "completed": self.completed,
             "dropped": self.dropped,
+            "cancelled": int(self._c_cancelled.value),
+            "resumed": int(self._c_resumed.value),
             "deadline_missed": self.deadline_missed,
             "previews_sent": self.previews_sent,
             "queued": len(self.queue),

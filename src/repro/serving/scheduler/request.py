@@ -25,6 +25,32 @@ from repro.sampling import SamplerPlan
 
 
 @dataclasses.dataclass
+class SlotCheckpoint:
+    """A resident slot's full trajectory state at step ``k``.
+
+    DDIM's generative process is deterministic given the plan and the
+    per-step noise stream seed (paper Eq. 12): ``(x_t rows, k,
+    eps-history rows)`` fully determine the rest of the trajectory, so a
+    checkpoint restored into ANY capability-homogeneous pool resumes the
+    run exactly — for eta=0 order-1 the resumed output is bit-identical
+    to the uninterrupted one (asserted in tests/test_resilience.py and
+    gated by benchmarks/chaos_recovery.py). Arrays are host-side numpy
+    copies in the engine's exact dtypes: ``x_rows`` is the slot's
+    (rows_per_slot, 256) tile block, ``hist_rows`` the matching
+    (max_order-1, rows_per_slot, 256) float32 eps-history block (None on
+    history-free engines).
+    """
+
+    request_id: int
+    k: int                             # next step index to run (0..S-1)
+    x_rows: np.ndarray                 # slot-tile rows, engine dtype
+    hist_rows: Optional[np.ndarray]    # eps-history rows (fp32) or None
+    previews: int = 0                  # previews already streamed
+    pool_id: Optional[int] = None      # pool that took the snapshot
+    taken_t: Optional[float] = None    # caller-clock snapshot time
+
+
+@dataclasses.dataclass
 class SampleRequest:
     """One sampling job for the continuous-batching engine."""
 
@@ -61,6 +87,13 @@ class SampleRequest:
     #                                     the request and carried through
     #                                     queue / routing / engine; None =
     #                                     untraced (events cost nothing)
+    resume: Optional[SlotCheckpoint] = None  # mid-trajectory restore: the
+    #                                     admitting engine writes the
+    #                                     checkpoint's rows instead of
+    #                                     drawing x_T and continues from
+    #                                     step k (quarantine migration —
+    #                                     see serving/resilience); cleared
+    #                                     at admission
 
     @property
     def stochastic(self) -> bool:
