@@ -8,8 +8,17 @@ seeded Poisson trace against a 3-pool supervised GatewayCore, twice:
   chaos       the SAME trace with a seeded FaultPlan injected: pool tick
               exceptions (quarantine + migrate), a NaN-poisoned eps
               (typed 5xx, never streamed), injected tick latency (costs
-              virtual time), and mid-stream SSE disconnects (the client
-              vanishes; the harness cancels like the HTTP layer would).
+              virtual time), mid-stream SSE disconnects (the client
+              vanishes; the harness cancels like the HTTP layer would),
+              and a silent weight corruption (finite garbage only the
+              device-probe tier can see).
+
+Both runs build their pools with the device-probe tier ON (probes=True
++ per-pool flight recorders), so the replay also exercises the
+observability path end-to-end: every quarantine dumps a postmortem, the
+nonfinite terminal guard dumps one naming the poisoned (pool, slot,
+step), and the weight corruption is localized from the flight rings'
+eps-activation statistics alone.
 
 Both runs advance time as ``t += PUMP_DT`` per pump (plus any injected
 latency), so the replay is bit-deterministic: same seed, same faults,
@@ -33,8 +42,19 @@ Gates (``check`` replays and enforces; tier-1 runs it via
                        sample (DDIM's deterministic process: state
                        ``(x_t, k)`` determines everything that remains).
   zero retrace         every pool still reports compiled_ticks == 1:
-                       quarantine, migration, and checkpoint restore
+                       quarantine, migration, checkpoint restore, the
+                       probe tier, and the weight-corruption install
                        never recompile the tick.
+  exact attribution    the nonfinite guard's flight dump attributes the
+                       NaN to EXACTLY the (pool, slot, step) the
+                       injector poisoned (its audit is ground truth);
+                       every quarantine dumped a postmortem.
+  silent-fault forensics the corrupted-weights fault (finite garbage —
+                       invisible to the nonfinite guard and the
+                       breaker) is localized to its pool from the
+                       flight rings via detect_weight_corruption, and
+                       the SAME detector stays silent on every pool of
+                       the fault-free run (no false positives).
 
   PYTHONPATH=src python -m benchmarks.run --suite chaos          # record
   PYTHONPATH=src python -m benchmarks.run --suite chaos --check  # CI gate
@@ -50,6 +70,7 @@ import numpy as np
 
 from benchmarks._common import ROOT, Row, percentiles, poisson_trace
 from repro.core import make_schedule
+from repro.obs import detect_weight_corruption, read_flight
 from repro.serving.errors import RequestError
 from repro.serving.fleet import make_trunk_params, trunk_apply
 from repro.serving.gateway import GatewayCore
@@ -61,6 +82,7 @@ PUMP_DT = 0.01          # virtual seconds per pump (one fleet round)
 GOODPUT_FLOOR = 0.75    # chaos goodput >= floor x fault-free goodput
 RECOVERY_PUMPS = 200    # breaker-recovery bound after the trace drains
 DISCONNECT_AFTER = 3    # pumps between accept and the simulated drop
+FLIGHT_DIR = os.path.join(ROOT, "results", "flight", "chaos")
 
 
 def _config(budget: str) -> dict:
@@ -68,7 +90,13 @@ def _config(budget: str) -> dict:
                 s_menu=(8, 12, 16), rate_per_s=30.0, seed=0,
                 checkpoint_every=2, backoff_pumps=6, probe_ticks=2,
                 n_tick_errors=2, n_nan=1, n_latency=2,
-                latency_s=5 * PUMP_DT, n_disconnects=1)
+                latency_s=5 * PUMP_DT, n_disconnects=1,
+                # silent weight corruption: scale must move the demo
+                # trunk's eps_rms past corrupt_factor (the tanh hidden
+                # layer saturates, so the jump is much smaller than the
+                # raw scale) while keeping every sample finite
+                n_corrupt=1, corrupt_scale=64.0, corrupt_factor=2.0,
+                flight_capacity=512)
     if budget == "smoke":
         base.update(n_requests=16, horizon_ticks=30)
     else:
@@ -83,6 +111,8 @@ def _build_core(cfg: dict, injector=None) -> GatewayCore:
         pools_per_model=cfg["n_pools"], slots=cfg["slots"],
         max_queue=cfg["max_queue"], supervise=True,
         checkpoint_every=cfg["checkpoint_every"], injector=injector,
+        probes=True, flight_dir=FLIGHT_DIR,
+        flight_capacity=cfg["flight_capacity"],
         breaker=BreakerPolicy(backoff_pumps=cfg["backoff_pumps"],
                               probe_ticks=cfg["probe_ticks"]))
 
@@ -94,7 +124,8 @@ def _plan(cfg: dict) -> FaultPlan:
         n_tick_errors=cfg["n_tick_errors"], n_nan=cfg["n_nan"],
         n_latency=cfg["n_latency"], latency_s=cfg["latency_s"],
         n_disconnects=cfg["n_disconnects"],
-        n_requests=cfg["n_requests"])
+        n_requests=cfg["n_requests"],
+        n_corrupt=cfg["n_corrupt"], corrupt_scale=cfg["corrupt_scale"])
 
 
 # ------------------------------------------------------- the replay loop
@@ -164,6 +195,22 @@ def _replay(cfg: dict, injector=None) -> dict:
     completed = sum(1 for evs in results.values() if evs)
     makespan = max(t - (t0_first or 0.0), 1e-9)
     lat = [e["latency_s"] for evs in results.values() for e in evs]
+    # flight-ring forensics: per-pool frame counts, postmortem dumps,
+    # and the silent-corruption detector run over each ring
+    flight = {}
+    for p in core.fleet.pools:
+        fl = getattr(p.engine, "flight", None)
+        if fl is None:
+            continue
+        frames = fl.frames()
+        flight[p.pool_id] = {
+            "frames": len(frames), "dumps": fl.dumps,
+            "corruption": detect_weight_corruption(
+                frames, factor=cfg["corrupt_factor"]),
+        }
+    nonfinite_dumps = [e["flight"] for evs in events.values()
+                       for e in evs
+                       if e["event"] == "error" and "flight" in e]
     return dict(
         core=core, events=events, accepted=accepted, refused=refused,
         cancelled=cancelled, completed=completed,
@@ -173,6 +220,11 @@ def _replay(cfg: dict, injector=None) -> dict:
         compiled_ticks=[p.engine.stats()["compiled_ticks"]
                         for p in core.fleet.pools],
         latency=(percentiles(lat) if lat else None),
+        flight=flight, nonfinite_dumps=nonfinite_dumps,
+        poisoned=(list(injector.poisoned) if injector is not None
+                  else []),
+        corrupted=(list(injector.corrupted) if injector is not None
+                   else []),
     )
 
 
@@ -269,6 +321,69 @@ def _gates(free, chaos, mig, cfg, plan) -> list:
             failures.append(f"{name}: compiled_ticks per pool "
                             f"{out['compiled_ticks']} != all 1 "
                             "(quarantine/migration retraced the tick)")
+    failures += _flight_gates(free, chaos, cfg)
+    return failures
+
+
+def _flight_gates(free, chaos, cfg) -> list:
+    """Flight-recorder / probe-tier gates over both replay audits."""
+    failures = []
+    # --- nan-eps attribution: the nonfinite terminal's flight dump must
+    # name EXACTLY the (pool, slot, step) the injector poisoned
+    poisoned = chaos["poisoned"]
+    if len(poisoned) != cfg["n_nan"]:
+        failures.append(
+            f"injector poisoned {len(poisoned)} slots, plan scheduled "
+            f"{cfg['n_nan']} nan-eps faults")
+    if not chaos["nonfinite_dumps"]:
+        failures.append("nonfinite terminal guard fired no flight dump "
+                        "(probe tier is on: the poisoned sample must "
+                        "produce a postmortem)")
+    elif poisoned:
+        header, _ = read_flight(chaos["nonfinite_dumps"][0])
+        attr, p0 = header.get("attribution"), poisoned[0]
+        got = (None if attr is None else
+               (attr.get("pool"), attr.get("slot"), attr.get("step")))
+        want = (p0["pool"], p0["slot"], p0["step"])
+        if got != want:
+            failures.append(
+                f"flight dump attributes the NaN to {got}, injector "
+                f"ground truth is (pool, slot, step)={want}")
+    # --- every quarantine wrote a postmortem
+    sup = chaos["supervisor"]
+    if sup["flight_dumps"] != sup["quarantines"]:
+        failures.append(
+            f"{sup['quarantines']} quarantines but "
+            f"{sup['flight_dumps']} quarantine flight dumps — every "
+            "breaker trip must leave a postmortem")
+    # --- silent weight corruption: localized from the rings alone...
+    corrupted = chaos["corrupted"]
+    if len(corrupted) != cfg["n_corrupt"]:
+        failures.append(
+            f"injector corrupted {len(corrupted)} pools, plan scheduled "
+            f"{cfg['n_corrupt']} corrupted-weights faults")
+    for c in corrupted:
+        det = chaos["flight"].get(c["pool"], {}).get("corruption")
+        if det is None:
+            failures.append(
+                f"corrupted-weights fault on pool {c['pool']} (tick "
+                f"{c['tick']}, x{c['scale']:g}) NOT detected by "
+                "detect_weight_corruption over its flight ring")
+        elif det["tick"] <= c["tick"]:
+            failures.append(
+                f"corruption detected at tick {det['tick']} on pool "
+                f"{c['pool']} but the fault fired after tick "
+                f"{c['tick']} — detector matched something else")
+    # --- ...with zero false positives on the fault-free replay
+    for pid, fl in free["flight"].items():
+        if fl["corruption"] is not None:
+            failures.append(
+                f"fault-free replay: detect_weight_corruption flagged "
+                f"pool {pid} ({fl['corruption']}) — false positive")
+    if free["nonfinite_dumps"] or free["supervisor"]["flight_dumps"]:
+        failures.append("fault-free replay wrote flight postmortems "
+                        f"(nonfinite={free['nonfinite_dumps']}, "
+                        f"quarantine={free['supervisor']['flight_dumps']})")
     return failures
 
 
@@ -277,7 +392,8 @@ def _strip(out: dict) -> dict:
     return {k: out[k] for k in
             ("completed", "goodput_per_s", "makespan_s", "refused",
              "cancelled", "recovery_pumps", "recovered", "supervisor",
-             "compiled_ticks", "latency")}
+             "compiled_ticks", "latency", "flight", "nonfinite_dumps",
+             "poisoned", "corrupted")}
 
 
 def run(budget: str = "full"):

@@ -12,11 +12,17 @@ prices that claim and commits it:
            sink, so every request emits its full span (submit / admit /
            first_tick / retire) and every tick updates the latency
            histograms that feed the percentile views.
+  probed   an identical engine with the DEVICE-probe tier on
+           (``probes=True`` + a flight recorder): every tick computes
+           the fused per-slot quality reductions (eps RMS, x0 stats,
+           finite fraction, step-doubling defect) inside the jitted
+           call and lands one (slots, 6) frame on the host.
 
-Both engines share the weight-heavy eps model and Poisson trace generator
+All engines share the weight-heavy eps model and Poisson trace generator
 from benchmarks.scheduler_throughput (weight-bound evals — the regime
-where serving economics are real). The SAME drain replays through both,
-INTERLEAVED (plain, traced, plain, traced, ...) over several repeats.
+where serving economics are real). The SAME drain replays through all
+three, INTERLEAVED (plain, traced, probed, plain, ...) over several
+repeats.
 
 Telemetry lives entirely on the HOST side of the tick (the jitted call
 carries zero JAX-level instrumentation — that's the design contract), so
@@ -34,10 +40,23 @@ Python; load spikes only inflate it), and the committed gate is
 i.e. turning on full span tracing may cost at most 2% of a steady tick's
 wall-clock.
 
+The probe tier is the deliberate exception to "telemetry is host-side":
+its reductions run INSIDE the jitted tick, so its gate is on TOTAL
+per-tick wall (min over interleaved repeats — the same subtraction trick
+cannot apply when the cost is in the compiled program):
+
+    (probed_total - plain_total) / plain_total  <=  5%
+
+and the probed engine must still compile exactly ONE tick trace (the
+probed program replaces the plain one; it never adds a second).
+
 The traced run doubles as the span-schema smoke: the produced JSONL log
 must parse, every span must be well-formed (repro.obs.check_spans), and
 the retire-event ordering must reconstruct the engine's actual
-retirement order exactly (file order IS emission order).
+retirement order exactly (file order IS emission order). The probed run
+doubles as the flight-recorder smoke: its ring must have captured
+frames, and a dump must round-trip through ``read_flight`` with the
+frozen header schema and PROBE_COLUMNS order.
 
   PYTHONPATH=src python -m benchmarks.run --suite obs
   PYTHONPATH=src python -m benchmarks.run --suite obs --check   # CI gate
@@ -52,20 +71,23 @@ import time
 
 from benchmarks._common import ROOT, Row
 from benchmarks.scheduler_throughput import SCH, make_eps, make_trace
-from repro.obs import (JsonlSink, Observability, check_spans, ordering,
+from repro.obs import (PROBE_COLUMNS, FlightRecorder, JsonlSink,
+                       Observability, check_spans, ordering, read_flight,
                        read_jsonl)
 from repro.serving.scheduler import ContinuousBatchingEngine
 from repro.serving.scheduler.request import SampleRequest
 
 TRACE_PATH = os.path.join(ROOT, "results", "traces", "obs_overhead.jsonl")
+FLIGHT_DIR = os.path.join(ROOT, "results", "flight")
 OVERHEAD_THRESHOLD_PCT = 2.0
+PROBE_THRESHOLD_PCT = 5.0
 
 
-def _build(eps_fn, dim: int, slots: int, obs: Observability
-           ) -> ContinuousBatchingEngine:
+def _build(eps_fn, dim: int, slots: int, obs: Observability,
+           probes=None, flight=None) -> ContinuousBatchingEngine:
     """One engine, tick compiled and counters zeroed (EWMA kept)."""
     eng = ContinuousBatchingEngine(SCH, eps_fn, (dim,), slots=slots,
-                                   obs=obs)
+                                   obs=obs, probes=probes, flight=flight)
     eng.submit(SampleRequest(request_id=-1, S=2, seed=0), now=0.0)
     eng.run()
     eng.reset_stats()
@@ -104,18 +126,57 @@ def _drain(eng: ContinuousBatchingEngine, trace, id_base: int, seed=0):
     return wall / ticks, host / ticks, results
 
 
+def _flight_smoke(eng: ContinuousBatchingEngine) -> list:
+    """Dump the probed engine's flight ring and round-trip the JSONL.
+
+    Returns failure strings (empty = pass): the ring must have captured
+    probe frames during the drains, the dump must land on disk, and
+    ``read_flight`` must hand back the frozen header schema with
+    PROBE_COLUMNS in order and one frame record per ring entry.
+    """
+    failures = []
+    flight = eng.flight
+    if flight is None or not flight.frames():
+        return ["probed engine's flight ring captured no frames"]
+    path = flight.dump("bench-smoke", bench="obs_overhead")
+    if path is None or not os.path.exists(path):
+        return [f"flight dump did not land on disk (path={path!r})"]
+    header, frames = read_flight(path)
+    if header.get("columns") != list(PROBE_COLUMNS):
+        failures.append(
+            f"flight header columns {header.get('columns')} != frozen "
+            f"PROBE_COLUMNS {list(PROBE_COLUMNS)}")
+    if header.get("frames") != len(frames):
+        failures.append(
+            f"flight header claims {header.get('frames')} frames but "
+            f"{len(frames)} frame records followed")
+    if not frames:
+        failures.append("flight dump round-tripped zero frames")
+    else:
+        vals = frames[-1].get("values")
+        if (not isinstance(vals, list)
+                or any(len(row) != len(PROBE_COLUMNS) for row in vals)):
+            failures.append(
+                "flight frame 'values' is not a (slots, "
+                f"{len(PROBE_COLUMNS)}) table")
+    return failures
+
+
 def measure(n_requests, s_menu, slots, dim, hidden, repeats, rate_per_s,
             seed=0):
-    """Interleaved min-over-repeats drain of plain vs traced engines."""
+    """Interleaved min-over-repeats drain: plain vs traced vs probed."""
     eps_fn = make_eps(dim, hidden, seed=seed)
     plain = _build(eps_fn, dim, slots, Observability())
     traced_obs = Observability()
     traced_obs.add_sink(JsonlSink(TRACE_PATH))
     traced = _build(eps_fn, dim, slots, traced_obs)
+    probed = _build(
+        eps_fn, dim, slots, Observability(), probes=True,
+        flight=FlightRecorder(256, pool_id=0, out_dir=FLIGHT_DIR))
     trace = make_trace(n_requests, s_menu, rate_per_s, seed=seed)
 
-    walls = {"plain": [], "traced": []}
-    hosts = {"plain": [], "traced": []}
+    walls = {"plain": [], "traced": [], "probed": []}
+    hosts = {"plain": [], "traced": [], "probed": []}
     last_traced_results = None
     for rep in range(repeats):
         # distinct id block per repeat so JSONL spans never collide
@@ -127,6 +188,9 @@ def measure(n_requests, s_menu, slots, dim, hidden, repeats, rate_per_s,
         walls["traced"].append(w)
         hosts["traced"].append(h)
         last_traced_results = (base, res)
+        w, h, _ = _drain(probed, trace, id_base=base, seed=seed)
+        walls["probed"].append(w)
+        hosts["probed"].append(h)
     traced_obs.close()
 
     events = read_jsonl(TRACE_PATH)
@@ -138,9 +202,11 @@ def measure(n_requests, s_menu, slots, dim, hidden, repeats, rate_per_s,
         schema_failures.append(
             f"retire-event ordering {got} does not reconstruct the "
             f"engine's retirement order {want}")
+    schema_failures.extend(_flight_smoke(probed))
 
     out = {}
-    for name, eng in (("plain", plain), ("traced", traced)):
+    for name, eng in (("plain", plain), ("traced", traced),
+                      ("probed", probed)):
         out[name] = {
             "per_tick_ms": min(walls[name]) * 1e3,
             "host_per_tick_ms": min(hosts[name]) * 1e3,
@@ -148,11 +214,17 @@ def measure(n_requests, s_menu, slots, dim, hidden, repeats, rate_per_s,
             "compiled_ticks": eng.stats()["compiled_ticks"],
         }
     out["traced"]["events"] = len(events)
+    out["probed"]["probe_frames"] = probed.stats()["probe_frames"]
     # tracing's cost as a fraction of a steady tick's total wall-clock:
     # host-only numerator so XLA dispatch jitter cancels out of the gate
     out["overhead_pct"] = (
         (out["traced"]["host_per_tick_ms"]
          - out["plain"]["host_per_tick_ms"])
+        / out["plain"]["per_tick_ms"]) * 100.0
+    # the probe reductions live INSIDE the jitted tick, so their gate is
+    # on total wall — min over interleaved repeats tames dispatch jitter
+    out["probe_overhead_pct"] = (
+        (out["probed"]["per_tick_ms"] - out["plain"]["per_tick_ms"])
         / out["plain"]["per_tick_ms"]) * 100.0
     out["schema_failures"] = schema_failures
     return out
@@ -180,31 +252,46 @@ def run(budget: str = "full"):
         **{k: (list(v) if isinstance(v, tuple) else v)
            for k, v in cfg.items()},
         "threshold_pct": OVERHEAD_THRESHOLD_PCT,
+        "probe_threshold_pct": PROBE_THRESHOLD_PCT,
         "plain": m["plain"],
         "traced": m["traced"],
+        "probed": m["probed"],
         "overhead_pct": m["overhead_pct"],
+        "probe_overhead_pct": m["probe_overhead_pct"],
         "note": ("interleaved min-over-repeats drain of one Poisson "
-                 "trace through two identical weight-heavy-eps engines; "
-                 "plain = default Observability (registry metrics only), "
-                 "traced = + JSONL span sink. overhead_pct = (traced "
-                 "host per-tick - plain host per-tick) / plain total "
-                 "per-tick: telemetry is host-side by design, and the "
-                 "host/jit split cancels XLA dispatch jitter out of the "
-                 "gate. The traced run's JSONL doubles as the "
-                 "span-schema smoke."),
+                 "trace through three identical weight-heavy-eps "
+                 "engines; plain = default Observability (registry "
+                 "metrics only), traced = + JSONL span sink, probed = "
+                 "+ device-probe tier (fused in-tick quality reductions "
+                 "+ flight ring). overhead_pct = (traced host per-tick "
+                 "- plain host per-tick) / plain total per-tick: span "
+                 "telemetry is host-side by design, and the host/jit "
+                 "split cancels XLA dispatch jitter out of the gate. "
+                 "probe_overhead_pct = (probed total - plain total) / "
+                 "plain total: the probe reductions live inside the "
+                 "jitted tick, so their gate is on total wall. The "
+                 "traced run's JSONL doubles as the span-schema smoke; "
+                 "the probed run's flight ring doubles as the "
+                 "flight-recorder dump/read smoke."),
     }
     with open(os.path.join(ROOT, "BENCH_obs.json"), "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     rows = []
-    for name in ("plain", "traced"):
+    for name in ("plain", "traced", "probed"):
+        if name == "traced":
+            derived = (f"overhead_pct={m['overhead_pct']:.2f};"
+                       f"events={m['traced']['events']}")
+        elif name == "probed":
+            derived = (f"probe_overhead_pct={m['probe_overhead_pct']:.2f};"
+                       f"probe_frames={m['probed']['probe_frames']}")
+        else:
+            derived = f"compiled_ticks={m[name]['compiled_ticks']}"
         rows.append(Row(
             f"obs_overhead/drain/{name}",
             m[name]["per_tick_ms"] * 1e3,
             f"host_per_tick_ms={m[name]['host_per_tick_ms']:.3f};"
-            + (f"overhead_pct={m['overhead_pct']:.2f};"
-               f"events={m['traced']['events']}" if name == "traced"
-               else f"compiled_ticks={m[name]['compiled_ticks']}")))
+            + derived))
     return rows
 
 
@@ -214,10 +301,14 @@ def check(budget: str = "full"):
     Failure modes (returned as strings, empty list = pass):
 
       * telemetry overhead above the committed threshold (2%);
-      * either engine compiled more than one tick trace — telemetry must
-        never perturb the zero-retrace contract;
+      * device-probe overhead above its committed threshold (5% of total
+        tick wall — the probe reductions run inside the jitted call);
+      * any engine compiled more than one tick trace — telemetry must
+        never perturb the zero-retrace contract, and the probed program
+        REPLACES the plain one rather than adding a second;
       * the traced replay's JSONL failing the span schema or not
-        reconstructing the retirement order.
+        reconstructing the retirement order;
+      * the probed replay's flight ring failing the dump/read smoke.
 
     Per-tick wall is machine-dependent; the overhead RATIO is not, so the
     committed absolute numbers are informational only. A failing
@@ -237,6 +328,8 @@ def check(budget: str = "full"):
                hidden=committed["hidden"], repeats=committed["repeats"],
                rate_per_s=committed["rate_per_s"])
     threshold = committed["threshold_pct"]
+    probe_threshold = committed.get("probe_threshold_pct",
+                                    PROBE_THRESHOLD_PCT)
 
     def _measure_failures():
         m = measure(**cfg)
@@ -248,7 +341,13 @@ def check(budget: str = "full"):
                 f"(host {m['traced']['host_per_tick_ms']:.3f} traced vs "
                 f"{m['plain']['host_per_tick_ms']:.3f} plain ms/tick on "
                 f"a {m['plain']['per_tick_ms']:.3f} ms tick)")
-        for name in ("plain", "traced"):
+        if m["probe_overhead_pct"] > probe_threshold:
+            failures.append(
+                f"device-probe overhead {m['probe_overhead_pct']:.2f}% "
+                f"of tick wall-clock exceeds the {probe_threshold:.0f}% "
+                f"budget ({m['probed']['per_tick_ms']:.3f} probed vs "
+                f"{m['plain']['per_tick_ms']:.3f} plain ms/tick)")
+        for name in ("plain", "traced", "probed"):
             if m[name]["compiled_ticks"] != 1:
                 failures.append(
                     f"{name} engine compiled {m[name]['compiled_ticks']} "

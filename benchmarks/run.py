@@ -28,9 +28,12 @@ BENCH_*.json and exits non-zero on regression:
              sharded pool meshes);
   obs        telemetry (full JSONL span tracing vs the registry-only
              default) costing more than 2% of a steady tick's wall-clock
-             on a replay of the committed trace, either engine
-             recompiling its tick, or the traced replay's JSONL failing
-             the span schema / retirement-order reconstruction;
+             on a replay of the committed trace, device probes costing
+             more than 5% of total tick wall, any of the three engines
+             (plain / traced / probed) recompiling its tick, the traced
+             replay's JSONL failing the span schema / retirement-order
+             reconstruction, or the probed replay's flight-recorder
+             smoke failing to round-trip its frozen dump schema;
   gateway    the committed BENCH_gateway.json no longer demonstrating
              the acceptance bar (overload goodput >= 0.90x the
              no-overload ceiling, sheds present, zero shed-ordering
@@ -45,8 +48,12 @@ BENCH_*.json and exits non-zero on regression:
              faults below 0.75x the fault-free run, breakers not
              recovering within the bounded pump budget, a migrated
              eta=0 trajectory not bit-identical to the uninterrupted
-             one, any pool retracing its tick, or the goodput ratio
-             drifting >0.10 from the committed (deterministic) value.
+             one, any pool retracing its tick, the goodput ratio
+             drifting >0.10 from the committed (deterministic) value,
+             a nan-eps flight dump failing to name the exact poisoned
+             (pool, slot, step), a corrupted-weights fault escaping
+             probe-frame detection, or the fault-free replay producing
+             any detection / dump (false positive).
 
 All gates are wired into scripts/tier1.sh so hot-path and serving
 regressions can't land silently.
@@ -175,6 +182,13 @@ def _history_entry(root: str) -> str:
             f"traced vs {bench['plain']['host_per_tick_ms']:.3f} plain "
             f"ms/tick on a {bench['plain']['per_tick_ms']:.3f} ms tick, "
             f"{bench['traced']['events']} span events)")
+        if "probe_overhead_pct" in bench:
+            lines.append(
+                f"- obs/probes: {bench['probe_overhead_pct']:.2f}% of "
+                f"total tick wall "
+                f"({bench['probed']['per_tick_ms']:.3f} probed vs "
+                f"{bench['plain']['per_tick_ms']:.3f} plain ms/tick, "
+                f"{bench['probed']['probe_frames']} probe frames)")
     gw = os.path.join(root, "BENCH_gateway.json")
     if os.path.exists(gw):
         with open(gw) as f:

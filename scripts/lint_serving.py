@@ -1,11 +1,13 @@
 #!/usr/bin/env python
-"""Exception-hygiene lint for the serving stack.
+"""Static hygiene lints for the serving + observability stacks.
 
-The resilience layer (docs/resilience.md) turns pool failures into
-quarantine + migrate and transport failures into typed refusals — which
-only works if NOTHING in ``src/repro/serving/`` swallows errors with a
-blanket handler before they reach the fault boundary. This lint fails
-on:
+Two rule sets, both AST-based:
+
+**Exception hygiene** (``src/repro/serving/``). The resilience layer
+(docs/resilience.md) turns pool failures into quarantine + migrate and
+transport failures into typed refusals — which only works if NOTHING in
+the serving stack swallows errors with a blanket handler before they
+reach the fault boundary. This lint fails on:
 
   * bare ``except:`` clauses, and
   * any ``except`` whose type expression mentions ``Exception``
@@ -19,6 +21,16 @@ exception is re-recorded — it re-raises or re-routes, never swallows.
 That pattern survives this lint precisely so the boundaries stay
 greppable: anything broad enough to catch an InjectedFault must be one
 of the places the chaos harness exercises.
+
+**Obs JAX containment** (``src/repro/obs/``). The telemetry contract
+(ROADMAP.md, docs/observability.md) keeps observability host-side with
+exactly one carve-out: ``obs/probes.py`` (the device-probe tier). Every
+OTHER obs module is forbidden to import or touch JAX's compute surface
+— ``jax.numpy``, ``jax.lax``, ``jax.random``, ``jit``/``vmap``/``grad``
+/``pmap`` — so a telemetry change can never silently add an op to a
+compiled tick. The host-metadata surfaces ``jax.profiler`` (trace
+annotations) and ``jax.tree_util`` (pytree byte accounting) stay
+allowed: they emit no ops.
 
 Run from the repo root (scripts/tier1.sh does):
 
@@ -34,6 +46,14 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TARGET = os.path.join(ROOT, "src", "repro", "serving")
+OBS_TARGET = os.path.join(ROOT, "src", "repro", "obs")
+
+# jax attributes that reach the compute/trace surface; jax.profiler and
+# jax.tree_util are deliberately NOT here (host-side metadata only)
+_JAX_COMPUTE = {"numpy", "lax", "random", "jit", "vmap", "grad", "pmap",
+                "custom_jvp", "custom_vjp", "checkpoint", "remat"}
+# the only obs module allowed JAX ops (the device-probe carve-out)
+_OBS_JAX_ALLOWED = {"probes.py"}
 
 
 def _mentions_exception(node) -> bool:
@@ -69,30 +89,92 @@ def lint_file(path: str) -> list:
     return problems
 
 
+def _jax_import_violations(tree, rel: str) -> list:
+    """JAX compute-surface uses in an obs module that must stay host-side.
+
+    Flags ``import jax.numpy ...`` / ``from jax import numpy, lax, jit``
+    / ``from jax.numpy import ...``, plus attribute access spelling
+    ``jax.numpy`` / ``jax.jit`` / ... on a bare ``jax`` name. The
+    allowed host surfaces (``jax.profiler``, ``jax.tree_util``) pass.
+    """
+    problems = []
+
+    def bad(lineno: int, what: str) -> None:
+        problems.append(
+            f"{rel}:{lineno}: {what} — obs/ is host-side by contract; "
+            "only obs/probes.py may touch JAX's compute surface "
+            "(docs/observability.md)")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                parts = alias.name.split(".")
+                if (parts[0] == "jax" and len(parts) > 1
+                        and parts[1] in _JAX_COMPUTE):
+                    bad(node.lineno, f"'import {alias.name}'")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            parts = mod.split(".")
+            if parts[0] != "jax":
+                continue
+            if len(parts) > 1 and parts[1] in _JAX_COMPUTE:
+                bad(node.lineno, f"'from {mod} import ...'")
+            elif len(parts) == 1:
+                for alias in node.names:
+                    if alias.name in _JAX_COMPUTE:
+                        bad(node.lineno,
+                            f"'from jax import {alias.name}'")
+        elif isinstance(node, ast.Attribute):
+            if (isinstance(node.value, ast.Name)
+                    and node.value.id == "jax"
+                    and node.attr in _JAX_COMPUTE):
+                bad(node.lineno, f"'jax.{node.attr}' use")
+    return problems
+
+
+def lint_obs_file(path: str) -> list:
+    if os.path.basename(path) in _OBS_JAX_ALLOWED:
+        return []
+    with open(path) as f:
+        src = f.read()
+    tree = ast.parse(src, filename=path)
+    return _jax_import_violations(tree, os.path.relpath(path, ROOT))
+
+
+def _walk_py(target: str) -> list:
+    return sorted(
+        os.path.join(d, f)
+        for d, _, names in os.walk(target)
+        for f in names if f.endswith(".py"))
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--list", action="store_true",
                     help="print the scanned files")
     args = ap.parse_args()
-    files = sorted(
-        os.path.join(d, f)
-        for d, _, names in os.walk(TARGET)
-        for f in names if f.endswith(".py"))
-    if not files:
-        print(f"lint_serving: nothing to scan under {TARGET}",
-              file=sys.stderr)
+    files = _walk_py(TARGET)
+    obs_files = _walk_py(OBS_TARGET)
+    if not files or not obs_files:
+        print(f"lint_serving: nothing to scan under {TARGET} / "
+              f"{OBS_TARGET}", file=sys.stderr)
         return 1
     problems = []
     for path in files:
         if args.list:
             print(os.path.relpath(path, ROOT))
         problems.extend(lint_file(path))
+    for path in obs_files:
+        if args.list:
+            print(os.path.relpath(path, ROOT))
+        problems.extend(lint_obs_file(path))
     if problems:
-        print("serving exception-hygiene lint FAILED:", file=sys.stderr)
+        print("serving/obs hygiene lint FAILED:", file=sys.stderr)
         for p in problems:
             print(f"  {p}", file=sys.stderr)
         return 1
-    print(f"serving exception-hygiene lint OK ({len(files)} files)")
+    print(f"serving/obs hygiene lint OK "
+          f"({len(files)} serving + {len(obs_files)} obs files)")
     return 0
 
 

@@ -37,10 +37,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 # fails on >25% drop of any aggregate samples/s scaling ratio (x2, x4)
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m benchmarks.run --suite fleet --check
-# telemetry overhead gate (ISSUE 7): full span tracing may cost at most
-# 2% of a steady tick's wall-clock vs the registry-only default, must not
-# perturb the one-compiled-tick contract, and the replay's JSONL must
-# reconstruct the exact admission/retire ordering
+# telemetry overhead gate (ISSUE 7 + 10): full span tracing may cost at
+# most 2% of a steady tick's host wall-clock vs the registry-only
+# default, device probes at most 5% of total tick wall, none of the
+# three engines may perturb the one-compiled-tick contract, the
+# replay's JSONL must reconstruct the exact admission/retire ordering,
+# and the flight-recorder smoke must round-trip its frozen schema
 python -m benchmarks.run --suite obs --check
 # gateway smoke (ISSUE 8): live HTTP/SSE traffic against a 2-model fleet —
 # steady load completes with streamed previews, an overload wave sheds in
@@ -56,16 +58,21 @@ python examples/gateway_sse.py --smoke
 # zero shed-ordering violations) and a fresh live replay must reproduce
 # the behavior within the noise band
 python -m benchmarks.run --suite gateway --check
-# exception-hygiene lint (ISSUE 9 satellite): nothing in the serving
-# stack may swallow errors with a bare/blanket except — faults must
-# reach the supervisor/bridge boundaries so quarantine + migrate can
-# work; handlers name their types (BaseException allowed only at the
-# re-recording fault boundaries)
+# exception-hygiene + obs-JAX lint (ISSUE 9 + 10 satellites): nothing
+# in the serving stack may swallow errors with a bare/blanket except —
+# faults must reach the supervisor/bridge boundaries so quarantine +
+# migrate can work; handlers name their types (BaseException allowed
+# only at the re-recording fault boundaries). Also: no obs/ module
+# except probes.py may import JAX's compute surface (host-only
+# telemetry is linted, not a convention)
 python scripts/lint_serving.py
-# chaos recovery gate (ISSUE 9): deterministic virtual-clock replay of
-# the committed seeded fault plan — zero lost work (exactly one terminal
-# per accepted request), goodput under faults >= 0.75x fault-free,
-# breakers re-close within the bounded pump budget, an interrupted
-# trajectory resumed on another pool is bit-identical (eta=0), and no
-# pool retraces its compiled tick
+# chaos recovery gate (ISSUE 9 + 10): deterministic virtual-clock
+# replay of the committed seeded fault plan — zero lost work (exactly
+# one terminal per accepted request), goodput under faults >= 0.75x
+# fault-free, breakers re-close within the bounded pump budget, an
+# interrupted trajectory resumed on another pool is bit-identical
+# (eta=0), no pool retraces its compiled tick, every nan-eps fault's
+# flight dump names the exact poisoned (pool, slot, step), and every
+# corrupted-weights fault is flagged from probe frames with zero
+# false positives on the fault-free replay
 python -m benchmarks.run --suite chaos --check

@@ -141,6 +141,7 @@ def step_table(schedule: NoiseSchedule, cfg: SamplerConfig):
 def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
                    hist2: Optional[jnp.ndarray] = None, clip_x0=None,
                    stochastic: bool = False, want_x0: bool = False,
+                   want_eps: bool = False,
                    hw_prng: bool = False, interpret: bool = True):
     """One scheduler tick over the slot-tile view — the jit-once tick body.
 
@@ -156,7 +157,9 @@ def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
     Adams–Bashforth combination (order-1 slots carry weight rows [1, 0...]
     and ride along unchanged). Returns the advanced view (plus the
     x0-preview view when ``want_x0``); with ``hist2`` the return is
-    ``(step_out, new_hist2)``.
+    ``(step_out, new_hist2)``. ``want_eps`` additionally appends the RAW
+    (pre-solver-mix) eps evaluation in tile layout — the engine's probed
+    tick reduces it on-device (obs/probes.py) without a second eval.
     """
     from repro.kernels.sampler_step import ops as tile_ops
 
@@ -168,6 +171,7 @@ def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
         n = int(np.prod(shape))
         x_nat = tile_ops.from_slot_tile_layout(x2, n, (B,) + tuple(shape))
         eps2, _ = tile_ops.to_slot_tile_layout(eps_fn(x_nat, states.t))
+    eps_raw2 = eps2 if want_eps else None
     new_hist2 = None
     if hist2 is not None:
         # per-slot Adams–Bashforth combine: each row's effective eps is a
@@ -187,7 +191,11 @@ def slot_tile_step(eps_fn, x2: jnp.ndarray, states: StepStates, shape, *,
         x2, eps2, row_coefs, row_seeds, clip=clip_x0, stochastic=stochastic,
         want_x0=want_x0, hw_prng=hw_prng, interpret=interpret)
     if hist2 is not None:
+        if want_eps:
+            return out, new_hist2, eps_raw2
         return out, new_hist2
+    if want_eps:
+        return out, eps_raw2
     return out
 
 

@@ -90,6 +90,17 @@ def _finish_replay(results, server, obs, trace_path, args) -> None:
         with open(args.prom_out, "w") as f:
             f.write(text)
         print(f"metrics    {args.prom_out}")
+    if getattr(args, "flight_dir", None):
+        # replay postmortems on request: dump every recorder's ring so a
+        # clean run's trajectory-quality history is inspectable too
+        engines = ([p.engine for p in server.pools]
+                   if hasattr(server, "pools") else [server])
+        for eng in engines:
+            flight = getattr(eng, "flight", None)
+            if flight is not None:
+                path = flight.dump("replay-end")
+                if path is not None:
+                    print(f"flight     {path}")
     if args.out:
         done = [r for r in sorted(results, key=lambda r: r.request_id)
                 if r.x0 is not None]
@@ -165,7 +176,8 @@ def serve_unet_gateway(args):
         schedule, lambda p, x, t: unet.forward(p, ucfg, x, t),
         (args.image_size, args.image_size, 3),
         models=models, pools_per_model=max(1, args.pools),
-        slots=args.slots, policy=OverloadPolicy(), obs=obs)
+        slots=args.slots, policy=OverloadPolicy(), obs=obs,
+        probes=args.probes or None, flight_dir=args.flight_dir)
 
     async def _smoke_client(port: int) -> bool:
         import aiohttp
@@ -297,8 +309,13 @@ def serve_unet_continuous(args, svc: DiffusionSampler):
         return serve_unet_fleet(args, svc, stochastic=stochastic,
                                 max_order=max_order, clip_x0=clip_x0)
     obs, trace_path = _make_obs(args)
+    flight = None
+    if args.probes:
+        from repro.obs import FlightRecorder
+        flight = FlightRecorder(pool_id=0, out_dir=args.flight_dir)
     eng = svc.continuous(slots=args.slots, stochastic=stochastic,
-                         max_order=max_order, clip_x0=clip_x0, obs=obs)
+                         max_order=max_order, clip_x0=clip_x0, obs=obs,
+                         probes=args.probes or None, flight=flight)
 
     def plan_for(i: int) -> SamplerPlan:
         S = s_mix[i % len(s_mix)]
@@ -389,7 +406,8 @@ def serve_unet_fleet(args, svc: DiffusionSampler, *, stochastic,
         (args.image_size, args.image_size, 3), n_pools=args.pools,
         slots=args.slots, meshes=meshes, dtype=svc.dtype,
         stochastic=stochastic, max_order=max_order, clip_x0=clip_x0,
-        plan_bank=svc.plan_bank, obs=obs)
+        plan_bank=svc.plan_bank, obs=obs,
+        probes=args.probes or None, flight_dir=args.flight_dir)
     # warm every pool's tick before stamping latencies
     fleet.serve([SampleRequest(request_id=-1 - p, S=min(s_mix), seed=0)
                  for p in range(args.pools)], now=0.0)
@@ -468,6 +486,15 @@ def main():
     ap.add_argument("--prom-out", default=None,
                     help="with --scheduler: write a Prometheus text "
                     "metrics snapshot at replay exit")
+    ap.add_argument("--probes", action="store_true",
+                    help="enable the device-probe tier (obs/probes.py): "
+                         "per-slot eps/x0/finite/defect reductions fused "
+                         "into the tick, quality columns in --dash, and "
+                         "per-request quality summaries")
+    ap.add_argument("--flight-dir", default=None,
+                    help="directory for flight-recorder JSONL postmortems "
+                         "(implies an in-memory ring even when faults "
+                         "never fire; requires --probes)")
     ap.add_argument("--profile", action="store_true",
                     help="with --scheduler: wrap ticks in jax.profiler "
                     "trace annotations (repro/tick/<variant>) so a "

@@ -1,0 +1,128 @@
+"""Device-side numerics probes — the ONLY obs module allowed JAX ops.
+
+Everything else in ``repro.obs`` is host-side by contract (enforced by
+``scripts/lint_serving.py``); this module is the carve-out: it defines the
+frozen :class:`ProbeSpec` and the traced reduction :func:`device_frame`
+that the engine fuses into its probed tick variant. The reductions are
+cheap per-slot folds over tensors the tick already materializes (the raw
+eps evaluation, the pre/post-step state), so enabling probes adds zero
+model evaluations and one tiny ``(slots, 6)`` float32 transfer per tick.
+
+Probe on/off is STATIC: the engine compiles the plain tick and (at most)
+one probed tick, so toggling probes at runtime switches between two
+already-compiled programs — never a retrace (tests/test_probes.py pins
+the trace count at <= 2 and the probed jaxpr at zero PRNG ops).
+
+The ``defect`` column is a one-eval step-doubling proxy. The offline
+quality table (autoplan/objective.py::step_doubling_defect) pays one
+extra model evaluation per grid pair to compare a direct Eq. 12 jump
+against two half-jumps through a midpoint eval. With eps frozen, the two
+paths are *identical* (the update is an exponential integrator in
+x0/eps), so the whole defect is carried by how much eps moves across the
+sub-step — which the serving tick observes for free as the drift between
+this tick's raw eps evaluation and the previous one (the newest Adams-
+Bashforth history row on multistep engines, a probe-carried buffer on
+order-1 engines). Its per-slot live-element RMS is the leading term of
+the step-doubling defect at zero extra evals; it is NaN at a slot's
+first step (k == 0 — there is no previous eval), and hosts must gate on
+``slot.k >= 1`` before trusting it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.obs.schema import PROBE_COLUMNS
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSpec:
+    """Static selection of per-slot reductions fused into the tick.
+
+    Frozen + hashable so it can close over the traced tick as a
+    compile-time constant. Disabling a probe fills its column(s) with
+    NaN ("not computed") rather than shrinking the frame — the
+    ``(slots, len(PROBE_COLUMNS))`` shape is part of the schema.
+    """
+
+    eps_norm: bool = True     # eps_rms column
+    x0_stats: bool = True     # x0_min / x0_max / x0_mean columns
+    finite: bool = True       # finite_frac column (post-step state)
+    defect: bool = True       # step-doubling proxy column
+
+    def describe(self) -> str:
+        on = [f.name for f in dataclasses.fields(self)
+              if getattr(self, f.name)]
+        return "+".join(on) if on else "none"
+
+
+def device_frame(spec, x_in2, x_new2, eps2, eps_prev2, states, *,
+                 rps: int, n_live: int):
+    """Fold slot-tile tensors into a ``(slots, 6)`` float32 probe frame.
+
+    Called from INSIDE the engine's traced probed tick. All inputs are
+    slot-tile layout ``(slots * rps, TILE_C)``; ``n_live`` is the static
+    per-slot live-element count, so the pad-lane mask constant-folds.
+    ``eps_prev2`` may be None (defect probe off, or an order-1 engine
+    whose spec disables it) — the defect column is then NaN.
+    """
+    b = states.t.shape[0]
+    c = x_in2.shape[1]
+    m = rps * c
+    live = jnp.arange(m) < n_live              # static → constant-folded
+    mask = live.astype(jnp.float32)
+    inv_n = jnp.float32(1.0 / float(n_live))
+    nan_col = jnp.full((b,), jnp.nan, jnp.float32)
+
+    def per_slot(a2):
+        return a2.reshape(b, m).astype(jnp.float32)
+
+    eps = per_slot(eps2)
+    if spec.eps_norm:
+        eps_rms = jnp.sqrt(jnp.sum((eps * mask) ** 2, axis=1) * inv_n)
+    else:
+        eps_rms = nan_col
+
+    if spec.x0_stats:
+        # Eq. 12 x0-hat from the pre-step state and the raw eps; the
+        # per-slot alpha coefficients broadcast over the slot's rows
+        # (idle slots carry sqrt_a_t = 1, so the division is safe)
+        sa = states.sqrt_a_t.astype(jnp.float32)[:, None]
+        s1 = states.sqrt_1m_a_t.astype(jnp.float32)[:, None]
+        x0 = (per_slot(x_in2) - s1 * eps) / sa
+        inf = jnp.float32(jnp.inf)
+        x0_min = jnp.min(jnp.where(live, x0, inf), axis=1)
+        x0_max = jnp.max(jnp.where(live, x0, -inf), axis=1)
+        x0_mean = jnp.sum(x0 * mask, axis=1) * inv_n
+    else:
+        x0_min = x0_max = x0_mean = nan_col
+
+    if spec.finite:
+        ok = jnp.isfinite(per_slot(x_new2)).astype(jnp.float32)
+        finite_frac = jnp.sum(ok * mask, axis=1) * inv_n
+    else:
+        finite_frac = nan_col
+
+    if spec.defect and eps_prev2 is not None:
+        d = eps - per_slot(eps_prev2)
+        defect = jnp.sqrt(jnp.sum((d * mask) ** 2, axis=1) * inv_n)
+    else:
+        defect = nan_col
+
+    frame = jnp.stack(
+        [eps_rms, x0_min, x0_max, x0_mean, finite_frac, defect], axis=1)
+    assert frame.shape == (b, len(PROBE_COLUMNS))
+    return frame
+
+
+def normalize_probes(probes) -> Optional[ProbeSpec]:
+    """Coerce an engine's ``probes=`` argument to a spec or None."""
+    if probes is None or probes is False:
+        return None
+    if probes is True:
+        return ProbeSpec()
+    if isinstance(probes, ProbeSpec):
+        return probes
+    raise TypeError(f"probes must be bool/None/ProbeSpec, got {probes!r}")

@@ -20,9 +20,9 @@ from __future__ import annotations
 import contextlib
 from typing import Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+from jax import tree_util as _tree_util
 
 try:
     from jax.profiler import TraceAnnotation as _TraceAnnotation
@@ -37,9 +37,16 @@ def annotate(name: str):
     return _TraceAnnotation(name)
 
 
+def _itemsize(dtype) -> int:
+    # np.dtype resolves numpy names AND ml_dtypes extension types
+    # (bfloat16) without pulling jax.numpy into this host-only module
+    # (scripts/lint_serving.py: only obs/probes.py may touch JAX ops)
+    return int(np.dtype(dtype).itemsize)
+
+
 def _pytree_bytes(tree) -> int:
-    return int(sum(np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
-                   for x in jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(x.shape) * _itemsize(x.dtype)
+                   for x in _tree_util.tree_leaves(tree)
                    if hasattr(x, "shape")))
 
 
@@ -53,7 +60,7 @@ def modeled_hbm_table(engine) -> List[Dict]:
     """
     R = engine.slots * engine._rps
     C = engine._tile_c
-    item = jnp.dtype(engine.dtype).itemsize
+    item = _itemsize(engine.dtype)
     state = R * C * item
     B = engine.slots
     variant = engine.tick_variant
@@ -92,6 +99,21 @@ def modeled_hbm_table(engine) -> List[Dict]:
     if engine.preview:
         rows.append({"component": "x0_preview", "bytes": R * C * item,
                      "note": "predicted-x0 second output"})
+    spec = getattr(engine, "probe_spec", None)
+    if spec is not None:
+        from repro.obs.schema import PROBE_COLUMNS
+        rows.append({"component": "probe_frame",
+                     "bytes": B * len(PROBE_COLUMNS) * 4,
+                     "note": f"({B}, {len(PROBE_COLUMNS)}) fp32 per-slot "
+                             "probe reductions out (device->host once "
+                             "per tick)"})
+        if getattr(engine, "_probe_prev", None) is not None:
+            rows.append({"component": "probe_prev_eps",
+                         "bytes": 2 * R * C * 4,
+                         "note": "fp32 previous-eps carry for the defect "
+                                 "proxy, read + write (order-1 engines "
+                                 "only; multistep reuses the AB history "
+                                 "row already counted above)"})
     known = sum(r["bytes"] for r in rows if r["bytes"] is not None)
     unknown = sum(1 for r in rows if r["bytes"] is None)
     rows.append({"component": "total", "bytes": known,

@@ -1,4 +1,4 @@
-"""Documented stats() schemas — the exporter contract.
+"""Documented stats() / probe-frame schemas — the exporter contract.
 
 ``ContinuousBatchingEngine.stats()``, ``SlotPool.stats()`` and
 ``PoolFleet.stats()`` are registry-backed views whose KEY SETS are frozen
@@ -6,6 +6,13 @@ here and documented in docs/observability.md. Exporters (the Prometheus
 snapshot, the console dashboard, the serve CLI summary) key on these
 names, so adding a key means updating this module + the doc table, and
 removing/renaming one is a breaking change tests/test_obs.py will flag.
+
+The PROBE/FLIGHT schemas freeze the device-probe tier (obs/probes.py,
+obs/flight.py): the per-tick probe frame is a (slots, len(PROBE_COLUMNS))
+float32 matrix whose column ORDER is part of the contract (flight
+postmortems, the chaos attribution gate, and the dashboard's quality
+columns all index into it), and every flight-recorder JSONL record is
+keyed by these exact field names.
 """
 from __future__ import annotations
 
@@ -18,7 +25,31 @@ ENGINE_STATS_KEYS = frozenset({
     "tick_wall_s", "tick_ewma_s", "steps_per_s", "compiled_ticks",
     "plan_bank", "bank_selected",
     "stochastic", "preview", "max_order", "mega_tick", "dtype", "donated",
+    "probes", "probe_frames", "probe_defect_max", "probe_finite_min",
 })
+
+# device-probe frame columns, IN ORDER (obs/probes.py fills them; a probe
+# disabled in the engine's ProbeSpec reports NaN in its columns so the
+# frame shape never depends on the spec):
+#   eps_rms      per-slot RMS of the current eps evaluation (live elements)
+#   x0_min/max/mean   range stats of the Eq. 12 predicted x0
+#   finite_frac  fraction of the post-step state that is finite
+#   defect       one-eval step-doubling defect proxy: RMS drift of eps
+#                since the previous tick's evaluation (NaN at a slot's
+#                first step — there is no previous eval yet)
+PROBE_COLUMNS = ("eps_rms", "x0_min", "x0_max", "x0_mean",
+                 "finite_frac", "defect")
+
+# flight-recorder JSONL records (obs/flight.py): one header line, then
+# one line per buffered probe frame, oldest first
+FLIGHT_HEADER_KEYS = frozenset({
+    "record", "version", "reason", "pool", "wall_time", "frames",
+    "columns", "attribution", "context",
+})
+FLIGHT_FRAME_KEYS = frozenset({
+    "record", "tick", "now", "pool", "slots", "values",
+})
+FLIGHT_SCHEMA_VERSION = 1
 
 # a SlotPool's stats() is its engine's plus the lifecycle/load fields
 POOL_STATS_KEYS = ENGINE_STATS_KEYS | frozenset({

@@ -92,6 +92,7 @@ class PoolFleet:
               *, n_pools: int, slots: int, meshes: Optional[Sequence] = None,
               max_queue: Optional[int] = None,
               obs: Optional[Observability] = None,
+              flight_dir: Optional[str] = None, flight_capacity: int = 64,
               **engine_kw) -> "PoolFleet":
         """Build n_pools homogeneous pools over one model.
 
@@ -102,6 +103,10 @@ class PoolFleet:
         ``meshes`` gives pool i its mesh (None entries = unsharded).
         ``obs`` becomes the fleet's telemetry handle; each pool engine
         gets ``obs.child()`` (private registry, SHARED tracer).
+
+        With ``probes=`` in ``engine_kw`` each pool engine also gets its
+        own per-pool FlightRecorder (obs/flight.py; postmortems under
+        ``flight_dir``, in-memory only when None).
         """
         if meshes is not None and len(meshes) != n_pools:
             raise ValueError(f"got {len(meshes)} meshes for {n_pools} "
@@ -109,12 +114,18 @@ class PoolFleet:
         meshes = list(meshes) if meshes is not None else [None] * n_pools
         factory = _is_factory(eps_fn)
         obs = obs if obs is not None else Observability()
+        probed = engine_kw.get("probes") not in (None, False)
         pools = []
         for pid in range(n_pools):
             fn = eps_fn(pid, meshes[pid]) if factory else eps_fn
+            flight = None
+            if probed:
+                from repro.obs.flight import FlightRecorder
+                flight = FlightRecorder(flight_capacity, pool_id=pid,
+                                        out_dir=flight_dir)
             eng = ContinuousBatchingEngine(
                 schedule, fn, sample_shape, slots, mesh=meshes[pid],
-                pool_id=pid, obs=obs.child(), **engine_kw)
+                pool_id=pid, obs=obs.child(), flight=flight, **engine_kw)
             pools.append(SlotPool(pid, eng))
         return cls(pools, max_queue=max_queue, obs=obs)
 

@@ -182,6 +182,10 @@ class GatewayCore:
         self._c_handler_errors = reg.counter(
             "gateway_handler_errors_total",
             "event callbacks dropped after raising")
+        self._h_defect = reg.histogram(
+            "gateway_request_defect",
+            "per-request mean step-doubling defect proxy (probed pools)",
+            edges=(0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0))
 
     # ----------------------------------------------------------- plumbing
     def _sum_counter(self, name: str) -> int:
@@ -193,6 +197,33 @@ class GatewayCore:
             "gateway_rejected_total",
             "typed front-door refusals by reject code",
             code=code.value).inc()
+
+    def _dump_flight(self, pool_id: Optional[int], reason: str,
+                     **context) -> Optional[str]:
+        """Dump pool_id's flight ring (if it has one); returns the path."""
+        if pool_id is None or not 0 <= pool_id < len(self.fleet.pools):
+            return None
+        flight = getattr(self.fleet.pools[pool_id].engine, "flight", None)
+        if flight is None:
+            return None
+        path = flight.dump(reason, **context)
+        if path is not None:
+            self.obs.registry.counter(
+                "gateway_flight_dumps_total",
+                "flight-recorder postmortems dumped by the gateway",
+                reason=reason).inc()
+        return path
+
+    def flight_snapshot(self, pool_id: int) -> Optional[Dict]:
+        """In-memory flight-ring view for /v1/debug/flight/{pool}.
+
+        None when the pool doesn't exist or carries no recorder (the
+        HTTP layer maps that to a 404).
+        """
+        if not 0 <= pool_id < len(self.fleet.pools):
+            return None
+        flight = getattr(self.fleet.pools[pool_id].engine, "flight", None)
+        return flight.snapshot() if flight is not None else None
 
     def _tick_estimate(self) -> Optional[float]:
         known = [p.tick_ewma_s for p in self.fleet.pools
@@ -385,20 +416,28 @@ class GatewayCore:
             elif not np.all(np.isfinite(np.asarray(r.x0))):
                 # terminal NaN/Inf guard: a numerically exploded eps
                 # trunk must surface as a typed 5xx, never stream garbage
-                # to a client as if it were a sample
+                # to a client as if it were a sample. With the probe tier
+                # on, the serving pool's flight recorder is dumped HERE —
+                # the postmortem attributes the corruption to the exact
+                # (pool, slot, step), not just this terminal symptom.
                 self._c_nonfinite.inc()
+                flight_path = self._dump_flight(
+                    r.pool_id, "nonfinite", request_id=r.request_id)
                 code = RejectCode.NONFINITE_SAMPLE
-                self._terminal(r.request_id, {
+                event = {
                     "event": "error", "request_id": r.request_id,
                     "code": code.value,
                     "message": (f"request {r.request_id} produced a "
                                 "non-finite sample (pool "
                                 f"{r.pool_id})"),
                     "status": code.http_status,
-                })
+                }
+                if flight_path is not None:
+                    event["flight"] = flight_path
+                self._terminal(r.request_id, event)
             else:
                 self._c_results.inc()
-                self._terminal(r.request_id, {
+                event = {
                     "event": "result", "request_id": r.request_id,
                     "x0": r.x0, "S": r.S, "pool_id": r.pool_id,
                     "latency_s": r.latency_s,
@@ -406,7 +445,15 @@ class GatewayCore:
                     "service_s": r.service_s,
                     "deadline_missed": r.deadline_missed,
                     "previews": r.previews,
-                })
+                }
+                # per-request trajectory-quality summary from the device
+                # probes (engines built with probes=; None otherwise)
+                if r.quality is not None:
+                    event["quality"] = r.quality
+                    d = r.quality.get("defect_mean")
+                    if d is not None:
+                        self._h_defect.observe(d)
+                self._terminal(r.request_id, event)
             delivered += 1
         self._advance_swap(time.perf_counter() if wall else now)
         return delivered
@@ -596,7 +643,8 @@ class GatewayCore:
               obs: Optional[Observability] = None,
               warm: bool = True, supervise: bool = True,
               breaker=None, checkpoint_every: int = 8,
-              injector=None, **engine_kw) -> "GatewayCore":
+              injector=None, probes=None, flight_dir: Optional[str] = None,
+              flight_capacity: int = 64, **engine_kw) -> "GatewayCore":
         """A multi-model gateway over fresh pools.
 
         ``eps_apply(params, x, t)`` is the shared trunk; ``models`` maps
@@ -614,7 +662,16 @@ class GatewayCore:
         poisoning the bridge (docs/resilience.md). ``breaker`` tunes its
         BreakerPolicy, ``checkpoint_every`` its snapshot cadence, and
         ``injector`` threads a FaultInjector through (chaos runs only).
+
+        ``probes=`` (True / a ProbeSpec) turns on the device-probe tier
+        on every pool engine; each engine then also gets a per-pool
+        FlightRecorder (ring of ``flight_capacity`` frames, postmortems
+        written under ``flight_dir`` — in-memory only when None) feeding
+        the quarantine/nonfinite dumps, ``/v1/debug/flight/{pool}``, the
+        per-result ``quality`` metadata, and the defect histogram.
         """
+        from repro.obs.flight import FlightRecorder
+
         obs = obs if obs is not None else Observability()
         registry = ModelRegistry()
         preview = engine_kw.pop("preview", True)
@@ -623,10 +680,15 @@ class GatewayCore:
         for name in sorted(models):
             registry.register(name, models[name])
             for _ in range(pools_per_model):
+                flight = (FlightRecorder(flight_capacity, pool_id=pid,
+                                         out_dir=flight_dir)
+                          if probes is not None and probes is not False
+                          else None)
                 eng = ContinuousBatchingEngine(
                     schedule, eps_apply, sample_shape, slots,
                     eps_params=models[name], preview=preview,
-                    pool_id=pid, obs=obs.child(), **engine_kw)
+                    pool_id=pid, obs=obs.child(), probes=probes,
+                    flight=flight, **engine_kw)
                 pools.append(SlotPool(pid, eng, model=name))
                 pid += 1
         fleet = PoolFleet(pools, max_queue=max_queue, obs=obs.child())

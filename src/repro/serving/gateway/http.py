@@ -175,6 +175,27 @@ def build_app(bridge: EngineBridge) -> "web.Application":
         return web.Response(text=text,
                             content_type="text/plain", charset="utf-8")
 
+    async def flight(request: "web.Request") -> "web.Response":
+        # debug surface for the device-probe flight ring: the last N
+        # probe frames + slot->request map of one pool, straight from
+        # memory (no dump file needed). 404 distinguishes "no such pool /
+        # pool has no recorder" from an empty-but-live ring.
+        raw = request.match_info["pool"]
+        try:
+            pid = int(raw)
+        except ValueError:
+            return web.json_response(
+                {"error": "bad-pool", "message": f"pool {raw!r} is not "
+                 "an integer pool id"}, status=400)
+        snap = await bridge.acall(core.flight_snapshot, pid)
+        if snap is None:
+            return web.json_response(
+                {"error": "no-flight-recorder",
+                 "message": f"pool {pid} does not exist or has no "
+                 "flight recorder (build the gateway with probes=)"},
+                status=404)
+        return web.json_response(snap)
+
     async def healthz(request: "web.Request") -> "web.Response":
         if bridge.error is not None:
             return web.json_response(
@@ -190,6 +211,7 @@ def build_app(bridge: EngineBridge) -> "web.Application":
     app.router.add_get("/v1/models", models)
     app.router.add_post("/v1/models/{name}/rollout", rollout)
     app.router.add_get("/v1/stats", stats)
+    app.router.add_get("/v1/debug/flight/{pool}", flight)
     app.router.add_get("/metrics", metrics)
     app.router.add_get("/healthz", healthz)
     return app

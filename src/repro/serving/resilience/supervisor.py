@@ -114,6 +114,9 @@ class PoolSupervisor:
         self._c_closes = reg.counter(
             "supervisor_breaker_closes_total",
             "breakers closed after a successful probe")
+        self._c_flight_dumps = reg.counter(
+            "supervisor_flight_dumps_total",
+            "flight-recorder postmortems dumped on quarantine")
 
     # ------------------------------------------------------------- breaker
     def breaker(self, pool_id: int) -> _Breaker:
@@ -143,6 +146,15 @@ class PoolSupervisor:
         br.last_error = repr(exc)
         pool.health = max(pool.health * self.policy.health_decay, 1e-3)
         self._c_quarantines.inc()
+        # postmortem FIRST, while the ring still maps slots to the
+        # residents being evicted below (obs/flight.py): the dump names
+        # the (pool, slot, step) the recorded probe frames incriminate
+        flight = getattr(pool.engine, "flight", None)
+        if flight is not None:
+            path = flight.dump("quarantine", error=repr(exc),
+                               trips=br.trips, pump=self._pumps)
+            if path is not None:
+                self._c_flight_dumps.inc()
         pending = pool.quarantine()
         for r in pending:
             self._c_requeued.inc()
@@ -261,6 +273,7 @@ class PoolSupervisor:
             "restarted": int(self._c_restarted.value),
             "probes": int(self._c_probes.value),
             "breaker_closes": int(self._c_closes.value),
+            "flight_dumps": int(self._c_flight_dumps.value),
             "checkpoints_taken": self.checkpoints.taken,
             "checkpoints_held": len(self.checkpoints),
             "injected_faults": (self.injector.fired()

@@ -75,6 +75,15 @@ class _Slot:
     admit_t: float
     previews: int = 0
     headroom_s: Optional[float] = None   # deadline - admit time (if any)
+    # probe-quality accumulators (filled per tick by the device-probe
+    # frame path when probes are on; summarized into SampleResult.quality
+    # at retirement — see obs/probes.py for column semantics)
+    q_frames: int = 0
+    q_eps_rms: Optional[float] = None    # last tick's eps RMS
+    q_finite_min: Optional[float] = None
+    q_defect_max: Optional[float] = None
+    q_defect_sum: float = 0.0
+    q_defect_n: int = 0
 
 
 class ContinuousBatchingEngine:
@@ -170,6 +179,19 @@ class ContinuousBatchingEngine:
         one-compiled-tick and bit-identity guarantees are unaffected
         (tests/test_obs.py). None builds a private, sink-less handle:
         metrics only, near-zero cost.
+      probes: the opt-in DEVICE-side probe tier (obs/probes.py): None
+        (default) compiles nothing extra; True / a frozen ProbeSpec
+        compiles ONE additional tick variant with per-slot numerics
+        reductions fused in (eps RMS, x0 range stats, finite fraction,
+        the one-eval step-doubling defect proxy), landing as a (slots, 6)
+        float32 frame per tick. The plain tick program is untouched, so
+        probes-off stays bit-identical to a probe-less engine, and
+        ``set_probes`` switches between the two compiled programs without
+        retracing (<= 2 traces total). Unavailable with use_mega.
+      flight: an optional ``obs.flight.FlightRecorder`` — the engine
+        pushes every probe frame (+ the slot->request map) into its ring
+        so the resilience layer can dump a postmortem on quarantine or a
+        nonfinite terminal (docs/resilience.md).
     """
 
     def __init__(self, schedule: NoiseSchedule, eps_fn: Callable,
@@ -185,8 +207,10 @@ class ContinuousBatchingEngine:
                  plan_bank=None, select_margin: float = 0.9,
                  tick_ewma_alpha: float = 0.2,
                  mesh=None, pool_id: Optional[int] = None,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 probes=None, flight=None):
         from repro.kernels.sampler_step import ops as tile_ops
+        from repro.obs.probes import normalize_probes
 
         if not 1 <= max_order <= MAX_ORDER:
             raise ValueError(f"max_order must be in 1..{MAX_ORDER}, got "
@@ -227,6 +251,21 @@ class ContinuousBatchingEngine:
         self.use_mega = self._resolve_mega(use_mega)
         self.tick_variant = ("mega" if self.use_mega else
                              "multistep" if self.max_order > 1 else "rows")
+        # device-probe tier (obs/probes.py): a STATIC spec selecting the
+        # per-slot reductions fused into a SECOND compiled tick variant;
+        # probes_on switches between the two already-compiled programs at
+        # runtime (<= 2 traces total, never a retrace). ``flight`` is an
+        # optional obs.flight.FlightRecorder fed one frame per probed tick.
+        self.probe_spec = normalize_probes(probes)
+        if self.probe_spec is not None and self.use_mega:
+            raise ValueError(
+                "probes are unavailable on the mega tick variant: the eps "
+                "evaluation never leaves the fused megastep kernel, so the "
+                "device probes have nothing to reduce — build the engine "
+                "with use_mega=False to probe it")
+        self.probes_on = self.probe_spec is not None
+        self.flight = flight
+        self.last_frame: Optional[Dict] = None
         # telemetry (repro.obs): registry instruments back every counter
         # stats() reports. Host-side int/numpy state only — attaching
         # telemetry can never add a JAX op to the tick program.
@@ -267,6 +306,17 @@ class ContinuousBatchingEngine:
             "accumulated wall time inside the jitted tick")
         self._g_active = reg.gauge(
             "engine_active_slots", "resident requests after the last tick")
+        self._c_frames = reg.counter(
+            "engine_probe_frames_total",
+            "device probe frames transferred to the host")
+        self._g_defect = reg.gauge(
+            "engine_probe_defect_max",
+            "max per-slot step-doubling defect proxy, last probed tick")
+        self._g_finite = reg.gauge(
+            "engine_probe_finite_frac_min",
+            "min per-slot finite fraction, last probed tick")
+        self._last_defect_max: Optional[float] = None
+        self._last_finite_min: Optional[float] = None
         self._g_ewma = reg.gauge(
             "engine_tick_ewma_seconds",
             "EWMA per-tick latency (compile ticks excluded)")
@@ -330,7 +380,19 @@ class ContinuousBatchingEngine:
                               sqrt_a_t=1.0,
                               sqrt_1m_a_t=1.0 if clip_x0 is not None
                               else 0.0)
+        # probe-only previous-eps buffer for the defect proxy on order-1
+        # engines (multistep engines read the pre-update newest history
+        # row for free; see obs/probes.py on the one-eval proxy)
+        self._probe_prev = None
+        if (self.probe_spec is not None and self.probe_spec.defect
+                and self.max_order == 1):
+            self._probe_prev = jnp.zeros(self._x2.shape, jnp.float32)
+            if mesh is not None:
+                self._probe_prev = jax.device_put(self._probe_prev,
+                                                  self._state_sharding)
         self._tick_fn = self._make_tick()
+        self._tick_probed = (self._make_tick_probed()
+                             if self.probe_spec is not None else None)
         self._write_fn = self._make_write()
         self._hist_write_fn = (self._make_hist_write()
                                if self._hist2 is not None else None)
@@ -530,6 +592,105 @@ class ContinuousBatchingEngine:
 
         kw = dict(donate_argnums=(0, 1)) if self.donate else {}
         return jax.jit(tick, **kw)
+
+    def _make_tick_probed(self):
+        """The SECOND compiled tick: identical step math + fused probes.
+
+        The plain tick program above is byte-identical to a probe-less
+        engine's (probes-off output is bit-identical by construction);
+        this variant additionally asks the slot-tile step for the raw eps
+        evaluation and folds it — with the pre/post-step state — into a
+        (slots, 6) float32 probe frame on device (obs/probes.py). Order-1
+        engines with the defect probe carry the previous eps evaluation
+        as an explicit donated argument/output; multistep engines read it
+        for free from the pre-update newest history row. Both variants
+        trace exactly once, so an engine toggling probes compiles at most
+        2 tick programs (tests/test_probes.py pins the count).
+        """
+        from repro.obs.probes import device_frame
+        shape, spec = self.shape, self.probe_spec
+        rps, n = self._rps, self._n
+
+        if self.max_order == 1:
+            if self._probe_prev is not None:
+                def tick(x2, prev, states, params=None):
+                    self._traces += 1   # host side effect: once per trace
+                    self._c_compiled.inc()
+                    out, eps2 = slot_tile_step(
+                        self._bind_eps(params), x2, states, shape,
+                        clip_x0=self.clip_x0, stochastic=self.stochastic,
+                        want_x0=self.preview, want_eps=True,
+                        hw_prng=self.hw_prng, interpret=self.interpret)
+                    x_new = out[0] if self.preview else out
+                    frame = device_frame(spec, x2, x_new, eps2, prev,
+                                         states, rps=rps, n_live=n)
+                    if self.preview:
+                        out = (self._constrain(out[0]),
+                               self._constrain(out[1]))
+                    else:
+                        out = self._constrain(out)
+                    new_prev = self._constrain(eps2.astype(jnp.float32))
+                    return out, frame, new_prev
+
+                kw = dict(donate_argnums=(0, 1)) if self.donate else {}
+                return jax.jit(tick, **kw)
+
+            def tick(x2, states, params=None):
+                self._traces += 1       # host side effect: once per trace
+                self._c_compiled.inc()
+                out, eps2 = slot_tile_step(
+                    self._bind_eps(params), x2, states, shape,
+                    clip_x0=self.clip_x0, stochastic=self.stochastic,
+                    want_x0=self.preview, want_eps=True,
+                    hw_prng=self.hw_prng, interpret=self.interpret)
+                x_new = out[0] if self.preview else out
+                frame = device_frame(spec, x2, x_new, eps2, None, states,
+                                     rps=rps, n_live=n)
+                if self.preview:
+                    out = (self._constrain(out[0]), self._constrain(out[1]))
+                else:
+                    out = self._constrain(out)
+                return out, frame
+
+            kw = dict(donate_argnums=(0,)) if self.donate else {}
+            return jax.jit(tick, **kw)
+
+        def tick(x2, hist2, states, params=None):
+            self._traces += 1           # host side effect: once per trace
+            self._c_compiled.inc()
+            out, new_hist2, eps2 = slot_tile_step(
+                self._bind_eps(params), x2, states, shape, hist2=hist2,
+                clip_x0=self.clip_x0, stochastic=self.stochastic,
+                want_x0=self.preview, want_eps=True,
+                hw_prng=self.hw_prng, interpret=self.interpret)
+            x_new = out[0] if self.preview else out
+            # hist2 is the PRE-update stack: row 0 is the previous tick's
+            # raw eval — exactly the defect proxy's reference, for free
+            eps_prev = hist2[0] if spec.defect else None
+            frame = device_frame(spec, x2, x_new, eps2, eps_prev, states,
+                                 rps=rps, n_live=n)
+            if self.preview:
+                out = (self._constrain(out[0]), self._constrain(out[1]))
+            else:
+                out = self._constrain(out)
+            return out, self._constrain_hist(new_hist2), frame
+
+        kw = dict(donate_argnums=(0, 1)) if self.donate else {}
+        return jax.jit(tick, **kw)
+
+    def set_probes(self, on: bool) -> None:
+        """Toggle which ALREADY-COMPILED tick variant runs (no retrace).
+
+        Only meaningful on an engine built with ``probes=``: the probed
+        program is compiled against the construction-frozen ProbeSpec,
+        not synthesized on demand, so enabling probes on a spec-less
+        engine raises instead of silently retracing.
+        """
+        if on and self.probe_spec is None:
+            raise RuntimeError(
+                "engine was built without probes= — the probed tick is a "
+                "construction-time compiled variant, not a runtime add-on")
+        self.probes_on = bool(on)
 
     def _make_write(self):
         def write(x2, xT2, row0):
@@ -927,6 +1088,76 @@ class ContinuousBatchingEngine:
                 if req.trace is not None:
                     req.trace.emit("preview", now, k=done)
 
+    # -------------------------------------------------- device-probe host
+    def _record_frame(self, vals: np.ndarray, now: float) -> None:
+        """Host side of the probe path (one tiny frame per probed tick).
+
+        Folds the (slots, 6) float32 matrix into per-slot quality
+        accumulators (summarized into SampleResult.quality at retire),
+        the probe gauges, ``last_frame``, and the flight recorder's ring.
+        The defect column needs a previous eps evaluation from the SAME
+        request — at k == 0 the buffer/history row still holds a
+        predecessor's (or zero) eval, so the first step's value is
+        discarded here rather than cleared on device.
+        """
+        from repro.obs.schema import PROBE_COLUMNS
+        i_eps = PROBE_COLUMNS.index("eps_rms")
+        i_fin = PROBE_COLUMNS.index("finite_frac")
+        i_def = PROBE_COLUMNS.index("defect")
+        spec = self.probe_spec
+        self._c_frames.inc()
+        slot_map: List[Optional[Dict]] = []
+        defect_max = finite_min = None
+        for b, slot in enumerate(self._slots):
+            if slot is None:
+                slot_map.append(None)
+                continue
+            slot_map.append({"slot": b, "request_id": slot.req.request_id,
+                             "k": slot.k})
+            row = vals[b]
+            slot.q_frames += 1
+            if spec.eps_norm and math.isfinite(row[i_eps]):
+                slot.q_eps_rms = float(row[i_eps])
+            if spec.finite and math.isfinite(row[i_fin]):
+                f = float(row[i_fin])
+                slot.q_finite_min = (f if slot.q_finite_min is None
+                                     else min(slot.q_finite_min, f))
+                finite_min = (f if finite_min is None
+                              else min(finite_min, f))
+            if spec.defect and slot.k >= 1 and math.isfinite(row[i_def]):
+                d = float(row[i_def])
+                slot.q_defect_sum += d
+                slot.q_defect_n += 1
+                slot.q_defect_max = (d if slot.q_defect_max is None
+                                     else max(slot.q_defect_max, d))
+                defect_max = (d if defect_max is None
+                              else max(defect_max, d))
+        if defect_max is not None:
+            self._last_defect_max = defect_max
+            self._g_defect.set(defect_max)
+        if finite_min is not None:
+            self._last_finite_min = finite_min
+            self._g_finite.set(finite_min)
+        frame = {"tick": self.ticks, "now": now, "pool": self.pool_id,
+                 "slots": slot_map, "values": vals.tolist()}
+        self.last_frame = frame
+        if self.flight is not None:
+            self.flight.record(frame)
+
+    @staticmethod
+    def _slot_quality(slot: _Slot) -> Optional[Dict]:
+        """Per-request probe summary attached to SampleResult.quality."""
+        if slot.q_frames == 0:
+            return None
+        return {
+            "frames": slot.q_frames,
+            "eps_rms_last": slot.q_eps_rms,
+            "finite_frac_min": slot.q_finite_min,
+            "defect_max": slot.q_defect_max,
+            "defect_mean": (slot.q_defect_sum / slot.q_defect_n
+                            if slot.q_defect_n else None),
+        }
+
     # ----------------------------------------------------------- the loop
     def tick(self, now: Optional[float] = None) -> List[SampleResult]:
         """One engine tick: admit, advance every resident slot, retire.
@@ -943,10 +1174,24 @@ class ContinuousBatchingEngine:
             return results
         states = self._states()
         traces0 = self._traces
+        frame_dev = None
+        probed = self.probes_on and self._tick_probed is not None
         t0 = time.perf_counter()
         with (annotate(f"repro/tick/{self.tick_variant}")
               if self.obs.profile else contextlib.nullcontext()):
-            if self.max_order == 1:
+            if probed:
+                p = (() if self.eps_params is None else (self.eps_params,))
+                if self.max_order == 1:
+                    if self._probe_prev is not None:
+                        out, frame_dev, self._probe_prev = self._tick_probed(
+                            self._x2, self._probe_prev, states, *p)
+                    else:
+                        out, frame_dev = self._tick_probed(
+                            self._x2, states, *p)
+                else:
+                    out, self._hist2, frame_dev = self._tick_probed(
+                        self._x2, self._hist2, states, *p)
+            elif self.max_order == 1:
                 out = (self._tick_fn(self._x2, states)
                        if self.eps_params is None
                        else self._tick_fn(self._x2, states,
@@ -980,6 +1225,10 @@ class ContinuousBatchingEngine:
             now = t1
         self._c_ticks.inc()
         self._c_slot_steps.inc(self.active)
+        if frame_dev is not None:
+            # before the retire loop: every occupied slot's recorded k is
+            # the step index this frame measured (k increments below)
+            self._record_frame(np.asarray(frame_dev), now)
         if x0_2 is not None:
             self._deliver_previews(x0_2, now)
         for b, slot in enumerate(self._slots):
@@ -997,7 +1246,8 @@ class ContinuousBatchingEngine:
                     admit_t=slot.admit_t, finish_t=now,
                     previews=slot.previews, deadline_missed=missed,
                     deadline_headroom_s=slot.headroom_s,
-                    auto_plan=req.auto_plan, pool_id=self.pool_id))
+                    auto_plan=req.auto_plan, pool_id=self.pool_id,
+                    quality=self._slot_quality(slot)))
                 self._c_completed.inc()
                 if missed:
                     self._c_miss.inc()
@@ -1097,4 +1347,10 @@ class ContinuousBatchingEngine:
             "mega_tick": self.use_mega,
             "dtype": jnp.dtype(self.dtype).name,
             "donated": self.donate,
+            "probes": (None if self.probe_spec is None
+                       else (self.probe_spec.describe() if self.probes_on
+                             else "off")),
+            "probe_frames": int(self._c_frames.value),
+            "probe_defect_max": self._last_defect_max,
+            "probe_finite_min": self._last_finite_min,
         }

@@ -16,7 +16,7 @@ with — wall time by default, a virtual clock in trace-replay benchmarks).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -167,6 +167,10 @@ class SampleResult:
     pool_id: Optional[int] = None      # which slot pool served it (fleet);
     #                                     None = single engine, or dropped
     #                                     at the fleet tier before routing
+    # per-request device-probe summary (None unless the serving engine
+    # ran with probes on): frames / eps_rms_last / finite_frac_min /
+    # defect_max / defect_mean — see obs/probes.py for column semantics
+    quality: Optional[Dict] = None
 
     @classmethod
     def drop(cls, req: SampleRequest, now: float, *, missed: bool = True,

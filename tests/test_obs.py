@@ -437,6 +437,43 @@ def test_dashboard_and_summary_render():
     assert "n/a" in render_summary(empty)
 
 
+def test_summary_tolerates_untimed_and_dropped_only_results():
+    """Postmortem hardening: warm-up results with no submit stamp drop
+    out of the percentile population (not the completion counts), a
+    drop-only replay summarizes with n/a percentiles, and a partial
+    summary dict still renders."""
+    import types
+    timed = types.SimpleNamespace(
+        dropped=False, submit_t=0.0, latency_s=0.5, deadline_missed=False,
+        queue_wait_s=0.1, service_s=0.4, quality=None)
+    untimed = types.SimpleNamespace(
+        dropped=False, submit_t=None, latency_s=None,
+        deadline_missed=False, queue_wait_s=None, service_s=None,
+        quality={"defect_mean": 0.25})
+    s = summarize_results([timed, untimed])
+    assert s["completed"] == 2                    # both count as done...
+    assert s["p50_latency_s"] == pytest.approx(0.5)   # ...one is timed
+    assert s["defect_mean"] == pytest.approx(0.25)
+    dropped = types.SimpleNamespace(
+        dropped=True, submit_t=0.0, latency_s=None, deadline_missed=True,
+        queue_wait_s=None, service_s=None, quality=None)
+    d = summarize_results([dropped])
+    assert d["completed"] == 0 and d["dropped"] == 1
+    assert d["p99_latency_s"] is None and d["defect_mean"] is None
+    assert "n/a" in render_summary(d)
+    assert "=== replay summary ===" in render_summary({})  # partial dict
+
+
+def test_dashboard_renders_probe_quality_columns():
+    eng = _engine(probes=True)
+    _run_virtual(eng, _reqs(3))
+    dash = render_dashboard(eng.stats())
+    assert "defect" in dash and "fin" in dash
+    assert "1.00" in dash            # probe_finite_min on healthy traffic
+    # a probe-less stats dict renders the same table with n/a cells
+    assert "n/a" in render_dashboard(_engine().stats())
+
+
 def test_modeled_hbm_table_and_annotate():
     eng = _engine()
     rows = modeled_hbm_table(eng)
